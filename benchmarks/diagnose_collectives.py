@@ -1,0 +1,87 @@
+"""Attribute collective traffic to model ops via HLO metadata.
+
+    PYTHONPATH=src python benchmarks/diagnose_collectives.py \
+        --arch h2o-danube-1.8b --shape train_4k [--multipod]
+
+Prints per-op_name collective bytes (trip-count adjusted, per device) —
+the §Perf loop's profiler.
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import re
+from collections import defaultdict
+
+import numpy as np
+
+import jax
+
+from repro import roofline as RL
+from repro.launch import dryrun as DR
+from repro.launch import mesh as meshmod
+
+_META_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def attribute(hlo_text, top=25):
+    comps, entry = RL._parse_computations(hlo_text)
+    trip_of = {}
+    for name, lines in comps.items():
+        for s in lines:
+            wm = RL._WHILE_RE.search(s)
+            if wm:
+                tm = RL._TRIP_RE.search(s)
+                trip_of[wm.group(2)] = int(tm.group(1)) if tm else 1
+
+    # propagate nesting: body inside body
+    def full_trip(name, seen=frozenset()):
+        t = trip_of.get(name, 1)
+        return t
+
+    agg = defaultdict(float)
+    cnt = defaultdict(int)
+    for name, lines in comps.items():
+        mult = trip_of.get(name, 1)
+        for s in lines:
+            for kind in RL._COLLECTIVES:
+                if f" {kind}(" in s or f" {kind}-start(" in s:
+                    eq = s.find(" = ")
+                    op_pos = s.find(f" {kind}")
+                    if eq < 0:
+                        continue
+                    b = RL._shape_bytes(s[eq + 3: op_pos])
+                    m = _META_RE.search(s)
+                    op = m.group(1) if m else "?"
+                    # shorten: keep the jax-level op path tail
+                    op = "/".join(op.split("/")[-4:])
+                    agg[f"{kind} :: {op}"] += b * mult
+                    cnt[f"{kind} :: {op}"] += mult
+                    break
+    rows = sorted(agg.items(), key=lambda kv: -kv[1])[:top]
+    total = sum(agg.values())
+    print(f"total per-device collective bytes: {total/1e9:.2f} GB")
+    for k, v in rows:
+        print(f"  {v/1e9:9.3f} GB  x{cnt[k]:<6d} {k}")
+    return total
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    args = ap.parse_args()
+
+    mesh = meshmod.make_production_mesh(multi_pod=args.multipod)
+    fn, fargs, shardings, _ = DR.build_cell(
+        args.arch, args.shape, mesh, remat=not args.no_remat)
+    with mesh:
+        compiled = jax.jit(fn, in_shardings=shardings).lower(*fargs).compile()
+    attribute(compiled.as_text())
+
+
+if __name__ == "__main__":
+    main()

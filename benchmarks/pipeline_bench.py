@@ -1,0 +1,41 @@
+"""End-to-end ingest benchmark: raw UTF-8 bytes -> validated token batch.
+
+Measures the paper's system-level claim in situ: the transcode/validate
+stage of the training input pipeline must not bottleneck ingest.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import transcode as tc
+from repro.data import synthetic
+from repro.data.tokenizer import ByteTokenizer
+
+
+def ingest_bench(langs=("latin", "arabic", "chinese"), n_chars=1 << 15,
+                 reps=8):
+    tok = ByteTokenizer()
+
+    @jax.jit
+    def ingest(raw, n):
+        ok = tc.validate_utf8(raw, n)
+        return tok.encode(raw), ok
+
+    rows = []
+    for lang in langs:
+        b = jnp.asarray(synthetic.utf8_array(lang, n_chars, 0).astype(np.int32))
+        jax.block_until_ready(ingest(b, len(b)))
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(ingest(b, len(b)))
+            best = min(best, time.perf_counter() - t0)
+        rows.append({"lang": lang, "MB_per_s": len(b) / best / 1e6,
+                     "gchars_per_s": n_chars / best / 1e9})
+    return rows

@@ -1,0 +1,73 @@
+"""Render the dry-run sweep results as the EXPERIMENTS.md roofline table.
+
+    python benchmarks/report_roofline.py [--mesh 16x16] [--md]
+"""
+
+import glob
+import json
+import os
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+OUT = os.path.join(HERE, "results", "dryrun")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load():
+    recs = []
+    for f in sorted(glob.glob(os.path.join(OUT, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def fmt(x, unit=""):
+    if x is None:
+        return "-"
+    if x == 0:
+        return "0"
+    for scale, suf in [(1e12, "T"), (1e9, "G"), (1e6, "M"), (1e3, "k")]:
+        if abs(x) >= scale:
+            return f"{x/scale:.2f}{suf}{unit}"
+    return f"{x:.3g}{unit}"
+
+
+def main():
+    global OUT
+    mesh = "16x16"
+    for i, a in enumerate(sys.argv):
+        if a == "--mesh":
+            mesh = sys.argv[i + 1]
+        if a == "--dir":
+            OUT = sys.argv[i + 1]
+    recs = [r for r in load() if r.get("mesh") == mesh or r.get("skipped")]
+    seen = set()
+    print(f"| arch | shape | FLOPs | bytes | coll B | t_comp | t_mem | "
+          f"t_coll | bound | useful |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    order = {}
+    for r in recs:
+        key = (r["arch"], r["shape"])
+        if key in seen:
+            continue
+        seen.add(key)
+        order.setdefault(r["arch"], {})[r["shape"]] = r
+    for arch in order:
+        for shape in SHAPE_ORDER:
+            r = order[arch].get(shape)
+            if r is None:
+                continue
+            if r.get("skipped"):
+                print(f"| {arch} | {shape} | SKIP | | | | | | "
+                      f"{r['reason']} | |")
+                continue
+            print(f"| {arch} | {shape} | {fmt(r['hlo_flops'])} | "
+                  f"{fmt(r['hlo_bytes'])} | {fmt(r['coll_bytes'])} | "
+                  f"{r['t_compute_s']:.3f}s | {r['t_memory_s']:.3f}s | "
+                  f"{r['t_collective_s']:.3f}s | {r['bottleneck']} | "
+                  f"{r['useful_ratio'] and round(r['useful_ratio'], 2)} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Benchmark aggregator: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Runs every paper-table analogue (Tables 5/6/9, Table 8 proxy, Fig. 7)
+plus the ingest-pipeline microbench, printing CSV blocks.  Pass --quick
+for a reduced sweep (CI).
+"""
+
+import sys
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    from benchmarks import transcode_bench as tb
+
+    langs = ["arabic", "chinese", "emoji", "latin"] if quick \
+        else tb.LIPSUM_LANGS
+    n = 1 << 13 if quick else tb.N_CHARS
+
+    tb.print_rows("Table 5: non-validating UTF-8 -> UTF-16 (Gchars/s)",
+                  tb.table5(langs, n))
+    tb.print_rows("Table 6: validating UTF-8 -> UTF-16 (Gchars/s)",
+                  tb.table6(langs, n, with_scalar=not quick))
+    tb.print_rows("Table 9: validating UTF-16 -> UTF-8 (Gchars/s)",
+                  tb.table9(langs, n))
+    tb.print_rows("Table 8 proxy: ops per input byte",
+                  tb.table8_proxy())
+    tb.print_rows("Fig 7: input-size sweep (arabic)",
+                  tb.fig7(sizes=(64, 1024, 16384) if quick
+                          else (64, 256, 1024, 4096, 16384, 65536)))
+
+    from benchmarks import pipeline_bench as pb
+    tb.print_rows("Pipeline: device ingest throughput", pb.ingest_bench(
+        n_chars=1 << 12 if quick else 1 << 15))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Sequential driver for the full dry-run sweep (40 cells x 2 meshes).
+
+Each cell runs in a fresh subprocess (jax device-count isolation + crash
+isolation); results accumulate in benchmarks/results/dryrun/*.json so the
+sweep is restartable (existing results are skipped unless --force).
+"""
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(HERE)
+OUT = os.path.join(HERE, "results", "dryrun")
+
+
+def cell_list():
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro import configs as cfgmod
+    from repro.configs import shapes as shp
+    archs = [a for a in cfgmod.ARCH_IDS if a != "bytelm-100m"]
+    return shp.cells(archs)
+
+
+def main():
+    force = "--force" in sys.argv
+    opt = "--opt" in sys.argv
+    out_dir = OUT + ("_opt" if opt else "")
+    os.makedirs(out_dir, exist_ok=True)
+    cells = cell_list()
+    todo = []
+    for arch, shape, runnable, reason in cells:
+        for mp in (False, True):
+            mesh = "2x16x16" if mp else "16x16"
+            fname = os.path.join(out_dir, f"{arch}__{shape}__{mesh}.json")
+            if not runnable:
+                with open(fname, "w") as f:
+                    json.dump({"arch": arch, "shape": shape, "mesh": mesh,
+                               "ok": True, "skipped": True,
+                               "reason": reason}, f, indent=1)
+                continue
+            if os.path.exists(fname) and not force:
+                with open(fname) as f:
+                    if json.load(f).get("ok"):
+                        continue
+            todo.append((arch, shape, mp, fname))
+
+    print(f"{len(todo)} cells to run", flush=True)
+    for i, (arch, shape, mp, fname) in enumerate(todo):
+        t0 = time.time()
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--out", fname]
+        if mp:
+            cmd.append("--multipod")
+        if opt:
+            cmd.append("--opt")
+        env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+        r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                           timeout=3000)
+        # dryrun --out writes a list; normalize to a single record
+        try:
+            with open(fname) as f:
+                recs = json.load(f)
+            if isinstance(recs, list):
+                with open(fname, "w") as f:
+                    json.dump(recs[0], f, indent=1)
+            ok = recs[0]["ok"] if isinstance(recs, list) else recs["ok"]
+        except Exception:
+            ok = False
+            with open(fname, "w") as f:
+                json.dump({"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "ok": False,
+                           "error": r.stderr[-2000:]}, f, indent=1)
+        print(f"[{i+1}/{len(todo)}] {arch} x {shape} x "
+              f"{'2x16x16' if mp else '16x16'}: "
+              f"{'OK' if ok else 'FAIL'} ({time.time()-t0:.0f}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,166 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Methodology mirrors the paper §6.1: in-memory single-thread conversions,
+repeated N times, minimum timing reported (after jit warmup), speeds in
+**gigacharacters per second** (format-oblivious, §6.1).
+
+CPU caveat: this container benchmarks the *algorithms* under XLA:CPU —
+absolute numbers are not TPU numbers (the dry-run roofline covers the
+TPU story); the *relative* ordering (vectorized vs scalar, fast paths vs
+general) reproduces the paper's findings.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baseline, transcode as tc
+from repro.data import synthetic
+
+LIPSUM_LANGS = ["arabic", "chinese", "emoji", "hebrew", "hindi",
+                "japanese", "korean", "latin", "russian"]
+N_CHARS = 1 << 15          # 32k characters per document (paper: 64-102KB)
+REPS = 12
+
+
+def _time_min(fn, reps=REPS):
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _gcps(n_chars, secs):
+    return n_chars / secs / 1e9
+
+
+def _prep(lang, n=N_CHARS, seed=0):
+    b = synthetic.utf8_array(lang, n, seed).astype(np.int32)
+    u = synthetic.utf16_units(lang, n, seed).astype(np.int32)
+    return jnp.asarray(b), jnp.asarray(u), len(b), len(u), n
+
+
+# ---------------------------------------------------------------------------
+
+
+def table5(langs=LIPSUM_LANGS, n_chars=N_CHARS):
+    """Non-validating UTF-8 -> UTF-16 (paper Table 5)."""
+    rows = []
+    for lang in langs:
+        b, _, nb, _, nch = _prep(lang, n_chars)
+        fns = {
+            "blockparallel": jax.jit(lambda x: tc.utf8_to_utf16(
+                x, None, validate=False)),
+            "windowed(paper)": jax.jit(lambda x: tc.transcode_utf8_to_utf16(
+                x, None, strategy="windowed", validate=False)),
+        }
+        row = {"lang": lang}
+        for name, f in fns.items():
+            jax.block_until_ready(f(b))  # warmup/compile
+            t = _time_min(lambda f=f: jax.block_until_ready(f(b)))
+            row[name] = _gcps(nch, t)
+        rows.append(row)
+    return rows
+
+
+def table6(langs=LIPSUM_LANGS, n_chars=N_CHARS, with_scalar=True):
+    """Validating UTF-8 -> UTF-16 (paper Table 6 / Fig. 5)."""
+    rows = []
+    for lang in langs:
+        b, _, nb, _, nch = _prep(lang, n_chars)
+        raw = bytes(np.asarray(b, np.uint8))
+        fns = {
+            "blockparallel": jax.jit(lambda x: tc.utf8_to_utf16(
+                x, None, validate=True)),
+            "windowed(paper)": jax.jit(lambda x: tc.transcode_utf8_to_utf16(
+                x, None, strategy="windowed", validate=True)),
+        }
+        row = {"lang": lang}
+        for name, f in fns.items():
+            jax.block_until_ready(f(b))
+            t = _time_min(lambda f=f: jax.block_until_ready(f(b)))
+            row[name] = _gcps(nch, t)
+        row["codecs(ICU-standin)"] = _gcps(nch, _time_min(
+            lambda: baseline.python_codecs_utf8_to_utf16(raw)))
+        if with_scalar:
+            nb8 = np.asarray(b, np.uint8)[: 4096]  # scalar DFA is slow
+            nch8 = int(((nb8 & 0xC0) != 0x80).sum())
+            row["finite(scalar)"] = _gcps(nch8, _time_min(
+                lambda: baseline.hoehrmann_utf8_to_utf16(nb8), reps=3))
+        rows.append(row)
+    return rows
+
+
+def table9(langs=LIPSUM_LANGS, n_chars=N_CHARS):
+    """Validating UTF-16 -> UTF-8 (paper Table 9 / Fig. 6)."""
+    rows = []
+    for lang in langs:
+        _, u, _, nu, nch = _prep(lang, n_chars)
+        raw16 = np.asarray(u, np.uint16).tobytes()
+        fns = {
+            "blockparallel": jax.jit(lambda x: tc.utf16_to_utf8(
+                x, None, validate=True)),
+            "windowed(paper)": jax.jit(lambda x: tc.transcode_utf16_to_utf8(
+                x, None, strategy="windowed", validate=True)),
+        }
+        row = {"lang": lang}
+        for name, f in fns.items():
+            jax.block_until_ready(f(u))
+            t = _time_min(lambda f=f: jax.block_until_ready(f(u)))
+            row[name] = _gcps(nch, t)
+        row["codecs(ICU-standin)"] = _gcps(nch, _time_min(
+            lambda: baseline.python_codecs_utf16_to_utf8(raw16)))
+        rows.append(row)
+    return rows
+
+
+def table8_proxy(langs=("arabic", "latin", "chinese")):
+    """Instructions-per-byte proxy (paper Table 8): jaxpr FLOPs/bytes per
+    input byte for each strategy — the HLO-op analogue of instruction
+    counts."""
+    from repro import costmodel as CM
+    rows = []
+    for lang in langs:
+        b, _, nb, _, nch = _prep(lang, 4096)
+        for name, fn in [
+            ("blockparallel", lambda x: tc.utf8_to_utf16(x, None)),
+            ("windowed(paper)", lambda x: tc.transcode_utf8_to_utf16(
+                x, None, strategy="windowed")),
+        ]:
+            cost = CM.fn_cost(fn, jax.ShapeDtypeStruct(b.shape, b.dtype))
+            rows.append({"lang": lang, "impl": name,
+                         "flops_per_byte": cost.flops / nb,
+                         "bytes_per_byte": cost.bytes / nb})
+    return rows
+
+
+def fig7(lang="arabic", sizes=(64, 256, 1024, 4096, 16384, 65536)):
+    """Input-size sweep (paper Fig. 7): speed vs prefix length."""
+    rows = []
+    full = synthetic.utf8_array(lang, 1 << 17, 0).astype(np.int32)
+    f = jax.jit(lambda x: tc.utf8_to_utf16(x, None, validate=True))
+    for n in sizes:
+        b = jnp.asarray(full[:n])
+        nch = int(((np.asarray(b) & 0xC0) != 0x80).sum())
+        jax.block_until_ready(f(b))
+        t = _time_min(lambda: jax.block_until_ready(f(b)))
+        rows.append({"bytes": n, "gchars_per_s": _gcps(nch, t)})
+    return rows
+
+
+def print_rows(title, rows):
+    print(f"\n== {title} ==")
+    if not rows:
+        return
+    keys = list(rows[0].keys())
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(f"{r[k]:.3g}" if isinstance(r[k], float) else str(r[k])
+                       for k in keys))

@@ -1,0 +1,57 @@
+"""Quickstart: the transcoding core as a library (paper's public API).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import transcode as tc
+from repro.kernels import ops as kops
+
+
+def show(title, value):
+    print(f"{title:<46s} {value}")
+
+
+def main():
+    s = "naïve 中文 🎉 — transcoding demo"
+    utf8 = np.frombuffer(s.encode("utf-8"), np.uint8).astype(np.int32)
+    utf16 = np.frombuffer(s.encode("utf-16-le"), np.uint16).astype(np.int32)
+
+    # --- validation (Keiser-Lemire, vectorized) -------------------------
+    show("validate_utf8(valid text)",
+         bool(tc.validate_utf8(jnp.asarray(utf8), len(utf8))))
+    bad = jnp.asarray(np.array([0xED, 0xA0, 0x80, 0, 0, 0, 0, 0], np.int32))
+    show("validate_utf8(surrogate U+D800)", bool(tc.validate_utf8(bad, 3)))
+
+    # --- UTF-8 -> UTF-16 (both strategies) ------------------------------
+    for strat in ("blockparallel", "windowed"):
+        out, cnt, err = tc.transcode_utf8_to_utf16(
+            jnp.asarray(utf8), len(utf8), strategy=strat)
+        got = np.asarray(out)[: int(cnt)].astype(np.uint16)
+        ok = np.array_equal(got, utf16.astype(np.uint16))
+        show(f"utf8->utf16 [{strat}] matches python", ok)
+
+    # --- UTF-16 -> UTF-8 ------------------------------------------------
+    out, cnt, err = tc.transcode_utf16_to_utf8(jnp.asarray(utf16), len(utf16))
+    got = bytes(np.asarray(out)[: int(cnt)].astype(np.uint8))
+    show("utf16->utf8 round-trips", got.decode("utf-8") == s)
+
+    # --- Pallas kernel path (interpret=True on CPU, same API) -----------
+    out, cnt, err = kops.utf8_to_utf16(jnp.asarray(utf8), len(utf8))
+    got = np.asarray(out)[: int(cnt)].astype(np.uint16)
+    show("Pallas kernel utf8->utf16 matches", np.array_equal(
+        got, utf16.astype(np.uint16)))
+
+    # --- capacity planning (simdutf-style length queries) ---------------
+    show("utf16 units needed",
+         int(tc.utf16_length_from_utf8(jnp.asarray(utf8), len(utf8))))
+    show("utf8 bytes needed",
+         int(tc.utf8_length_from_utf16(jnp.asarray(utf16), len(utf16))))
+    show("characters", int(tc.count_utf8_chars(jnp.asarray(utf8), len(utf8))))
+
+
+if __name__ == "__main__":
+    main()

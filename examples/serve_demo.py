@@ -1,0 +1,36 @@
+"""Serving demo: batched requests through the transcode boundary.
+
+UTF-8 prompts are validated at ingress (invalid bytes rejected without
+touching the model); responses are returned in UTF-8 or UTF-16LE via the
+vectorized egress encoders.
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+
+import jax
+
+from repro.models import registry
+from repro.serve.engine import Engine, Request
+
+
+def main():
+    fam, cfg, model = registry.get("bytelm-100m", reduced=True)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, cfg, fam, params, max_batch=4, max_prompt=64,
+                 max_new=12)
+
+    requests = [
+        Request(b"hello framework"),
+        Request("café 中文".encode("utf-8")),
+        Request(b"\xff\xfeinvalid bytes\x80"),               # rejected
+        Request(b"utf-16 client", out_encoding="utf-16-le"),
+    ]
+    for req, res in zip(requests, eng.serve(requests)):
+        status = "OK " if res.ok else "REJ"
+        body = res.text_bytes[:32] if res.ok else res.error
+        print(f"[{status}] {req.prompt_bytes[:24]!r:30} "
+              f"({req.out_encoding}) -> {body!r}")
+
+
+if __name__ == "__main__":
+    main()

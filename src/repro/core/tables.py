@@ -1,0 +1,181 @@
+"""Lookup tables for SIMD-style Unicode transcoding (Lemire & Mula 2021).
+
+All tables are tiny (<= a few KiB) by design -- the paper's central memory
+argument is that transcoding tables must fit in the fastest cache level.  On
+TPU the analogue is SMEM/VMEM residency: every table below is a small constant
+array that XLA materialises next to the kernel.
+
+Two table families live here:
+
+1. The Keiser-Lemire three-nibble validation tables (`BYTE_1_HIGH`,
+   `BYTE_1_LOW`, `BYTE_2_HIGH`) -- ported bit-for-bit from the paper's
+   reference (simdjson/simdutf lineage).
+2. The windowed-mode tables replacing the paper's 1024-entry bitset-keyed
+   table: for every 12-bit end-of-character bitset we precompute how many
+   bytes a window consumes, how many characters it contains and the start
+   offset of each character (the TPU stand-in for the pshufb shuffle masks).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Keiser-Lemire validation nibble tables.
+# Error bit flags (one byte per class of structural error).
+TOO_SHORT = 1 << 0       # lead byte followed by another lead byte
+TOO_LONG = 1 << 1        # ASCII followed by a continuation byte
+OVERLONG_3 = 1 << 2      # 0xE0 followed by a byte < 0xA0
+SURROGATE = 1 << 4       # 0xED followed by a byte >= 0xA0
+OVERLONG_2 = 1 << 5      # 0xC0/0xC1 lead (value < 0x80 encoded in 2 bytes)
+TWO_CONTS = 1 << 7       # two continuation bytes in a row (also: carry bit)
+TOO_LARGE = 1 << 3       # 0xF4 followed by a byte >= 0x90, or 0xF5..
+TOO_LARGE_1000 = 1 << 6
+OVERLONG_4 = 1 << 6      # 0xF0 followed by a byte < 0x90
+
+_CARRY = TOO_SHORT | TOO_LONG | TWO_CONTS
+
+BYTE_1_HIGH = np.array(
+    [
+        # 0x0_ .. 0x7_ : ASCII previous byte -> only TOO_LONG possible
+        TOO_LONG, TOO_LONG, TOO_LONG, TOO_LONG,
+        TOO_LONG, TOO_LONG, TOO_LONG, TOO_LONG,
+        # 0x8_ .. 0xB_ : previous byte is a continuation
+        TWO_CONTS, TWO_CONTS, TWO_CONTS, TWO_CONTS,
+        # 0xC_ : 2-byte lead (0xC0/0xC1 are overlong)
+        TOO_SHORT | OVERLONG_2,
+        # 0xD_ : 2-byte lead
+        TOO_SHORT,
+        # 0xE_ : 3-byte lead
+        TOO_SHORT | OVERLONG_3 | SURROGATE,
+        # 0xF_ : 4-byte lead
+        TOO_SHORT | TOO_LARGE | TOO_LARGE_1000 | OVERLONG_4,
+    ],
+    dtype=np.int32,
+)
+
+BYTE_1_LOW = np.array(
+    [
+        _CARRY | OVERLONG_3 | OVERLONG_2 | OVERLONG_4,   # 0
+        _CARRY | OVERLONG_2,                             # 1
+        _CARRY,                                          # 2
+        _CARRY,                                          # 3
+        _CARRY | TOO_LARGE,                              # 4
+        _CARRY | TOO_LARGE | TOO_LARGE_1000,             # 5
+        _CARRY | TOO_LARGE | TOO_LARGE_1000,             # 6
+        _CARRY | TOO_LARGE | TOO_LARGE_1000,             # 7
+        _CARRY | TOO_LARGE | TOO_LARGE_1000,             # 8
+        _CARRY | TOO_LARGE | TOO_LARGE_1000,             # 9
+        _CARRY | TOO_LARGE | TOO_LARGE_1000,             # A
+        _CARRY | TOO_LARGE | TOO_LARGE_1000,             # B
+        _CARRY | TOO_LARGE | TOO_LARGE_1000,             # C
+        _CARRY | TOO_LARGE | TOO_LARGE_1000 | SURROGATE, # D
+        _CARRY | TOO_LARGE | TOO_LARGE_1000,             # E
+        _CARRY | TOO_LARGE | TOO_LARGE_1000,             # F
+    ],
+    dtype=np.int32,
+)
+
+BYTE_2_HIGH = np.array(
+    [
+        # 0x0_ .. 0x7_ : ASCII current byte -> previous lead was TOO_SHORT
+        TOO_SHORT, TOO_SHORT, TOO_SHORT, TOO_SHORT,
+        TOO_SHORT, TOO_SHORT, TOO_SHORT, TOO_SHORT,
+        # 0x8_
+        TOO_LONG | OVERLONG_2 | TWO_CONTS | OVERLONG_3 | TOO_LARGE_1000 | OVERLONG_4,
+        # 0x9_
+        TOO_LONG | OVERLONG_2 | TWO_CONTS | OVERLONG_3 | TOO_LARGE,
+        # 0xA_ 0xB_
+        TOO_LONG | OVERLONG_2 | TWO_CONTS | SURROGATE | TOO_LARGE,
+        TOO_LONG | OVERLONG_2 | TWO_CONTS | SURROGATE | TOO_LARGE,
+        # 0xC_ .. 0xF_ : current byte is a lead byte
+        TOO_SHORT, TOO_SHORT, TOO_SHORT, TOO_SHORT,
+    ],
+    dtype=np.int32,
+)
+
+# ---------------------------------------------------------------------------
+# Sequence-length classification from the lead byte's high 5 bits.
+# Index = byte >> 3 (32 entries). 0 marks a continuation or invalid lead.
+LEAD_LENGTH_32 = np.zeros(32, dtype=np.int32)
+LEAD_LENGTH_32[0:16] = 1          # 0x00..0x7F ASCII
+# 0x80..0xBF -> 0 (continuation)
+LEAD_LENGTH_32[24:28] = 2         # 0xC0..0xDF
+LEAD_LENGTH_32[28:30] = 3         # 0xE0..0xEF
+LEAD_LENGTH_32[30] = 4            # 0xF0..0xF7
+# 0xF8..0xFF -> 0 (invalid anywhere)
+
+# Minimum code point for a sequence of length L (overlong check), 1-indexed.
+MIN_CP_FOR_LEN = np.array([0, 0, 0x80, 0x800, 0x10000], dtype=np.int32)
+
+# ---------------------------------------------------------------------------
+# Windowed-mode tables (paper Algorithm 2/3).  Key = 12-bit end-of-character
+# bitset of the next 12 input bytes (bit i set <=> byte i ends a character).
+#
+# For each key we choose the paper's case:
+#   case 0: the first 6 characters each span 1-2 bytes       (Fig. 2)
+#   case 1: the first 4 characters each span 1-3 bytes       (Fig. 3)
+#   case 2: the first 2 characters span anything (1-4 bytes) (Fig. 4)
+# and store: consumed byte count, number of characters, per-character start
+# offsets and lengths (start/len of up to 6 characters, padded with zeros).
+#
+# Entries whose prefix cannot be parsed into whole characters (e.g. a window
+# beginning mid-character) are marked invalid; the transcoder only reaches
+# them on invalid input, which validation has already rejected.
+
+WINDOW_KEY_BITS = 12
+_N_KEYS = 1 << WINDOW_KEY_BITS
+
+
+def _build_window_tables():
+    consumed = np.zeros(_N_KEYS, dtype=np.int32)
+    nchars = np.zeros(_N_KEYS, dtype=np.int32)
+    case = np.zeros(_N_KEYS, dtype=np.int32)
+    starts = np.zeros((_N_KEYS, 6), dtype=np.int32)
+    lengths = np.zeros((_N_KEYS, 6), dtype=np.int32)
+    valid = np.zeros(_N_KEYS, dtype=bool)
+
+    for key in range(_N_KEYS):
+        # Decode character boundaries from the bitset.  Byte i ends a char
+        # iff bit i is set; characters are [prev_end+1 .. end].
+        ends = [i for i in range(WINDOW_KEY_BITS) if (key >> i) & 1]
+        chars = []
+        prev = -1
+        for e in ends:
+            chars.append((prev + 1, e - prev))  # (start, length)
+            prev = e
+        if not chars:
+            continue
+        lens = [l for (_, l) in chars]
+        if any(l > 4 for l in lens):
+            continue
+        # Pick the widest applicable case, mirroring Algorithm 2's order.
+        if len(chars) >= 6 and all(l <= 2 for l in lens[:6]):
+            c, n = 0, 6
+        elif len(chars) >= 4 and all(l <= 3 for l in lens[:4]):
+            c, n = 1, 4
+        elif len(chars) >= 2:
+            c, n = 2, 2
+        else:
+            # A single character in 12 bytes can only happen near the end of
+            # the buffer; consume it alone.
+            c, n = 2, 1
+        sel = chars[:n]
+        case[key] = c
+        nchars[key] = n
+        consumed[key] = sum(l for (_, l) in sel)
+        for j, (s, l) in enumerate(sel):
+            starts[key, j] = s
+            lengths[key, j] = l
+        valid[key] = True
+    return consumed, nchars, case, starts, lengths, valid
+
+
+(
+    WINDOW_CONSUMED,
+    WINDOW_NCHARS,
+    WINDOW_CASE,
+    WINDOW_STARTS,
+    WINDOW_LENGTHS,
+    WINDOW_VALID,
+) = _build_window_tables()

@@ -1,0 +1,255 @@
+"""Public transcoding API (paper's contribution, as composable JAX ops).
+
+All functions are shape-polymorphic in the *static* buffer capacity and take
+an explicit ``n_valid`` scalar for the logical length, so they jit cleanly
+and batch with ``vmap`` / shard with ``pjit``.  Outputs are (buffer, count,
+err): a fixed-capacity buffer, the number of meaningful elements, and a
+validation flag.
+
+Strategies:
+  * ``blockparallel`` (default) -- speculative per-position decode + cumsum
+    compaction; fully branch-free, the TPU-native beyond-paper form.
+  * ``windowed``                -- the paper-faithful Algorithm 2/3 structure
+    (see ``repro.core.windowed``).
+
+The ASCII fast path of Algorithm 3 survives as a whole-chunk ``lax.cond``:
+for ASCII-pure chunks (the paper's Latin benchmark) the entire decode is a
+widening copy.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compaction, utf16 as u16mod, utf32 as u32mod, utf8 as u8mod
+
+
+def _as_i32(x):
+    return x.astype(jnp.int32)
+
+
+def _n(x, n_valid):
+    return x.shape[0] if n_valid is None else n_valid
+
+
+# ---------------------------------------------------------------------------
+# Validation
+
+
+def validate_utf8(b, n_valid=None):
+    """Scalar bool: is the byte stream valid UTF-8 (Keiser-Lemire)."""
+    return u8mod.validate_kl(_as_i32(b), n_valid)
+
+
+def validate_utf16(u, n_valid=None):
+    return u16mod.validate(_as_i32(u), n_valid)
+
+
+# ---------------------------------------------------------------------------
+# UTF-8 -> UTF-32 / UTF-16
+
+
+def _mask_padding(b, n_valid):
+    if n_valid is None:
+        return b
+    idx = jnp.arange(b.shape[0])
+    return jnp.where(idx < n_valid, b, 0)
+
+
+def utf8_to_utf32(b, n_valid=None, validate: bool = True):
+    """Decode UTF-8 bytes to code points.
+
+    Returns (cp_buffer[int32, capacity=len(b)], count, err).
+    """
+    b = _mask_padding(_as_i32(b), n_valid)
+    n = _n(b, n_valid)
+    cp, is_lead, dec_err = u8mod.decode_speculative(b)
+    idx = jnp.arange(b.shape[0])
+    mask = is_lead & (idx < n)
+    out, count = compaction.compact(cp, mask, b.shape[0])
+    err = dec_err if validate else jnp.bool_(False)
+    if validate:
+        err = err | ~u8mod.validate_kl(b, n_valid)
+    return out, count, err
+
+
+def utf8_to_utf16(b, n_valid=None, validate: bool = True,
+                  ascii_fastpath: bool = True):
+    """Transcode UTF-8 bytes to UTF-16 code units (little-endian values).
+
+    Returns (u16_buffer[int32, capacity=len(b)], count, err).
+    """
+    b = _mask_padding(_as_i32(b), n_valid)
+    n = _n(b, n_valid)
+    cap = b.shape[0]
+    idx = jnp.arange(cap)
+
+    def general(b):
+        cp, is_lead, dec_err = u8mod.decode_speculative(b)
+        mask = is_lead & (idx < n)
+        units, u0, u1, _bad = u16mod.encode_candidates(cp)
+        vals = jnp.stack([u0, u1], -1)
+        out, count = compaction.compact_offsets(vals, units, mask, cap)
+        err = dec_err if validate else jnp.bool_(False)
+        if validate:
+            err = err | ~u8mod.validate_kl(b, None)
+        return out, count, err
+
+    def ascii(b):
+        # Paper Algorithm 3 fast path: widening copy.
+        return b, jnp.asarray(n, jnp.int32), jnp.bool_(False)
+
+    if not ascii_fastpath:
+        return general(b)
+    all_ascii = jnp.all(b < 0x80)
+    return jax.lax.cond(all_ascii, ascii, general, b)
+
+
+# ---------------------------------------------------------------------------
+# UTF-16 -> UTF-32 / UTF-8
+
+
+def utf16_to_utf32(u, n_valid=None, validate: bool = True):
+    u = _mask_padding(_as_i32(u), n_valid)
+    n = _n(u, n_valid)
+    cp, is_lead, err = u16mod.decode_speculative(u)
+    idx = jnp.arange(u.shape[0])
+    mask = is_lead & (idx < n)
+    out, count = compaction.compact(cp, mask, u.shape[0])
+    if not validate:
+        err = jnp.bool_(False)
+    return out, count, err
+
+
+def utf16_to_utf8(u, n_valid=None, validate: bool = True,
+                  ascii_fastpath: bool = True):
+    """Transcode UTF-16 units to UTF-8 bytes.
+
+    Returns (byte_buffer[int32, capacity=3*len(u)], count, err).
+    """
+    u = _mask_padding(_as_i32(u), n_valid)
+    n = _n(u, n_valid)
+    cap = 3 * u.shape[0]
+    idx = jnp.arange(u.shape[0])
+
+    def general(u):
+        cp, is_lead, dec_err = u16mod.decode_speculative(u)
+        mask = is_lead & (idx < n)
+        L, cand, bad = u32mod.encode_utf8_candidates(cp)
+        out, count = compaction.compact_offsets(cand, L, mask, cap)
+        err = (dec_err | jnp.any(bad & mask)) if validate else jnp.bool_(False)
+        return out, count, err
+
+    def ascii(u):
+        out = jnp.concatenate([u, jnp.zeros((cap - u.shape[0],), u.dtype)])
+        return out, jnp.asarray(n, jnp.int32), jnp.bool_(False)
+
+    if not ascii_fastpath:
+        return general(u)
+    all_ascii = jnp.all(u < 0x80)
+    return jax.lax.cond(all_ascii, ascii, general, u)
+
+
+# ---------------------------------------------------------------------------
+# UTF-32 egress
+
+
+def utf32_to_utf8(cp, n_valid=None, validate: bool = True):
+    cp = _mask_padding(_as_i32(cp), n_valid)
+    n = _n(cp, n_valid)
+    cap = 4 * cp.shape[0]
+    idx = jnp.arange(cp.shape[0])
+    mask = idx < n
+    L, cand, bad = u32mod.encode_utf8_candidates(cp)
+    out, count = compaction.compact_offsets(cand, L, mask, cap)
+    return out, count, (jnp.any(bad & mask) if validate else jnp.bool_(False))
+
+
+def utf32_to_utf16(cp, n_valid=None, validate: bool = True):
+    cp = _mask_padding(_as_i32(cp), n_valid)
+    n = _n(cp, n_valid)
+    cap = 2 * cp.shape[0]
+    idx = jnp.arange(cp.shape[0])
+    mask = idx < n
+    units, u0, u1, bad = u16mod.encode_candidates(cp)
+    vals = jnp.stack([u0, u1], -1)
+    out, count = compaction.compact_offsets(vals, units, mask, cap)
+    return out, count, (jnp.any(bad & mask) if validate else jnp.bool_(False))
+
+
+# ---------------------------------------------------------------------------
+# Length counting (simdutf-style capacity queries)
+
+
+def _mask_padding_cont(b, n_valid):
+    """Mask padding with a continuation byte (counts as 0 characters)."""
+    if n_valid is None:
+        return b
+    idx = jnp.arange(b.shape[0])
+    return jnp.where(idx < n_valid, b, 0x80)
+
+
+def utf16_length_from_utf8(b, n_valid=None):
+    b = _mask_padding_cont(_as_i32(b), n_valid)
+    return u8mod.utf16_length(b)
+
+
+def utf8_length_from_utf16(u, n_valid=None):
+    u = _as_i32(u)
+    if n_valid is not None:
+        idx = jnp.arange(u.shape[0])
+        # 0xDC00 (lone low surrogate) contributes 2 bytes; use a masked sum
+        # instead: zero units count 1 byte each, so subtract the padding.
+        pad = jnp.sum((idx >= n_valid).astype(jnp.int32))
+        u = jnp.where(idx < n_valid, u, 0)
+        return u16mod.utf8_length(u) - pad
+    return u16mod.utf8_length(u)
+
+
+def count_utf8_chars(b, n_valid=None):
+    b = _mask_padding_cont(_as_i32(b), n_valid)
+    return u8mod.count_chars(b)
+
+
+# ---------------------------------------------------------------------------
+# Byte-level helpers (UTF-16LE byte buffers <-> unit arrays)
+
+
+def utf16le_bytes_to_units(by):
+    by = _as_i32(by)
+    return by[0::2] | (by[1::2] << 8)
+
+
+def units_to_utf16le_bytes(u):
+    u = _as_i32(u)
+    lo = u & 0xFF
+    hi = (u >> 8) & 0xFF
+    return jnp.stack([lo, hi], -1).reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# Strategy dispatch (windowed = paper-faithful; imported lazily to avoid a
+# circular import with repro.core.windowed).
+
+
+def transcode_utf8_to_utf16(b, n_valid=None, *, strategy: str = "blockparallel",
+                            validate: bool = True):
+    if strategy == "blockparallel":
+        return utf8_to_utf16(b, n_valid, validate=validate)
+    elif strategy == "windowed":
+        from repro.core import windowed
+        return windowed.utf8_to_utf16_windowed(b, n_valid, validate=validate)
+    raise ValueError(f"unknown strategy: {strategy}")
+
+
+def transcode_utf16_to_utf8(u, n_valid=None, *, strategy: str = "blockparallel",
+                            validate: bool = True):
+    if strategy == "blockparallel":
+        return utf16_to_utf8(u, n_valid, validate=validate)
+    elif strategy == "windowed":
+        from repro.core import windowed
+        return windowed.utf16_to_utf8_windowed(u, n_valid, validate=validate)
+    raise ValueError(f"unknown strategy: {strategy}")

@@ -1,0 +1,106 @@
+"""Vectorized UTF-16 validation / decoding (to UTF-32) / encoding.
+
+UTF-16 is the simpler side of the paper: outside surrogate pairs every code
+unit is a whole character.  All functions operate on int32 arrays of 16-bit
+code-unit values (little-endian decoding from bytes happens at the buffer
+boundary, see ``transcode.py``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _shift_right(x, n, fill=0):
+    if n == 0:
+        return x
+    if n >= x.shape[0]:
+        return jnp.full_like(x, fill)
+    return jnp.concatenate([jnp.full((n,), fill, x.dtype), x[:-n]])
+
+
+def _shift_left(x, n, fill=0):
+    if n == 0:
+        return x
+    if n >= x.shape[0]:
+        return jnp.full_like(x, fill)
+    return jnp.concatenate([x[n:], jnp.full((n,), fill, x.dtype)])
+
+
+def classify(u: jax.Array):
+    """Per-unit surrogate classification.  u: int32 values in [0, 2^16)."""
+    top6 = u >> 10
+    is_hi = top6 == 0x36  # 0xD800..0xDBFF
+    is_lo = top6 == 0x37  # 0xDC00..0xDFFF
+    return is_hi, is_lo
+
+
+def validate(u: jax.Array, n_valid=None) -> jax.Array:
+    """True iff ``u`` is valid UTF-16 (all surrogates correctly paired)."""
+    if n_valid is not None:
+        idx = jnp.arange(u.shape[0])
+        u = jnp.where(idx < n_valid, u, 0)
+        n = n_valid
+    else:
+        n = u.shape[0]
+    is_hi, is_lo = classify(u)
+    next_is_lo = _shift_left(is_lo, 1)
+    prev_is_hi = _shift_right(is_hi, 1)
+    # Every high surrogate must be followed by a low one and vice versa; a
+    # high surrogate in the last position is truncated.
+    idx = jnp.arange(u.shape[0])
+    err = (is_hi & ~next_is_lo) | (is_lo & ~prev_is_hi) | (is_hi & (idx == n - 1))
+    return ~jnp.any(err)
+
+
+def decode_speculative(u: jax.Array):
+    """Decode every unit position to a candidate code point.
+
+    Returns (cp, is_lead, err): code points at lead positions (a low
+    surrogate that completes a pair is not a lead), plus a validity flag.
+    """
+    is_hi, is_lo = classify(u)
+    nxt = _shift_left(u, 1)
+    next_is_lo = _shift_left(is_lo, 1)
+    prev_is_hi = _shift_right(is_hi, 1)
+
+    pair_cp = 0x10000 + ((u - 0xD800) << 10) + (nxt - 0xDC00)
+    cp = jnp.where(is_hi, pair_cp, u)
+    is_lead = ~(is_lo & prev_is_hi)
+
+    idx = jnp.arange(u.shape[0])
+    err = (
+        (is_hi & ~next_is_lo)
+        | (is_lo & ~prev_is_hi)
+        | (is_hi & (idx == u.shape[0] - 1))
+    )
+    return cp, is_lead, jnp.any(err)
+
+
+def encode_candidates(cp: jax.Array):
+    """UTF-32 -> UTF-16: produce (units, u0, u1) per code point.
+
+    ``units`` is 1 or 2; ``u0``/``u1`` are the code units (u1 meaningful only
+    where units == 2).  Invalid code points (surrogate range, > 0x10FFFF)
+    are reported via the third return value.
+    """
+    is_supp = cp >= 0x10000
+    v = cp - 0x10000
+    u0 = jnp.where(is_supp, 0xD800 + (v >> 10), cp)
+    u1 = jnp.where(is_supp, 0xDC00 + (v & 0x3FF), 0)
+    units = 1 + is_supp.astype(jnp.int32)
+    # Per-position badness: callers mask by lead positions before reducing.
+    bad = ((cp >= 0xD800) & (cp < 0xE000)) | (cp > 0x10FFFF) | (cp < 0)
+    return units, u0, u1, bad
+
+
+def utf8_length(u: jax.Array) -> jax.Array:
+    """UTF-8 bytes needed by a UTF-16 stream (paper §5 length classes)."""
+    is_hi, is_lo = classify(u)
+    ascii_ = (u < 0x80).astype(jnp.int32)
+    two = ((u >= 0x80) & (u < 0x800)).astype(jnp.int32)
+    three = ((u >= 0x800) & ~is_hi & ~is_lo).astype(jnp.int32)
+    # A surrogate pair contributes 4 bytes; count 2 per surrogate unit.
+    surr = (is_hi | is_lo).astype(jnp.int32)
+    return jnp.sum(ascii_ + 2 * two + 3 * three + 2 * surr)

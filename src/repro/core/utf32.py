@@ -1,0 +1,49 @@
+"""UTF-32 <-> UTF-8 encoding primitives (vectorized).
+
+UTF-32 is the internal interchange format of the framework: the data
+pipeline decodes UTF-8 to code points on device, models consume code points
+(or bytes), and serving re-encodes.  Encoding to UTF-8 follows the paper's
+§5 dataflow: per code point we compute its byte length (1..4) and emit four
+candidate bytes; stream compaction (cumsum) replaces the pshufb compress.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def utf8_length_per_cp(cp: jax.Array) -> jax.Array:
+    return (
+        1
+        + (cp >= 0x80).astype(jnp.int32)
+        + (cp >= 0x800).astype(jnp.int32)
+        + (cp >= 0x10000).astype(jnp.int32)
+    )
+
+
+def encode_utf8_candidates(cp: jax.Array):
+    """Per code point, produce (length, bytes[4]) candidate UTF-8 bytes.
+
+    ``bytes`` has shape (..., 4); entries beyond ``length`` are zero.  The
+    bit layout mirrors paper Fig. 1 exactly (big-endian data bits, 10
+    continuation prefixes).
+    """
+    L = utf8_length_per_cp(cp)
+
+    c0 = cp & 0x3F          # lowest 6 bits
+    c1 = (cp >> 6) & 0x3F
+    c2 = (cp >> 12) & 0x3F
+    c3 = (cp >> 18) & 0x07
+
+    b_1 = jnp.stack([cp, jnp.zeros_like(cp), jnp.zeros_like(cp), jnp.zeros_like(cp)], -1)
+    b_2 = jnp.stack([0xC0 | (cp >> 6), 0x80 | c0, jnp.zeros_like(cp), jnp.zeros_like(cp)], -1)
+    b_3 = jnp.stack([0xE0 | (cp >> 12), 0x80 | c1, 0x80 | c0, jnp.zeros_like(cp)], -1)
+    b_4 = jnp.stack([0xF0 | c3, 0x80 | c2, 0x80 | c1, 0x80 | c0], -1)
+
+    Le = L[..., None]
+    out = jnp.where(Le == 1, b_1, jnp.where(Le == 2, b_2, jnp.where(Le == 3, b_3, b_4)))
+    # Per-position badness: callers mask by lead/valid positions before
+    # reducing (a trailing low surrogate is not an error at a non-lead lane).
+    bad = ((cp >= 0xD800) & (cp < 0xE000)) | (cp > 0x10FFFF) | (cp < 0)
+    return L, out, bad

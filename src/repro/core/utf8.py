@@ -1,0 +1,201 @@
+"""Vectorized UTF-8 classification, validation and decoding.
+
+This module is the block-parallel (TPU-native) adaptation of the paper's
+UTF-8 machinery.  Where the CPU algorithm walks 12-byte windows guided by an
+end-of-character bitset, we decode *every* byte position speculatively and
+mask: each position is treated as if it were a lead byte, the (up to) three
+following bytes are folded into a candidate code point, and per-position
+validity masks select the real characters.  There is no loop-carried
+dependence, so the whole computation is straight-line VPU arithmetic --
+exactly what XLA:TPU and the Pallas kernels want.
+
+All arithmetic is int32 (TPU vector lanes are 32-bit); byte arrays are uint8
+in memory and widened on load, mirroring the paper's widening of bytes into
+16/32-bit lanes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tables as T
+
+
+def _shift_right(x: jax.Array, n: int, fill: int = 0) -> jax.Array:
+    """bytes[i - n] with `fill` for i < n  (previous bytes)."""
+    if n == 0:
+        return x
+    if n >= x.shape[0]:
+        return jnp.full_like(x, fill)
+    return jnp.concatenate([jnp.full((n,), fill, x.dtype), x[:-n]])
+
+
+def _shift_left(x: jax.Array, n: int, fill: int = 0) -> jax.Array:
+    """bytes[i + n] with `fill` beyond the end  (next bytes)."""
+    if n == 0:
+        return x
+    if n >= x.shape[0]:
+        return jnp.full_like(x, fill)
+    return jnp.concatenate([x[n:], jnp.full((n,), fill, x.dtype)])
+
+
+def classify(b: jax.Array):
+    """Per-byte structural classification of a UTF-8 stream.
+
+    Args:
+      b: int32 array of byte values in [0, 256).
+
+    Returns dict with int32/bool arrays (all the same shape as ``b``):
+      ``is_cont``  -- byte is a continuation (0b10xxxxxx)
+      ``seq_len``  -- sequence length if this is a lead byte (1..4), else 0
+      ``is_lead``  -- seq_len > 0
+      ``bad_byte`` -- byte can never appear in UTF-8 (0xF8..0xFF)
+    """
+    is_cont = (b & 0xC0) == 0x80
+    seq_len = jnp.take(jnp.asarray(T.LEAD_LENGTH_32), b >> 3)
+    is_lead = seq_len > 0
+    bad_byte = b >= 0xF8
+    return {
+        "is_cont": is_cont,
+        "seq_len": seq_len,
+        "is_lead": is_lead,
+        "bad_byte": bad_byte,
+    }
+
+
+def validate_kl(b: jax.Array, n_valid=None) -> jax.Array:
+    """Keiser-Lemire UTF-8 validation, bit-for-bit with the paper's §4.
+
+    Three nibble-table lookups are ANDed to flag every two-byte structural
+    error class, and the 3rd/4th continuation bytes are checked by comparing
+    "must be a continuation here" (derived from bytes two and three back)
+    against the TWO_CONTS bit.
+
+    Args:
+      b: int32 byte values.
+      n_valid: optional scalar count of real bytes (the rest is padding);
+        padding is replaced by ASCII zeros so it can never create errors.
+
+    Returns a scalar bool: True iff the stream is valid UTF-8.
+    """
+    if n_valid is not None:
+        idx = jnp.arange(b.shape[0])
+        b = jnp.where(idx < n_valid, b, 0)
+
+    prev1 = _shift_right(b, 1)
+    prev2 = _shift_right(b, 2)
+    prev3 = _shift_right(b, 3)
+
+    sc = (
+        jnp.take(jnp.asarray(T.BYTE_1_HIGH), prev1 >> 4)
+        & jnp.take(jnp.asarray(T.BYTE_1_LOW), prev1 & 0xF)
+        & jnp.take(jnp.asarray(T.BYTE_2_HIGH), b >> 4)
+    )
+
+    # Positions that *must* hold the 3rd byte of a 3/4-byte sequence or the
+    # 4th byte of a 4-byte sequence.
+    is_third = prev2 >= 0xE0
+    is_fourth = prev3 >= 0xF0
+    must_be_cont = (is_third | is_fourth).astype(jnp.int32) * T.TWO_CONTS
+    err = sc ^ must_be_cont
+
+    # A trailing truncated sequence is invalid: the last bytes may not begin
+    # a multi-byte character that runs off the end.
+    n = b.shape[0] if n_valid is None else n_valid
+    idx = jnp.arange(b.shape[0])
+    tail_lead = (
+        ((b >= 0xC0) & (idx >= n - 1))
+        | ((b >= 0xE0) & (idx >= n - 2))
+        | ((b >= 0xF0) & (idx >= n - 3))
+    )
+    tail_lead = tail_lead & (idx < n)
+
+    return (jnp.max(err, initial=0) == 0) & (~jnp.any(tail_lead))
+
+
+def decode_speculative(b: jax.Array):
+    """Decode every byte position of a UTF-8 stream as if it led a character.
+
+    This is the heart of the block-parallel transcoder.  For each position we
+    fold the next 0..3 continuation bytes into a candidate code point and
+    compute structural + scalar-range validity.  Downstream consumers select
+    positions where ``is_lead`` and compact with a cumulative sum (the TPU
+    stand-in for the paper's pshufb compaction).
+
+    Args:
+      b: int32 array of byte values in [0, 256).
+
+    Returns:
+      cp:      int32 candidate code point at each position (valid where lead)
+      is_lead: bool, position starts a character
+      err:     scalar bool, stream is invalid UTF-8
+    """
+    c = classify(b)
+    seq_len = c["seq_len"]
+    is_cont = c["is_cont"]
+    is_lead = c["is_lead"]
+
+    b1 = _shift_left(b, 1)
+    b2 = _shift_left(b, 2)
+    b3 = _shift_left(b, 3)
+
+    # Branch-free bit surgery (paper Figs. 2-4): assemble the candidate code
+    # point for each possible sequence length, then select by seq_len.
+    cp1 = b
+    cp2 = ((b & 0x1F) << 6) | (b1 & 0x3F)
+    cp3 = ((b & 0x0F) << 12) | ((b1 & 0x3F) << 6) | (b2 & 0x3F)
+    cp4 = (
+        ((b & 0x07) << 18)
+        | ((b1 & 0x3F) << 12)
+        | ((b2 & 0x3F) << 6)
+        | (b3 & 0x3F)
+    )
+    cp = jnp.select(
+        [seq_len == 1, seq_len == 2, seq_len == 3, seq_len == 4],
+        [cp1, cp2, cp3, cp4],
+        default=jnp.zeros_like(b),
+    )
+
+    # Structural validation, expressed as "expected continuation" bookkeeping
+    # (equivalent to the Keiser-Lemire TWO_CONTS check, kept here so that the
+    # decoder is self-validating even when used without validate_kl).
+    exp_cont = (
+        (_shift_right(seq_len, 1) >= 2)
+        | (_shift_right(seq_len, 2) >= 3)
+        | (_shift_right(seq_len, 3) >= 4)
+    )
+    struct_err = exp_cont != is_cont
+    struct_err = struct_err | c["bad_byte"]
+
+    # Scalar-range validation on decoded values (overlong / surrogate / max).
+    min_cp = jnp.take(jnp.asarray(T.MIN_CP_FOR_LEN), seq_len)
+    overlong = is_lead & (cp < min_cp)
+    surrogate = is_lead & (cp >= 0xD800) & (cp < 0xE000)
+    too_large = is_lead & (cp > 0x10FFFF)
+
+    # A multi-byte lead too close to the end of the buffer is truncated.
+    n = b.shape[0]
+    idx = jnp.arange(n)
+    truncated = is_lead & (idx + seq_len > n)
+
+    err = (
+        jnp.any(struct_err)
+        | jnp.any(overlong)
+        | jnp.any(surrogate)
+        | jnp.any(too_large)
+        | jnp.any(truncated)
+    )
+    return cp, is_lead, err
+
+
+def count_chars(b: jax.Array) -> jax.Array:
+    """Number of UTF-8 characters = number of non-continuation bytes."""
+    return jnp.sum(((b & 0xC0) != 0x80).astype(jnp.int32))
+
+
+def utf16_length(b: jax.Array) -> jax.Array:
+    """UTF-16 code units needed by a UTF-8 stream (1 per char, 2 if 4-byte)."""
+    is_lead = ((b & 0xC0) != 0x80).astype(jnp.int32)
+    is_4b = (b >= 0xF0).astype(jnp.int32) * (b < 0xF8).astype(jnp.int32)
+    return jnp.sum(is_lead + is_4b)

@@ -1,0 +1,346 @@
+"""Paper-faithful windowed transcoders (Lemire & Mula Algorithms 2, 3, 4).
+
+This module preserves the *structure* of the paper's CPU algorithms:
+
+UTF-8 -> UTF-16 (Algorithms 2 & 3)
+  * outer loop over the input with a 64-byte **ASCII fast path** (one
+    vector compare + reduce; widening copy when it hits);
+  * otherwise an **end-of-character bitset** is computed from a vectorized
+    "is continuation byte" compare, and the low 12 bits key a
+    4096-entry table (``repro.core.tables.WINDOW_*``) giving the number of
+    bytes consumed and the per-character (start, length) layout of the
+    window — the TPU stand-in for the paper's shuffle-mask tables;
+  * the window body applies the branch-free bit surgery of Figs. 2-4 to up
+    to six characters at once and emits UTF-16 code units (including
+    surrogate pairs).
+
+UTF-16 -> UTF-8 (Algorithm 4)
+  * loop over 8-unit registers, branching (``lax.switch``) on the maximal
+    range class: ASCII / <=U+07FF / BMP-no-surrogates / surrogates-present;
+  * each class has its own routine; the surrogate class may consume only 7
+    units when the register ends with the first half of a pair.
+
+The window walk is inherently serial (a ``lax.while_loop`` with a
+data-dependent trip count), which is exactly why the block-parallel
+strategy in ``repro.core.transcode`` exists: on TPU-class hardware the
+serial walk is the measured baseline, the speculative whole-array decode is
+the beyond-paper optimization.  See DESIGN.md §3 and EXPERIMENTS.md §Perf.
+
+All functions mirror the public API shape: (buffer, count, err).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tables as T
+from repro.core import utf8 as u8mod
+from repro.core import utf16 as u16mod
+
+_WINDOW = 12
+_BLOCK = 64
+
+
+def _decode_char(b12: jax.Array, start: jax.Array, length: jax.Array):
+    """Decode one UTF-8 character from a 12(+3 pad)-byte window.
+
+    Branch-free bit surgery of paper Figs. 2-4, applied to the bytes
+    ``b12[start:start+length]``.  Returns the code point (0 when length==0).
+    """
+    b0 = b12[start]
+    b1 = b12[start + 1]
+    b2 = b12[start + 2]
+    b3 = b12[start + 3]
+    cp1 = b0
+    cp2 = ((b0 & 0x1F) << 6) | (b1 & 0x3F)
+    cp3 = ((b0 & 0x0F) << 12) | ((b1 & 0x3F) << 6) | (b2 & 0x3F)
+    cp4 = (
+        ((b0 & 0x07) << 18)
+        | ((b1 & 0x3F) << 12)
+        | ((b2 & 0x3F) << 6)
+        | (b3 & 0x3F)
+    )
+    return jnp.select(
+        [length == 1, length == 2, length == 3, length == 4],
+        [cp1, cp2, cp3, cp4],
+        default=jnp.int32(0),
+    )
+
+
+def utf8_to_utf16_windowed(b, n_valid=None, validate: bool = True):
+    """Algorithm 3 structure: 64-byte ASCII fast path + 12-byte table windows.
+
+    Returns (u16_buffer[int32, capacity=len(b)+16], count, err).
+    """
+    b = b.astype(jnp.int32)
+    cap_in = b.shape[0]
+    n = jnp.asarray(cap_in if n_valid is None else n_valid, jnp.int32)
+    idx = jnp.arange(cap_in)
+    b = jnp.where(idx < n, b, 0)
+
+    # Padded input so dynamic 64/16-byte loads never go out of bounds.
+    b_pad = jnp.concatenate([b, jnp.zeros((_BLOCK,), jnp.int32)])
+    # +80 slack so the 64-wide ASCII store and 12-wide window store are
+    # always in bounds even for tiny inputs.
+    cap_out = cap_in + 80
+    out0 = jnp.zeros((cap_out,), jnp.int32)
+
+    consumed_t = jnp.asarray(T.WINDOW_CONSUMED)
+    nchars_t = jnp.asarray(T.WINDOW_NCHARS)
+    starts_t = jnp.asarray(T.WINDOW_STARTS)
+    lengths_t = jnp.asarray(T.WINDOW_LENGTHS)
+    valid_t = jnp.asarray(T.WINDOW_VALID)
+
+    # Global Keiser-Lemire validation (the paper fuses it per 64-byte block;
+    # over a device-resident buffer a single fused pass is equivalent).
+    err0 = (~u8mod.validate_kl(b, n_valid)) if validate else jnp.bool_(False)
+
+    def window_body(state):
+        p, q, out, err = state
+
+        # --- Algorithm 3 ASCII fast path: 64 bytes at once. -------------
+        blk = jax.lax.dynamic_slice(b_pad, (p,), (_BLOCK,))
+        can64 = (p + _BLOCK) <= n
+        all_ascii = jnp.all(blk < 0x80) & can64
+
+        def ascii_path(_):
+            new_out = jax.lax.dynamic_update_slice(out, blk, (q,))
+            return p + _BLOCK, q + _BLOCK, new_out, err
+
+        # --- Algorithm 2 window: 12 bytes, table-driven. ----------------
+        def window_path(_):
+            w = jax.lax.dynamic_slice(b_pad, (p,), (_WINDOW + 4,))
+            # End-of-character bitset: byte i ends a char iff byte i+1 is
+            # not a continuation byte (or is past the end of the stream).
+            nxt = jax.lax.dynamic_slice(b_pad, (p + 1,), (_WINDOW,))
+            past = (p + 1 + jnp.arange(_WINDOW)) >= n
+            ends = ((nxt & 0xC0) != 0x80) | past
+            key = jnp.sum(ends.astype(jnp.int32) << jnp.arange(_WINDOW))
+
+            k = consumed_t[key]
+            nch = nchars_t[key]
+            ok = valid_t[key]
+
+            # Decode up to six characters (paper cases: 6x<=2B / 4x<=3B /
+            # 2x<=4B, all encoded in the precomputed layout tables).
+            temp = jnp.zeros((_WINDOW,), jnp.int32)
+            woff = jnp.int32(0)
+            for j in range(6):
+                live = j < nch
+                cp = _decode_char(w, starts_t[key, j], lengths_t[key, j])
+                is_supp = cp >= 0x10000
+                v = cp - 0x10000
+                u0 = jnp.where(is_supp, 0xD800 + (v >> 10), cp)
+                u1 = jnp.where(is_supp, 0xDC00 + (v & 0x3FF), 0)
+                units = jnp.where(live, 1 + is_supp.astype(jnp.int32), 0)
+                temp = temp.at[woff].set(jnp.where(live, u0, temp[woff]))
+                temp = temp.at[woff + 1].set(
+                    jnp.where(live & is_supp, u1, temp[woff + 1])
+                )
+                woff = woff + units
+
+            new_out = jax.lax.dynamic_update_slice(out, temp, (q,))
+            # Restore any overwritten-but-unclaimed lanes? Not needed: lanes
+            # past q+woff are rewritten by later windows or masked at the end.
+            new_err = err | ~ok
+            # Always make progress on malformed windows.
+            k = jnp.maximum(k, 1)
+            return p + k, q + woff, new_out, new_err
+
+        return jax.lax.cond(all_ascii, ascii_path, window_path, None)
+
+    def window_cond(state):
+        p, q, out, err = state
+        return (p + _WINDOW) <= n
+
+    p, q, out, err = jax.lax.while_loop(
+        window_cond, window_body, (jnp.int32(0), jnp.int32(0), out0, err0)
+    )
+
+    # --- Conventional tail (< 12 bytes), as in the paper. ----------------
+    def tail_body(state):
+        p, q, out, err = state
+        w = jax.lax.dynamic_slice(b_pad, (p,), (4,))
+        l = jnp.take(jnp.asarray(T.LEAD_LENGTH_32), w[0] >> 3)
+        bad = l == 0
+        l = jnp.maximum(l, 1)
+        # Clamp at the end of the stream (truncated char = invalid, already
+        # caught by validate_kl).
+        l = jnp.minimum(l, n - p)
+        cp = _decode_char(w, jnp.int32(0), l)
+        is_supp = cp >= 0x10000
+        v = cp - 0x10000
+        u0 = jnp.where(is_supp, 0xD800 + (v >> 10), cp)
+        u1 = jnp.where(is_supp, 0xDC00 + (v & 0x3FF), 0)
+        temp = jnp.stack([u0, u1])
+        new_out = jax.lax.dynamic_update_slice(out, temp, (q,))
+        return p + l, q + 1 + is_supp.astype(jnp.int32), new_out, err | bad
+
+    p, q, out, err = jax.lax.while_loop(
+        lambda s: s[0] < n, tail_body, (p, q, out, err)
+    )
+
+    # Zero the unclaimed lanes so buffers compare deterministically.
+    out = jnp.where(jnp.arange(cap_out) < q, out, 0)
+    return out, q, err
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 4: UTF-16 -> UTF-8, 8-unit registers, 4-way range branch.
+
+
+def _encode_bmp(u8v: jax.Array):
+    """Encode 8 BMP (non-surrogate) units to a 24-byte buffer + count.
+
+    Shared body of Algorithm 4's case 2 and case 3 routines: per unit emit
+    1-3 candidate bytes and compress (paper: pshufb mask from the 256-entry
+    table; here: in-register offsets, the window is only 8 lanes wide).
+    """
+    L = (
+        1
+        + (u8v >= 0x80).astype(jnp.int32)
+        + (u8v >= 0x800).astype(jnp.int32)
+    )
+    c0 = u8v & 0x3F
+    c1 = (u8v >> 6) & 0x3F
+    b1 = jnp.stack([u8v, jnp.zeros_like(u8v), jnp.zeros_like(u8v)], -1)
+    b2 = jnp.stack([0xC0 | (u8v >> 6), 0x80 | c0, jnp.zeros_like(u8v)], -1)
+    b3 = jnp.stack([0xE0 | (u8v >> 12), 0x80 | c1, 0x80 | c0], -1)
+    Le = L[:, None]
+    cand = jnp.where(Le == 1, b1, jnp.where(Le == 2, b2, b3))
+    start = jnp.cumsum(L) - L
+    jj = jnp.arange(3)[None, :]
+    dest = start[:, None] + jj
+    keep = jj < Le
+    dest = jnp.where(keep, dest, 24)
+    temp = jnp.zeros((24,), jnp.int32)
+    temp = temp.at[dest.reshape(-1)].set(cand.reshape(-1), mode="drop")
+    return temp, jnp.sum(L)
+
+
+def utf16_to_utf8_windowed(u, n_valid=None, validate: bool = True):
+    """Algorithm 4: branch per 8-unit register on the maximal range class.
+
+    Returns (byte_buffer[int32, capacity=3*len(u)+24], count, err).
+    """
+    u = u.astype(jnp.int32)
+    cap_in = u.shape[0]
+    n = jnp.asarray(cap_in if n_valid is None else n_valid, jnp.int32)
+    idx = jnp.arange(cap_in)
+    u = jnp.where(idx < n, u, 0)
+
+    u_pad = jnp.concatenate([u, jnp.zeros((8,), jnp.int32)])
+    cap_out = 3 * cap_in + 24
+    out0 = jnp.zeros((cap_out,), jnp.int32)
+
+    def body(state):
+        p, q, out, err = state
+        reg = jax.lax.dynamic_slice(u_pad, (p,), (8,))
+        in_range = (p + jnp.arange(8)) < n
+        reg = jnp.where(in_range, reg, 0)
+
+        is_hi = (reg >> 10) == 0x36
+        is_lo = (reg >> 10) == 0x37
+        has_surr = jnp.any(is_hi | is_lo)
+        all_ascii = jnp.all(reg < 0x80)
+        all_latin = jnp.all(reg < 0x800)
+        case = jnp.where(
+            all_ascii, 0, jnp.where(all_latin, 1, jnp.where(~has_surr, 2, 3))
+        )
+
+        def case_ascii(reg):
+            temp = jnp.zeros((24,), jnp.int32).at[:8].set(reg)
+            return temp, jnp.int32(8), jnp.int32(8), jnp.bool_(False)
+
+        def case_latin(reg):
+            temp, nb = _encode_bmp(reg)
+            return temp, nb, jnp.int32(8), jnp.bool_(False)
+
+        def case_bmp(reg):
+            temp, nb = _encode_bmp(reg)
+            return temp, nb, jnp.int32(8), jnp.bool_(False)
+
+        def case_surrogate(reg):
+            # Conventional path (paper: scalar fallback).  Vectorized over
+            # the 8 lanes: decode pairs speculatively, mask trailing halves.
+            hi = (reg >> 10) == 0x36
+            lo = (reg >> 10) == 0x37
+            nxt = jnp.concatenate([reg[1:], jnp.zeros((1,), jnp.int32)])
+            nxt_lo = (nxt >> 10) == 0x37
+            prv_hi = jnp.concatenate([jnp.zeros((1,), jnp.bool_), hi[:-1]])
+            # Do not split a pair: if lane 7 is an unconsumed high surrogate,
+            # stop the register at lane 7.
+            take = jnp.where(hi[7] & ~prv_hi[7], 7, 8)
+            lane = jnp.arange(8)
+            live = lane < take
+            is_lead = live & ~(lo & prv_hi)
+            pair_cp = 0x10000 + ((reg - 0xD800) << 10) + (nxt - 0xDC00)
+            cp = jnp.where(hi, pair_cp, reg)
+            lerr = jnp.any(
+                (live & hi & ~nxt_lo & (lane < take - 1))
+                | (live & lo & ~prv_hi)
+                | (is_lead & hi & (lane == take - 1))
+            )
+            L = (
+                1
+                + (cp >= 0x80).astype(jnp.int32)
+                + (cp >= 0x800).astype(jnp.int32)
+                + (cp >= 0x10000).astype(jnp.int32)
+            )
+            L = jnp.where(is_lead, L, 0)
+            c0 = cp & 0x3F
+            c1 = (cp >> 6) & 0x3F
+            c2 = (cp >> 12) & 0x3F
+            c3 = (cp >> 18) & 0x07
+            z = jnp.zeros_like(cp)
+            b1v = jnp.stack([cp, z, z, z], -1)
+            b2v = jnp.stack([0xC0 | (cp >> 6), 0x80 | c0, z, z], -1)
+            b3v = jnp.stack([0xE0 | (cp >> 12), 0x80 | c1, 0x80 | c0, z], -1)
+            b4v = jnp.stack([0xF0 | c3, 0x80 | c2, 0x80 | c1, 0x80 | c0], -1)
+            Le = L[:, None]
+            cand = jnp.where(
+                Le == 1, b1v, jnp.where(Le == 2, b2v, jnp.where(Le == 3, b3v, b4v))
+            )
+            start = jnp.cumsum(L) - L
+            jj = jnp.arange(4)[None, :]
+            dest = start[:, None] + jj
+            keep = jj < Le
+            dest = jnp.where(keep, dest, 24)
+            temp = jnp.zeros((24,), jnp.int32)
+            temp = temp.at[dest.reshape(-1)].set(cand.reshape(-1), mode="drop")
+            return temp, jnp.sum(L), take, lerr
+
+        temp, nb, k, lerr = jax.lax.switch(
+            case, [case_ascii, case_latin, case_bmp, case_surrogate], reg
+        )
+        # Near the stream end the register may be partially filled: clamp the
+        # consumed units and recount the bytes from the actually-live units.
+        avail = n - p
+        k = jnp.minimum(k, avail)
+        # Recompute bytes written for the clamped prefix.
+        unit_pos = jnp.arange(8)
+        # per-unit byte contribution (surrogate halves: hi contributes 4,
+        # lo contributes 0 when paired; unpaired handled by lerr/validate).
+        hi_m = (reg >> 10) == 0x36
+        lo_m = (reg >> 10) == 0x37
+        per_unit = jnp.where(
+            hi_m,
+            4,
+            jnp.where(
+                lo_m,
+                0,
+                1 + (reg >= 0x80).astype(jnp.int32) + (reg >= 0x800).astype(jnp.int32),
+            ),
+        )
+        live_units = unit_pos < k
+        nb = jnp.sum(jnp.where(live_units, per_unit, 0))
+        new_out = jax.lax.dynamic_update_slice(out, temp, (q,))
+        return p + jnp.maximum(k, 1), q + nb, new_out, err | lerr
+
+    err0 = (~u16mod.validate(u, n_valid)) if validate else jnp.bool_(False)
+    p, q, out, err = jax.lax.while_loop(
+        lambda s: s[0] < n, body, (jnp.int32(0), jnp.int32(0), out0, err0)
+    )
+    out = jnp.where(jnp.arange(cap_out) < q, out, 0)
+    return out, q, err

@@ -1,0 +1,1 @@
+from repro.data import synthetic, tokenizer, pipeline  # noqa: F401

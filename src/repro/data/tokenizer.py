@@ -1,0 +1,66 @@
+"""Tokenizers built on the transcoding core.
+
+Two tokenizers are provided, both of which consume the *device-resident*
+output of ``repro.core`` (validated bytes / code points) so the entire
+ingest path — validate, transcode, tokenize, pack — runs as one jitted
+program:
+
+  * ``ByteTokenizer`` — byte-level LM vocabulary (256 byte values shifted
+    past the special tokens).  The data pipeline ships raw UTF-8 and the
+    validation kernel guarantees well-formedness.
+  * ``CodepointTokenizer`` — code-point-level vocabulary for arbitrary
+    ``vocab_size``: code points below the printable cutoff map directly,
+    the rest fold via a multiplicative hash.  Used to exercise the large
+    embedding tables of the assigned architectures with realistic token
+    statistics.
+
+Detokenization is the egress path: ids -> code points -> UTF-8/UTF-16 via
+``repro.core.utf32`` (serving uses this to answer in either encoding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+N_SPECIAL = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class ByteTokenizer:
+    vocab_size: int = 256 + N_SPECIAL
+
+    def encode(self, b: jnp.ndarray) -> jnp.ndarray:
+        """uint8/int32 UTF-8 bytes -> int32 token ids."""
+        return b.astype(jnp.int32) + N_SPECIAL
+
+    def decode(self, ids: jnp.ndarray) -> jnp.ndarray:
+        """token ids -> UTF-8 byte values (specials -> 0)."""
+        b = ids.astype(jnp.int32) - N_SPECIAL
+        return jnp.where(b >= 0, b, 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class CodepointTokenizer:
+    """Code points -> ids in [0, vocab_size) with a direct low range."""
+    vocab_size: int
+    direct: int = 0x3000  # BMP scripts below this map 1:1
+
+    def encode(self, cp: jnp.ndarray) -> jnp.ndarray:
+        cp = cp.astype(jnp.int32)
+        direct = min(self.direct, self.vocab_size - N_SPECIAL - 1)
+        # Knuth multiplicative hash in uint32 (wraps, no overflow)
+        h = (cp.astype(jnp.uint32) * jnp.uint32(2654435761)).astype(jnp.uint32)
+        folded = direct + (h % jnp.uint32(
+            self.vocab_size - N_SPECIAL - direct)).astype(jnp.int32)
+        ids = jnp.where(cp < direct, cp, folded)
+        return ids + N_SPECIAL
+
+    def decode(self, ids: jnp.ndarray) -> jnp.ndarray:
+        """Best-effort inverse (exact only for the direct range)."""
+        cp = ids.astype(jnp.int32) - N_SPECIAL
+        return jnp.clip(cp, 0, 0x10FFFF)

@@ -1,0 +1,126 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Each op pads the flat input to whole (ROWS, LANES) VMEM tiles (adding the
+zero boundary tiles the kernels' prev/next BlockSpecs expect), invokes the
+kernel, and strips the padding.  On this container kernels run with
+``interpret=True`` (CPU execution of the kernel body); on a real TPU the
+same code path compiles with ``interpret=False``.
+
+The kernel-backed transcoders compose a Pallas compute stage (per-lane
+classification + bit surgery + fused validation) with an XLA compaction
+stage (cumsum + scatter) — the TPU-native split of the paper's
+"decode-in-register, then pshufb-compress" structure.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compaction
+from repro.core import utf16 as u16mod
+from repro.kernels import utf8_decode as kdec
+from repro.kernels import utf8_validate as kval
+from repro.kernels import utf16_encode as kenc
+
+ROWS, LANES, BLOCK = kdec.ROWS, kdec.LANES, kdec.BLOCK
+
+
+def _mask_padding(x, n_valid):
+    x = x.astype(jnp.int32)
+    if n_valid is None:
+        return x, x.shape[0]
+    idx = jnp.arange(x.shape[0])
+    return jnp.where(idx < n_valid, x, 0), n_valid
+
+
+def _tile(x, boundary_tiles: int):
+    """Pad flat int32 x to whole BLOCK tiles + zero boundary tiles."""
+    n = x.shape[0]
+    nblk = max(1, -(-n // BLOCK))
+    pad = nblk * BLOCK - n
+    x = jnp.concatenate([x, jnp.zeros((pad,), jnp.int32)])
+    x3 = x.reshape(nblk, ROWS, LANES)
+    z = jnp.zeros((1, ROWS, LANES), jnp.int32)
+    if boundary_tiles == 1:        # leading zero tile only (validate)
+        return jnp.concatenate([z, x3], 0), nblk
+    return jnp.concatenate([z, x3, z], 0), nblk  # both ends (decode/encode)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def validate_utf8(b, n_valid=None, interpret: bool = True):
+    """Keiser-Lemire validation via the Pallas kernel.  Scalar bool."""
+    b, n = _mask_padding(b, n_valid)
+    b3, _ = _tile(b, boundary_tiles=1)
+    errs = kval._call(b3, interpret=interpret)
+    # Tail truncation (needs the logical length; checked outside the kernel).
+    idx = jnp.arange(b.shape[0])
+    tail_lead = (
+        ((b >= 0xC0) & (idx >= n - 1))
+        | ((b >= 0xE0) & (idx >= n - 2))
+        | ((b >= 0xF0) & (idx >= n - 3))
+    ) & (idx < n)
+    return (jnp.max(errs) == 0) & ~jnp.any(tail_lead)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_utf8(b, n_valid=None, interpret: bool = True):
+    """Per-position speculative decode via the Pallas kernel.
+
+    Returns (cp, lead, units, err) over the original buffer length.
+    """
+    b, n = _mask_padding(b, n_valid)
+    cap = b.shape[0]
+    b3, nblk = _tile(b, boundary_tiles=2)
+    cp, lead, units, errs = kdec._call(b3, interpret=interpret)
+    cp = cp.reshape(-1)[:cap]
+    lead = lead.reshape(-1)[:cap]
+    units = units.reshape(-1)[:cap]
+    # A multi-byte lead truncated by the buffer end falls in the zero
+    # boundary tile when n is tile-aligned — check the tail here.
+    idx = jnp.arange(cap)
+    tail_lead = (
+        ((b >= 0xC0) & (idx >= n - 1))
+        | ((b >= 0xE0) & (idx >= n - 2))
+        | ((b >= 0xF0) & (idx >= n - 3))
+    ) & (idx < n)
+    return cp, lead, units, (jnp.max(errs) > 0) | jnp.any(tail_lead)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "validate"))
+def utf8_to_utf16(b, n_valid=None, interpret: bool = True,
+                  validate: bool = True):
+    """Kernel-backed UTF-8 -> UTF-16 transcode.  (buffer, count, err)."""
+    b, n = _mask_padding(b, n_valid)
+    cap = b.shape[0]
+    cp, lead, units, dec_err = decode_utf8(b, None, interpret=interpret)
+    idx = jnp.arange(cap)
+    mask = (lead > 0) & (idx < n)
+    _, u0, u1, _bad = u16mod.encode_candidates(cp)
+    vals = jnp.stack([u0, u1], -1)
+    out, count = compaction.compact_offsets(vals, units, mask, cap)
+    err = dec_err if validate else jnp.bool_(False)
+    if validate:
+        err = err | ~validate_utf8(b, n, interpret=interpret)
+    return out, count, err
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "validate"))
+def utf16_to_utf8(u, n_valid=None, interpret: bool = True,
+                  validate: bool = True):
+    """Kernel-backed UTF-16 -> UTF-8 transcode.  (buffer, count, err)."""
+    u, n = _mask_padding(u, n_valid)
+    cap_in = u.shape[0]
+    cap = 3 * cap_in
+    u3, nblk = _tile(u, boundary_tiles=2)
+    b0, b1, b2, b3, L, errs = kenc._call(u3, interpret=interpret)
+    flat = lambda t: t.reshape(-1)[:cap_in]
+    cand = jnp.stack([flat(b0), flat(b1), flat(b2), flat(b3)], -1)
+    L = flat(L)
+    idx = jnp.arange(cap_in)
+    mask = (L > 0) & (idx < n)
+    out, count = compaction.compact_offsets(cand, L, mask, cap)
+    err = (jnp.max(errs) > 0) if validate else jnp.bool_(False)
+    return out, count, err

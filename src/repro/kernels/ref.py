@@ -1,0 +1,119 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function reproduces one kernel's per-tile semantics as straight-line
+jnp code on flat arrays, so tests can sweep shapes/dtypes and assert exact
+(integer) agreement with the ``interpret=True`` kernel execution.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import tables as T
+
+
+def _sr(x, n, fill=0):
+    if n == 0:
+        return x
+    if n >= x.shape[0]:
+        return jnp.full_like(x, fill)
+    return jnp.concatenate([jnp.full((n,), fill, x.dtype), x[:-n]])
+
+
+def _sl(x, n, fill=0):
+    if n == 0:
+        return x
+    if n >= x.shape[0]:
+        return jnp.full_like(x, fill)
+    return jnp.concatenate([x[n:], jnp.full((n,), fill, x.dtype)])
+
+
+def utf8_validate_ref(b: jnp.ndarray) -> jnp.ndarray:
+    """Keiser-Lemire error maximum over a flat int32 byte array.
+
+    Matches the kernel's semantics for an array with an implicit all-zero
+    (ASCII) predecessor; returns the scalar max error value (0 == valid,
+    ignoring tail truncation, which the wrapper checks).
+    """
+    b = b.astype(jnp.int32)
+    prev1, prev2, prev3 = _sr(b, 1), _sr(b, 2), _sr(b, 3)
+    sc = (
+        jnp.take(jnp.asarray(T.BYTE_1_HIGH), prev1 >> 4)
+        & jnp.take(jnp.asarray(T.BYTE_1_LOW), prev1 & 0xF)
+        & jnp.take(jnp.asarray(T.BYTE_2_HIGH), b >> 4)
+    )
+    must = ((prev2 >= 0xE0) | (prev3 >= 0xF0)).astype(jnp.int32) * T.TWO_CONTS
+    return jnp.max(sc ^ must, initial=0)
+
+
+def utf8_decode_ref(b: jnp.ndarray):
+    """Speculative per-position decode over a flat int32 byte array.
+
+    Returns (cp, lead, units, err_any) with kernel semantics: cp is zero on
+    non-lead lanes, lead/units are int32, err_any a scalar int (>0 invalid).
+    """
+    b = b.astype(jnp.int32)
+    b1, b2, b3 = _sl(b, 1), _sl(b, 2), _sl(b, 3)
+    seq_len = jnp.take(jnp.asarray(T.LEAD_LENGTH_32), b >> 3)
+    is_cont = (b & 0xC0) == 0x80
+    is_lead = seq_len > 0
+
+    cp1 = b
+    cp2 = ((b & 0x1F) << 6) | (b1 & 0x3F)
+    cp3 = ((b & 0x0F) << 12) | ((b1 & 0x3F) << 6) | (b2 & 0x3F)
+    cp4 = (((b & 0x07) << 18) | ((b1 & 0x3F) << 12)
+           | ((b2 & 0x3F) << 6) | (b3 & 0x3F))
+    cp = jnp.where(seq_len == 1, cp1,
+         jnp.where(seq_len == 2, cp2,
+         jnp.where(seq_len == 3, cp3, cp4)))
+    cp = jnp.where(is_lead, cp, 0)
+
+    exp_cont = (_sr(seq_len, 1) >= 2) | (_sr(seq_len, 2) >= 3) | (_sr(seq_len, 3) >= 4)
+    struct_err = (exp_cont != is_cont) | (b >= 0xF8)
+    min_cp = jnp.take(jnp.asarray(T.MIN_CP_FOR_LEN), seq_len)
+    range_err = is_lead & (
+        (cp < min_cp) | ((cp >= 0xD800) & (cp < 0xE000)) | (cp > 0x10FFFF)
+    )
+    units = jnp.where(is_lead, 1 + (cp >= 0x10000).astype(jnp.int32), 0)
+    err = jnp.max((struct_err | range_err).astype(jnp.int32), initial=0)
+    return cp, is_lead.astype(jnp.int32), units, err
+
+
+def utf16_encode_ref(u: jnp.ndarray):
+    """Per-unit UTF-16 -> UTF-8 candidate bytes over a flat int32 array.
+
+    Returns (b0, b1, b2, b3, L, err_any) with kernel semantics.
+    """
+    u = u.astype(jnp.int32)
+    is_hi = (u >> 10) == 0x36
+    is_lo = (u >> 10) == 0x37
+    nxt = _sl(u, 1)
+    prv = _sr(u, 1)
+    nxt_is_lo = (nxt >> 10) == 0x37
+    prv_is_hi = (prv >> 10) == 0x36
+
+    pair_cp = 0x10000 + ((u - 0xD800) << 10) + (nxt - 0xDC00)
+    cp = jnp.where(is_hi, pair_cp, u)
+    is_lead = ~(is_lo & prv_is_hi)
+
+    c0 = cp & 0x3F
+    c1 = (cp >> 6) & 0x3F
+    c2 = (cp >> 12) & 0x3F
+    c3 = (cp >> 18) & 0x07
+    L = (1 + (cp >= 0x80).astype(jnp.int32)
+         + (cp >= 0x800).astype(jnp.int32)
+         + (cp >= 0x10000).astype(jnp.int32))
+    z = jnp.zeros_like(cp)
+    b0 = jnp.where(L == 1, cp,
+         jnp.where(L == 2, 0xC0 | (cp >> 6),
+         jnp.where(L == 3, 0xE0 | (cp >> 12), 0xF0 | c3)))
+    b1 = jnp.where(L == 2, 0x80 | c0,
+         jnp.where(L == 3, 0x80 | c1,
+         jnp.where(L == 4, 0x80 | c2, z)))
+    b2 = jnp.where(L == 3, 0x80 | c0,
+         jnp.where(L == 4, 0x80 | c1, z))
+    b3 = jnp.where(L == 4, 0x80 | c0, z)
+    L = jnp.where(is_lead, L, 0)
+    err = jnp.max(((is_hi & ~nxt_is_lo) | (is_lo & ~prv_is_hi)).astype(jnp.int32),
+                  initial=0)
+    return b0, b1, b2, b3, L, err

@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: UTF-16 -> UTF-8 candidate-byte production (paper §5).
+
+One grid step processes a BLOCK-unit VMEM tile of UTF-16 code units.  Per
+lane we classify the unit (ASCII / 2-byte / 3-byte / surrogate half), fold
+surrogate pairs into supplementary code points using one unit of lookahead
+from the next tile (and one unit of lookbehind from the previous tile to
+identify trailing halves), and emit the four candidate UTF-8 bytes plus a
+per-lane byte length — exactly the state the paper's pshufb compress-store
+consumes.  Global stream compaction (cumsum + scatter over the whole
+buffer) happens outside the kernel in XLA.
+
+The paper's Algorithm 4 branches per 16-byte register on the maximal range
+class.  TPU tiles are 1024 lanes and branching per tile would flush the
+whole pipeline, so the kernel is branch-free: every lane computes all four
+candidate encodings and selects by range (lane-parallel `where` trees are
+one VPU op per node).  Surrogate-pair validation is fused (err flag per
+tile), mirroring the paper's "validation at near-zero cost" claim.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS = 8
+LANES = 128
+BLOCK = ROWS * LANES
+
+
+def _shift_left_flat(cur, nxt, n):
+    c = cur.reshape(-1)
+    x = nxt.reshape(-1)
+    return jnp.concatenate([c[n:], x[:n]]).reshape(cur.shape)
+
+
+def _shift_right_flat(cur, prev, n):
+    c = cur.reshape(-1)
+    p = prev.reshape(-1)
+    return jnp.concatenate([p[-n:], c[:-n]]).reshape(cur.shape)
+
+
+def utf16_encode_kernel(u_prev_ref, u_cur_ref, u_next_ref,
+                        b0_ref, b1_ref, b2_ref, b3_ref, len_ref, err_ref):
+    u = u_cur_ref[...].astype(jnp.int32)
+    up = u_prev_ref[...].astype(jnp.int32)
+    un = u_next_ref[...].astype(jnp.int32)
+
+    top6 = u >> 10
+    is_hi = top6 == 0x36
+    is_lo = top6 == 0x37
+
+    nxt = _shift_left_flat(u, un, 1)
+    prv = _shift_right_flat(u, up, 1)
+    nxt_is_lo = (nxt >> 10) == 0x37
+    prv_is_hi = (prv >> 10) == 0x36
+
+    # Fold surrogate pairs (paper Fig. 4 surrogate construction, inverted).
+    pair_cp = 0x10000 + ((u - 0xD800) << 10) + (nxt - 0xDC00)
+    cp = jnp.where(is_hi, pair_cp, u)
+    is_lead = ~(is_lo & prv_is_hi)
+
+    # Candidate UTF-8 bytes for lengths 1..4 (paper Fig. 1 bit layout).
+    c0 = cp & 0x3F
+    c1 = (cp >> 6) & 0x3F
+    c2 = (cp >> 12) & 0x3F
+    c3 = (cp >> 18) & 0x07
+    L = (
+        1
+        + (cp >= 0x80).astype(jnp.int32)
+        + (cp >= 0x800).astype(jnp.int32)
+        + (cp >= 0x10000).astype(jnp.int32)
+    )
+    z = jnp.zeros_like(cp)
+    b0 = jnp.where(L == 1, cp,
+         jnp.where(L == 2, 0xC0 | (cp >> 6),
+         jnp.where(L == 3, 0xE0 | (cp >> 12), 0xF0 | c3)))
+    b1 = jnp.where(L == 2, 0x80 | c0,
+         jnp.where(L == 3, 0x80 | c1,
+         jnp.where(L == 4, 0x80 | c2, z)))
+    b2 = jnp.where(L == 3, 0x80 | c0,
+         jnp.where(L == 4, 0x80 | c1, z))
+    b3 = jnp.where(L == 4, 0x80 | c0, z)
+
+    L = jnp.where(is_lead, L, 0)
+
+    # Fused UTF-16 validation: unpaired surrogate halves.
+    err = (is_hi & ~nxt_is_lo) | (is_lo & ~prv_is_hi)
+
+    b0_ref[...] = b0
+    b1_ref[...] = b1
+    b2_ref[...] = b2
+    b3_ref[...] = b3
+    len_ref[...] = L
+    err_ref[0] = jnp.max(err.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _call(u3d, interpret=True):
+    """u3d: int32 (nblk+2, ROWS, LANES) — zero tile at each end."""
+    nblk = u3d.shape[0] - 2
+    spec = lambda off: pl.BlockSpec(
+        (1, ROWS, LANES), lambda i, off=off: (i + off, 0, 0))
+    out2d = lambda: pl.BlockSpec((1, ROWS, LANES), lambda i: (i, 0, 0))
+    tile = jax.ShapeDtypeStruct((nblk, ROWS, LANES), jnp.int32)
+    return pl.pallas_call(
+        utf16_encode_kernel,
+        grid=(nblk,),
+        in_specs=[spec(0), spec(1), spec(2)],
+        out_specs=[out2d(), out2d(), out2d(), out2d(), out2d(),
+                   pl.BlockSpec((1,), lambda i: (i,))],
+        out_shape=[tile, tile, tile, tile, tile,
+                   jax.ShapeDtypeStruct((nblk,), jnp.int32)],
+        interpret=interpret,
+    )(u3d, u3d, u3d)

@@ -1,0 +1,141 @@
+"""Pallas TPU kernel: speculative block-parallel UTF-8 decode.
+
+The compute core of the framework's beyond-paper strategy (DESIGN.md §3):
+every byte position in a BLOCK-byte VMEM tile is decoded as if it led a
+character — the (up to) three following bytes are folded in with the
+branch-free bit surgery of paper Figs. 2-4 — and per-position masks select
+the real characters.  Cross-tile context (3 bytes on each side) comes from
+also mapping the previous and next tiles into VMEM; the array is padded
+with a zero tile at each end.
+
+Outputs per position: candidate code point, is-lead flag, and the number
+of UTF-16 code units the character needs (0 for non-leads) — everything
+global stream compaction (an XLA cumsum+scatter over the whole buffer)
+needs to finish the transcode.  A per-tile structural-error flag fuses the
+decoder's own validation.
+
+This kernel deliberately contains no loop and no branch: it is pure VPU
+arithmetic on (8, 128) tiles, the TPU-native answer to the paper's point
+that transcoding should be straight-line SIMD work.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS = 8
+LANES = 128
+BLOCK = ROWS * LANES
+
+
+def _shift_left_flat(cur, nxt, n):
+    """cur[i+n] with bytes flowing in from the next tile."""
+    c = cur.reshape(-1)
+    x = nxt.reshape(-1)
+    return jnp.concatenate([c[n:], x[:n]]).reshape(cur.shape)
+
+
+def _shift_right_flat(cur, prev, n):
+    c = cur.reshape(-1)
+    p = prev.reshape(-1)
+    return jnp.concatenate([p[-n:], c[:-n]]).reshape(cur.shape)
+
+
+def _seq_len(b):
+    """Sequence length from the lead byte, as a where-tree.
+
+    The paper uses a 32-entry L1 table keyed by ``b >> 3``; on the TPU VPU a
+    four-node compare/select tree is cheaper than a gather, so the table is
+    *computed* (DESIGN.md §3: the paper's own compute-vs-lookup observation,
+    with the tradeoff flipped).
+    """
+    return jnp.where(
+        b < 0x80, 1,
+        jnp.where(b < 0xC0, 0,
+        jnp.where(b < 0xE0, 2,
+        jnp.where(b < 0xF0, 3,
+        jnp.where(b < 0xF8, 4, 0)))))
+
+
+def utf8_decode_kernel(b_prev_ref, b_cur_ref, b_next_ref,
+                       cp_ref, lead_ref, units_ref, err_ref):
+    b = b_cur_ref[...].astype(jnp.int32)
+    bp = b_prev_ref[...].astype(jnp.int32)
+    bn = b_next_ref[...].astype(jnp.int32)
+
+    b1 = _shift_left_flat(b, bn, 1)
+    b2 = _shift_left_flat(b, bn, 2)
+    b3 = _shift_left_flat(b, bn, 3)
+
+    seq_len = _seq_len(b)
+    is_cont = (b & 0xC0) == 0x80
+    is_lead = seq_len > 0
+
+    # Branch-free bit surgery (paper Figs. 2-4).
+    cp1 = b
+    cp2 = ((b & 0x1F) << 6) | (b1 & 0x3F)
+    cp3 = ((b & 0x0F) << 12) | ((b1 & 0x3F) << 6) | (b2 & 0x3F)
+    cp4 = (
+        ((b & 0x07) << 18)
+        | ((b1 & 0x3F) << 12)
+        | ((b2 & 0x3F) << 6)
+        | (b3 & 0x3F)
+    )
+    cp = jnp.where(
+        seq_len == 1,
+        cp1,
+        jnp.where(seq_len == 2, cp2, jnp.where(seq_len == 3, cp3, cp4)),
+    )
+    cp = jnp.where(is_lead, cp, 0)
+
+    # Structural self-validation: expected-continuation bookkeeping.
+    seq_len_prev = _seq_len(bp)
+    sl_p1 = _shift_right_flat(seq_len, seq_len_prev, 1)
+    sl_p2 = _shift_right_flat(seq_len, seq_len_prev, 2)
+    sl_p3 = _shift_right_flat(seq_len, seq_len_prev, 3)
+    exp_cont = (sl_p1 >= 2) | (sl_p2 >= 3) | (sl_p3 >= 4)
+    struct_err = (exp_cont != is_cont) | (b >= 0xF8)
+
+    # Scalar-range validation (overlong / surrogate / too-large).
+    # MIN_CP_FOR_LEN as a select tree (same compute-over-lookup adaptation).
+    min_cp = jnp.where(seq_len == 2, 0x80,
+             jnp.where(seq_len == 3, 0x800,
+             jnp.where(seq_len == 4, 0x10000, 0)))
+    range_err = is_lead & (
+        (cp < min_cp) | ((cp >= 0xD800) & (cp < 0xE000)) | (cp > 0x10FFFF)
+    )
+
+    units = jnp.where(is_lead, 1 + (cp >= 0x10000).astype(jnp.int32), 0)
+
+    cp_ref[...] = cp
+    lead_ref[...] = is_lead.astype(jnp.int32)
+    units_ref[...] = units
+    err_ref[0] = jnp.max((struct_err | range_err).astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _call(b2d, interpret=True):
+    """b2d: int32 (nblk+2, ROWS, LANES) — zero tile at each end."""
+    nblk = b2d.shape[0] - 2
+    spec = lambda off: pl.BlockSpec(
+        (1, ROWS, LANES), lambda i, off=off: (i + off, 0, 0))
+    out2d = lambda: pl.BlockSpec((1, ROWS, LANES), lambda i: (i, 0, 0))
+    cp, lead, units, err = pl.pallas_call(
+        utf8_decode_kernel,
+        grid=(nblk,),
+        in_specs=[spec(0), spec(1), spec(2)],
+        out_specs=[out2d(), out2d(), out2d(),
+                   pl.BlockSpec((1,), lambda i: (i,))],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblk, ROWS, LANES), jnp.int32),
+            jax.ShapeDtypeStruct((nblk, ROWS, LANES), jnp.int32),
+            jax.ShapeDtypeStruct((nblk, ROWS, LANES), jnp.int32),
+            jax.ShapeDtypeStruct((nblk,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(b2d, b2d, b2d)
+    return cp, lead, units, err

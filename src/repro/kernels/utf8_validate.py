@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: Keiser-Lemire UTF-8 validation (paper §4, [3]).
+
+One grid step validates one BLOCK-byte tile resident in VMEM.  The paper's
+three nibble-table lookups AND together per byte pair; the only cross-tile
+state is the previous 3 bytes, which we obtain by also mapping the
+*previous* block into VMEM (the array is padded with one leading zero
+block, so block 0 sees an all-ASCII predecessor — zeros can never create
+an error).
+
+TPU notes:
+  * all arithmetic is int32 (VPU lane width);
+  * the 16-entry nibble tables are embedded constants — the TPU analogue of
+    the paper's L1-resident tables (they fit in VREGs after constant
+    propagation);
+  * tiles are (ROWS, 128) so the last dimension matches the VPU lane count
+    and ROWS=8 matches the sublane count;
+  * the per-tile result is a single int32 error flag, reduced by the
+    wrapper.  No cross-tile sequential dependence -> trivially parallel
+    grid, unlike the CPU algorithm's running "prev" registers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import tables as T
+
+ROWS = 8
+LANES = 128
+BLOCK = ROWS * LANES  # 1024 bytes per grid step
+
+
+def _shift_right_flat(cur, prev, n):
+    """cur[i-n] with bytes flowing in from the previous tile."""
+    flat_cur = cur.reshape(-1)
+    flat_prev = prev.reshape(-1)
+    return jnp.concatenate([flat_prev[-n:], flat_cur[:-n]]).reshape(cur.shape)
+
+
+def utf8_validate_kernel(t1h_ref, t1l_ref, t2h_ref,
+                         b_prev_ref, b_cur_ref, err_ref):
+    b = b_cur_ref[...].astype(jnp.int32)
+    bp = b_prev_ref[...].astype(jnp.int32)
+
+    prev1 = _shift_right_flat(b, bp, 1)
+    prev2 = _shift_right_flat(b, bp, 2)
+    prev3 = _shift_right_flat(b, bp, 3)
+
+    # The paper's three 16-entry nibble tables, passed as VMEM-resident
+    # inputs (their whole point is that they are tiny enough for L1; on TPU
+    # they live in VMEM next to the tile and are re-read every grid step).
+    byte_1_high = t1h_ref[...]
+    byte_1_low = t1l_ref[...]
+    byte_2_high = t2h_ref[...]
+
+    sc = (
+        jnp.take(byte_1_high, prev1 >> 4)
+        & jnp.take(byte_1_low, prev1 & 0xF)
+        & jnp.take(byte_2_high, b >> 4)
+    )
+    is_third = prev2 >= 0xE0
+    is_fourth = prev3 >= 0xF0
+    must_be_cont = (is_third | is_fourth).astype(jnp.int32) * T.TWO_CONTS
+    err = sc ^ must_be_cont
+    err_ref[0] = jnp.max(err)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _call(b3d, interpret=True):
+    """b3d: int32 (nblk+1, ROWS, LANES) — one leading zero tile."""
+    nblk = b3d.shape[0] - 1
+    table_spec = pl.BlockSpec((16,), lambda i: (0,))
+    return pl.pallas_call(
+        utf8_validate_kernel,
+        grid=(nblk,),
+        in_specs=[
+            table_spec, table_spec, table_spec,
+            # previous tile (the array is padded with a leading zero tile)
+            pl.BlockSpec((1, ROWS, LANES), lambda i: (i, 0, 0)),
+            # current tile
+            pl.BlockSpec((1, ROWS, LANES), lambda i: (i + 1, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nblk,), jnp.int32),
+        interpret=interpret,
+    )(jnp.asarray(T.BYTE_1_HIGH), jnp.asarray(T.BYTE_1_LOW),
+      jnp.asarray(T.BYTE_2_HIGH), b3d, b3d)

@@ -1,0 +1,2 @@
+# NOTE: repro.launch.dryrun sets XLA_FLAGS at import; do not import it here.
+from repro.launch import mesh  # noqa: F401

@@ -1,0 +1,316 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_EXTRA_XLA", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell.
+
+The two lines above run before ANY other import (jax locks the device
+count on first init): the dry-run — and only the dry-run — sees 512
+placeholder host devices so ``jax.make_mesh`` can build the production
+meshes:
+
+    single-pod:  (16, 16)      axes (data, model)          256 chips
+    multi-pod:   (2, 16, 16)   axes (pod, data, model)     512 chips
+
+For each cell we build the step function (train_step / prefill / decode),
+bind the sharding specs from ``repro.train.sharding``, lower with
+ShapeDtypeStruct stand-ins (no allocation), compile, and record
+``memory_analysis()`` + ``cost_analysis()`` + the three-term roofline
+(``repro.roofline``).  A failure here (sharding mismatch, OOM at compile,
+unsupported collective) is a bug in the framework.
+
+Usage:
+    python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+    python -m repro.launch.dryrun --all [--multipod] [--out results.json]
+"""
+
+import argparse
+import json
+import sys
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs as cfgmod
+from repro import costmodel as CM
+from repro import roofline as RL
+from repro.configs import shapes as shp
+from repro.launch import mesh as meshmod
+from repro.models import registry
+from repro.serve import kvcache, serve_step
+from repro.train import optimizer as O
+from repro.train import sharding as SH
+from repro.train import train_step as TS
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(arch: str, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of the cell."""
+    family, cfg, model = registry.get(arch)
+    s = shp.SHAPES[shape_name]
+    seq, gb, kind = s["seq_len"], s["global_batch"], s["kind"]
+    specs = {}
+    if kind == "train":
+        specs["tokens"] = _sds((gb, seq), jnp.int32)
+        specs["labels"] = _sds((gb, seq), jnp.int32)
+        if family == "encdec":
+            specs["frames"] = _sds((gb, cfg.n_audio_frames, cfg.d_model),
+                                   jnp.bfloat16)
+    elif kind == "prefill":
+        specs["tokens"] = _sds((gb, seq), jnp.int32)
+        specs["lens"] = _sds((gb,), jnp.int32)
+        if family == "encdec":
+            specs["frames"] = _sds((gb, cfg.n_audio_frames, cfg.d_model),
+                                   jnp.bfloat16)
+    else:  # decode
+        specs["tok"] = _sds((gb, 1), jnp.int32)
+        specs["pos"] = _sds((gb,), jnp.int32)
+        if family == "encdec":
+            specs["frames"] = _sds((gb, cfg.n_audio_frames, cfg.d_model),
+                                   jnp.bfloat16)
+    return specs
+
+
+def _shardings(tree, specs, mesh):
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, remat=True,
+               layout: str = "tp", remat_policy: str = "full",
+               loss_chunk=None):
+    """Returns (fn, arg_shapes, in_shardings, model_flops).
+
+    layout="tp":  Megatron TP over 'model' + FSDP over the data axes.
+    layout="dp":  pure data parallelism over ALL axes (batch spans the
+                  whole mesh, weights ZeRO-3 sharded over every axis and
+                  re-gathered at use) — wins for models whose weights fit
+                  per-chip, where TP activation all-reduces dominate.
+    """
+    import dataclasses
+    family, cfg, model = registry.get(arch)
+    if hasattr(cfg, "remat") and (not remat or remat_policy != "full"):
+        kw = {"remat": remat}
+        if hasattr(cfg, "remat_policy"):
+            kw["remat_policy"] = remat_policy
+        cfg = dataclasses.replace(cfg, **kw)
+        model = registry.build(cfg)
+    lm = getattr(model, "lm", model)
+    s = shp.SHAPES[shape_name]
+    seq, gb, kind = s["seq_len"], s["global_batch"], s["kind"]
+    if layout == "dp":
+        dp = meshmod.dp_axes(mesh) + ("model",)
+        tp = None
+    else:
+        dp = meshmod.dp_axes(mesh)
+        tp = "model"
+
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    # Serving keeps params TP-resident (no FSDP): no optimizer states to
+    # shard, and ZeRO-3 re-gather costs ~8 GB/device per decode token
+    # (§Perf iteration 4).
+    p_fsdp = dp if kind == "train" else None
+    pspecs = SH.param_specs(params_shapes, mesh, tp=tp, fsdp=p_fsdp)
+    n_params = RL.count_params(params_shapes)
+    n_active = RL.active_params(cfg, n_params)
+
+    if kind == "train":
+        opt_cfg = O.AdamWConfig()
+        step = TS.make_train_step(model, family, opt_cfg)
+        opt_shapes = jax.eval_shape(O.init_opt_state, params_shapes)
+        ospecs = O.zero1_specs(params_shapes, pspecs, data_axes=dp,
+                               axis_size=int(np.prod(
+                                   [mesh.shape[a] for a in dp])))
+        bspec = SH.batch_specs(kind, gb, mesh, dp=dp)
+        batch_shapes = input_specs(arch, shape_name)
+        bspecs = {k: (bspec if v.ndim == 2 else P(bspec[0], None, None))
+                  for k, v in batch_shapes.items()}
+        fn = step
+        args = (params_shapes, opt_shapes, batch_shapes)
+        shardings = (_shardings(params_shapes, pspecs, mesh),
+                     _shardings(opt_shapes, ospecs, mesh),
+                     _shardings(batch_shapes, bspecs, mesh))
+        model_flops = 6.0 * n_active * gb * seq
+        return fn, args, shardings, model_flops
+
+    if kind == "prefill":
+        cap = kvcache.capacity_for(cfg, seq)
+        if family == "encdec":
+            pre, _ = serve_step.make_encdec_steps(model)
+            ins = input_specs(arch, shape_name)
+
+            def fn(params, frames, tokens):
+                logits, state = pre(params, frames, tokens, cap)
+                return logits
+
+            bspec = SH.batch_specs(kind, gb, mesh, dp=dp)
+            args = (params_shapes, ins["frames"], ins["tokens"])
+            shardings = (_shardings(params_shapes, pspecs, mesh),
+                         NamedSharding(mesh, P(bspec[0], None, None)),
+                         NamedSharding(mesh, bspec))
+            return fn, args, shardings, 2.0 * n_active * gb * seq
+
+        prefill = serve_step.make_prefill(model, family)
+        state_shapes = jax.eval_shape(lambda: lm.init_state(gb, cap))
+        sspecs = SH.state_specs(state_shapes, mesh, dp=dp, tp=tp)
+        ins = input_specs(arch, shape_name)
+        bspec = SH.batch_specs(kind, gb, mesh, dp=dp)
+        args = (params_shapes, ins["tokens"], ins["lens"], state_shapes)
+        shardings = (_shardings(params_shapes, pspecs, mesh),
+                     NamedSharding(mesh, bspec),
+                     NamedSharding(mesh, P(bspec[0])),
+                     _shardings(state_shapes, sspecs, mesh))
+        return prefill, args, shardings, 2.0 * n_active * gb * seq
+
+    # decode
+    cap = kvcache.capacity_for(cfg, seq)
+    if family == "encdec":
+        _, dec = serve_step.make_encdec_steps(model)
+        state_shapes = jax.eval_shape(
+            lambda: model.init_state(
+                model.init(jax.random.PRNGKey(0)),
+                jnp.zeros((gb, cfg.n_audio_frames, cfg.d_model),
+                          jnp.bfloat16), gb, cap))
+        # init_state needs params: eval_shape the composite instead
+        def mk_state(params, frames):
+            return model.init_state(params, frames, gb, cap)
+        state_shapes = jax.eval_shape(
+            mk_state, params_shapes,
+            _sds((gb, cfg.n_audio_frames, cfg.d_model), jnp.bfloat16))
+        sspecs = SH.state_specs(state_shapes, mesh, dp=dp, tp=tp)
+
+        def fn(params, tok, state):
+            return dec(params, tok, state)
+
+        bspec = SH.batch_specs("decode", gb, mesh, dp=dp)
+        args = (params_shapes, _sds((gb, 1), jnp.int32), state_shapes)
+        shardings = (_shardings(params_shapes, pspecs, mesh),
+                     NamedSharding(mesh, bspec),
+                     _shardings(state_shapes, sspecs, mesh))
+        return fn, args, shardings, 2.0 * n_active * gb
+
+    decode = serve_step.make_decode(model, family)
+    state_shapes = jax.eval_shape(lambda: lm.init_state(gb, cap))
+    sspecs = SH.state_specs(state_shapes, mesh, dp=dp, tp=tp)
+    ins = input_specs(arch, shape_name)
+    dp_n = int(np.prod([mesh.shape[a] for a in dp]))
+    # single-token inputs: DP over batch when divisible, else replicated
+    # (the cache still gets sequence-parallel sharding via state_specs).
+    tok_spec = P(dp if len(dp) > 1 else dp[0], None) if gb % dp_n == 0 \
+        else P(None, None)
+    key_shape = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    args = (params_shapes, ins["tok"], ins["pos"], state_shapes, key_shape)
+    shardings = (_shardings(params_shapes, pspecs, mesh),
+                 NamedSharding(mesh, tok_spec),
+                 NamedSharding(mesh, P(tok_spec[0])),
+                 _shardings(state_shapes, sspecs, mesh),
+                 NamedSharding(mesh, P()))
+    return decode, args, shardings, 2.0 * n_active * gb
+
+
+def dryrun_cell(arch: str, shape_name: str, *, multi_pod=False, remat=True,
+                opt=False, layout: str = "tp", remat_policy: str = "full",
+                verbose=True):
+    """Lower + compile one cell; returns the result record dict.
+
+    opt=True enables the beyond-paper optimization set (shardctx weight
+    re-gather constraints); opt=False is the recorded baseline.
+    """
+    import contextlib
+
+    from repro.models import shardctx
+
+    mesh = meshmod.make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = int(np.prod(list(mesh.shape.values())))
+    fn, args, shardings, model_flops = build_cell(
+        arch, shape_name, mesh, remat=remat, layout=layout,
+        remat_policy=remat_policy)
+
+    tp_axis = None if layout == "dp" else "model"
+    ctx = shardctx.use(tp_axis=tp_axis, tp_size=mesh.shape["model"]) \
+        if opt else contextlib.nullcontext()
+    with mesh, ctx:
+        cost = CM.fn_cost(fn, *args)  # exact-trip-count flops/bytes (global)
+        jitted = jax.jit(fn, in_shardings=shardings)
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        rl = RL.analyze(arch, shape_name, mesh_name, chips, compiled,
+                        lowered, model_flops=model_flops, jaxpr_cost=cost)
+
+    rec = rl.to_dict()
+    rec["ok"] = True
+    rec["remat"] = remat
+    rec["variant"] = (f"opt-{layout}" if opt else "baseline")
+    if mem is not None:
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "generated_code_size_in_bytes"):
+            rec[f"mem_{attr}"] = getattr(mem, attr, None)
+    if verbose:
+        print(f"[{arch} x {shape_name} x {mesh_name}] OK  "
+              f"flops={rec['hlo_flops']:.3e} bytes={rec['hlo_bytes']:.3e} "
+              f"coll={rec['coll_bytes']:.3e} bottleneck={rec['bottleneck']}")
+        if mem is not None:
+            print(f"  memory_analysis: temp={rec.get('mem_temp_size_in_bytes')} "
+                  f"args={rec.get('mem_argument_size_in_bytes')}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--opt", action="store_true",
+                    help="enable beyond-paper sharding optimizations")
+    ap.add_argument("--layout", default="tp", choices=["tp", "dp"])
+    ap.add_argument("--remat-policy", default="full",
+                    choices=["full", "dots"])
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    arch_ids = [a for a in cfgmod.ARCH_IDS if a != "bytelm-100m"]
+    if args.all:
+        todo = [(a, s) for (a, s, run, _) in shp.cells(arch_ids) if run]
+    else:
+        todo = [(args.arch, args.shape)]
+
+    meshes = [False, True] if (args.both_meshes or args.multipod and args.all) \
+        else [args.multipod]
+
+    results = []
+    for arch, shape in todo:
+        for mp in meshes:
+            try:
+                rec = dryrun_cell(arch, shape, multi_pod=mp,
+                                  remat=not args.no_remat, opt=args.opt,
+                                  layout=args.layout,
+                                  remat_policy=args.remat_policy)
+            except Exception as e:  # noqa: BLE001
+                traceback.print_exc()
+                rec = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "ok": False, "error": f"{type(e).__name__}: {e}"}
+            results.append(rec)
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    n_ok = sum(r["ok"] for r in results)
+    print(f"\n{n_ok}/{len(results)} cells OK")
+    sys.exit(0 if n_ok == len(results) else 1)
+
+
+if __name__ == "__main__":
+    main()

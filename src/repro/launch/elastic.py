@@ -1,0 +1,82 @@
+"""Elastic scaling & failure handling.
+
+At 1000+ node scale, chip/host failures are routine.  The recovery
+protocol implemented here (and exercised in tests/test_distribution.py):
+
+  1. a failure is detected (heartbeat timeout / NCCL-equivalent error —
+     here: the caller reports ``failed`` chips);
+  2. ``plan_remesh`` computes the largest valid (data, model) sub-mesh of
+     the survivors — the TP axis is preserved (TP groups need complete
+     ICI neighborhoods), the DP axis shrinks;
+  3. every survivor restores the latest checkpoint — ``repro.train.
+     checkpoint`` restores across host counts (elastic reshard), and the
+     data pipeline ``skip_to``s the last completed step;
+  4. the step function is re-jitted for the new mesh: sharding specs are
+     *functions of the mesh*, so nothing else changes;
+  5. the global batch is kept constant by raising gradient-accumulation
+     microbatches (``micro_for``) — training math is unchanged, stragglers
+     from degraded hosts are absorbed at step granularity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+import jax
+
+from repro.launch import mesh as meshmod
+
+
+@dataclasses.dataclass
+class RemeshPlan:
+    data: int
+    model: int
+    n_chips: int
+    n_micro: int          # microbatches to keep the global batch constant
+    lost_fraction: float
+
+
+def plan_remesh(old_shape, failed_chips: int, global_batch: int,
+                base_micro: int = 1) -> Optional[RemeshPlan]:
+    """Largest valid sub-mesh after ``failed_chips`` failures.
+
+    Keeps the model axis intact (TP needs full groups); shrinks data.
+    Returns None when fewer than one full TP group survives.
+    """
+    model = old_shape[-1]
+    total = int(np.prod(old_shape))
+    survivors = total - failed_chips
+    new_data = survivors // model
+    if new_data < 1:
+        return None
+    # keep global batch: scale microbatches by the DP shrink factor
+    old_data = total // model
+    scale = -(-old_data // new_data)  # ceil
+    n_micro = base_micro * scale
+    while global_batch % (new_data * n_micro) and n_micro < global_batch:
+        n_micro += 1
+    return RemeshPlan(data=new_data, model=model,
+                      n_chips=new_data * model, n_micro=n_micro,
+                      lost_fraction=failed_chips / total)
+
+
+def make_mesh_from_plan(plan: RemeshPlan, devices=None):
+    devices = devices if devices is not None else jax.devices()
+    need = plan.data * plan.model
+    dev = np.array(devices[:need]).reshape(plan.data, plan.model)
+    from jax.sharding import Mesh
+    return Mesh(dev, ("data", "model"))
+
+
+def straggler_skip_plan(step: int, n_hosts: int, global_batch: int):
+    """Deterministic host->slots assignment for step ``step``.
+
+    A restarted host calls this to know exactly which documents it owes —
+    the same rule the data pipeline uses, so no replay or coordination is
+    required (the pipeline is a pure function of (seed, step, slot)).
+    """
+    return {h: [k for k in range(global_batch) if k % n_hosts == h]
+            for h in range(n_hosts)}

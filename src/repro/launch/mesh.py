@@ -1,0 +1,43 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a function (not a module-level constant) so
+importing this module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import, and everything else sees the real single-device platform.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n_devices=None, model: int = 2):
+    """Small mesh over the real host devices (tests / examples)."""
+    n = n_devices or len(jax.devices())
+    model = min(model, n)
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def dp_axes(mesh):
+    """Data-parallel axes: ('pod', 'data') when a pod axis exists."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def largest_submesh(shape, failed: int):
+    """Elastic scaling helper: biggest (data, model) grid from the
+    surviving chips after ``failed`` failures, keeping the model axis
+    (TP requires full ICI groups, so we shrink the data axis)."""
+    data, model = shape[-2], shape[-1]
+    chips = int(np.prod(shape)) - failed
+    new_data = chips // model
+    return (new_data, model)

@@ -1,0 +1,1 @@
+from repro.models import common, lm, encdec, vlm, registry  # noqa: F401

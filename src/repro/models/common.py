@@ -1,0 +1,535 @@
+"""Shared model layers (pure JAX, pytree params, functional apply).
+
+Every layer is a pair of functions: ``init_*(key, cfg) -> params`` and a
+pure ``apply`` that threads explicit state (KV caches, SSM states) so the
+same code serves training (no cache), prefill (build cache) and decode
+(single-token update).  All matmul-heavy ops accumulate in float32
+(``preferred_element_type``) regardless of the parameter dtype — the MXU
+bf16xbf16->f32 contract.
+
+Attention is **chunked** (online-softmax streaming over KV blocks): the
+(S, S) score matrix is never materialised, which is what makes the 32k
+prefill shapes compile within HBM. Sliding-window and causal masks are
+applied per chunk.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import shardctx
+
+
+def _dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Normalisation
+
+
+def init_rmsnorm(dim, dtype):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (RoPE + sectioned M-RoPE)
+
+
+def rope_freqs(head_dim, theta=10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, pos, theta=10000.0):
+    """x: (..., S, H, D); pos: broadcastable to (..., S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    ang = pos[..., None].astype(jnp.float32) * freqs   # (..., S, D/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], -1).astype(x.dtype)
+
+
+def apply_mrope(x, pos3, sections, theta=10000.0):
+    """Multimodal RoPE (Qwen2-VL): frequency bands split across
+    (temporal, height, width) position streams.
+
+    x: (..., S, H, D); pos3: (3, ..., S); sections: 3 ints summing to D/2.
+    With pos3[0]==pos3[1]==pos3[2] (pure text) this equals standard RoPE.
+    """
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    band = jnp.concatenate(
+        [jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)])
+    pos = jnp.take_along_axis(
+        jnp.moveaxis(pos3, 0, -1),                     # (..., S, 3)
+        jnp.broadcast_to(band, pos3.shape[1:] + (d // 2,)), axis=-1)
+    ang = pos.astype(jnp.float32) * freqs              # (..., S, D/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], -1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Grouped-query attention with chunked (online-softmax) scoring
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    window: Optional[int] = None      # sliding-window size (None = full)
+    rope_theta: float = 10000.0
+    mrope_sections: Optional[tuple] = None  # (t, h, w) for M-RoPE
+
+
+def init_attn(key, cfg: AttnConfig, dtype):
+    ks = jax.random.split(key, 4)
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": _dense_init(ks[0], (d, h * hd), dtype),
+        "wk": _dense_init(ks[1], (d, kv * hd), dtype),
+        "wv": _dense_init(ks[2], (d, kv * hd), dtype),
+        "wo": _dense_init(ks[3], (h * hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd, dtype)
+        p["k_norm"] = init_rmsnorm(hd, dtype)
+    return p
+
+
+def _project_qkv(params, cfg: AttnConfig, x, pos):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    f32 = functools.partial(jnp.einsum, preferred_element_type=jnp.float32)
+    q = f32("bsd,de->bse", x, shardctx.gather("wq", params["wq"]))
+    k = f32("bsd,de->bse", x, shardctx.gather("wk", params["wk"]))
+    v = f32("bsd,de->bse", x, shardctx.gather("wv", params["wv"]))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(q.dtype)
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+    q = q.reshape(b, s, h, hd).astype(x.dtype)
+    k = k.reshape(b, s, kv, hd).astype(x.dtype)
+    v = v.reshape(b, s, kv, hd).astype(x.dtype)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    if cfg.mrope_sections is not None:
+        pos3 = pos if pos.ndim == 3 else jnp.broadcast_to(pos, (3,) + pos.shape)
+        q = apply_mrope(q, pos3, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, pos3, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    return q, k, v
+
+
+def chunked_attention(q, k, v, q_pos, k_pos, window=None, chunk=1024):
+    """Online-softmax attention without materialising (Sq, Sk) scores.
+
+    q: (B, Sq, H, D); k/v: (B, Sk, KV, D); q_pos/k_pos: (B, S*) int32.
+    GQA: H must be a multiple of KV; heads are grouped for the dot.
+    Mask: causal (k_pos <= q_pos) plus optional sliding window
+    (q_pos - k_pos < window).  Positions < 0 in k_pos mark empty cache
+    slots and are always masked.
+    """
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, d)
+    scale = 1.0 / math.sqrt(d)
+
+    nchunk = -(-sk // chunk)
+    pad = nchunk * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+    kc = k.reshape(b, nchunk, chunk, kv, d)
+    vc = v.reshape(b, nchunk, chunk, kv, d)
+    pc = k_pos.reshape(b, nchunk, chunk)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kb, vb, pb = blk
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qg, kb,
+                       preferred_element_type=jnp.float32) * scale
+        mask = pb[:, None, None, None, :] <= q_pos[:, :, None, None, None]
+        mask &= pb[:, None, None, None, :] >= 0
+        if window is not None:
+            mask &= (q_pos[:, :, None, None, None]
+                     - pb[:, None, None, None, :]) < window
+        s = jnp.where(mask, s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, -1))
+        # guard: fully-masked rows keep m = -inf; exp(-inf - -inf) -> use 0
+        safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - safe_m[..., None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - safe_m), 0.0)
+        l_new = l * corr + jnp.sum(p, -1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqkgc,bckd->bqkgd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, sq, kv, g), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, sq, kv, g), jnp.float32)
+    a0 = jnp.zeros((b, sq, kv, g, d), jnp.float32)
+    (m, l, acc), _ = lax.scan(
+        step, (m0, l0, a0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.moveaxis(pc, 1, 0)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def attention(params, cfg: AttnConfig, x, pos, cache=None, chunk=1024):
+    """Full attention block.  cache: None | dict(k, v, pos, cursor).
+
+    Training/prefill: cache is None (self-attention over x) or an empty
+    cache dict to fill.  Decode: x is (B, 1, D) and cache holds history.
+    Returns (y, new_cache).
+    """
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(params, cfg, x, pos)
+    tpos = pos[0] if pos.ndim == 3 else pos  # temporal stream for masking
+
+    if cache is None:
+        y = chunked_attention(q, k, v, tpos, tpos, cfg.window, chunk)
+        new_cache = None
+    else:
+        # Decode layout: the KV cache is batch-sharded (one request set
+        # per chip); pin q/k/v to the same layout so the chunked scan
+        # slices the cache without resharding (the baseline all-gathered
+        # every 1024-slot chunk — 137 GB/device/token on qwen2.5-32b
+        # decode_32k; EXPERIMENTS.md §Perf iteration 3).  Single-token
+        # steps only: pinning the 32k-prefill activations to the batch
+        # axis regressed prefill 25x (§Perf lessons).
+        if s == 1:
+            q = shardctx.act(q, ("dp", None, None, None))
+            k = shardctx.act(k, ("dp", None, None, None))
+            v = shardctx.act(v, ("dp", None, None, None))
+        ck, cv, cpos = cache["k"], cache["v"], cache["pos"]
+        cur = cache["cursor"]                     # (B,) per-row cursors
+        cap = ck.shape[1]
+        # ring-buffer write (sliding window) or linear write (full cache)
+        rows = jnp.arange(b)[:, None]
+        slot = (cur[:, None] + jnp.arange(s)[None, :]) % cap   # (B, S)
+        ck = ck.at[rows, slot].set(k)
+        cv = cv.at[rows, slot].set(v)
+        cpos = cpos.at[rows, slot].set(jnp.broadcast_to(tpos, (b, s)))
+        y = chunked_attention(q, ck, cv, tpos, cpos, cfg.window, chunk)
+        new_cache = {"k": ck, "v": cv, "pos": cpos, "cursor": cur + s}
+
+    out = jnp.einsum("bsf,fd->bsd", y.reshape(b, s, -1),
+                     shardctx.gather("wo", params["wo"]),
+                     preferred_element_type=jnp.float32)
+    return out.astype(x.dtype), new_cache
+
+
+def init_attn_cache(cfg: AttnConfig, batch, capacity, dtype):
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, capacity, kv, hd), dtype),
+        "v": jnp.zeros((batch, capacity, kv, hd), dtype),
+        "pos": jnp.full((batch, capacity), -1, jnp.int32),
+        "cursor": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+
+
+def init_mlp(key, d_model, d_ff, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "wi": _dense_init(ks[0], (d_model, d_ff), dtype),
+        "wg": _dense_init(ks[1], (d_model, d_ff), dtype),
+        "wo": _dense_init(ks[2], (d_ff, d_model), dtype),
+    }
+
+
+def mlp(params, x):
+    f32 = functools.partial(jnp.einsum, preferred_element_type=jnp.float32)
+    h = jax.nn.silu(f32("bsd,df->bsf", x, shardctx.gather("wg", params["wg"])))
+    h = h * f32("bsd,df->bsf", x, shardctx.gather("wi", params["wi"]))
+    return f32("bsf,fd->bsd", h.astype(x.dtype),
+               shardctx.gather("wo", params["wo"])).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (top-k router, capacity-gather dispatch, optional
+# shared experts — covers grok-1 (8e top-2) and deepseek-moe (2 shared +
+# 64 routed top-6 fine-grained))
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int                 # per-expert hidden size
+    n_experts: int
+    top_k: int
+    n_shared: int = 0         # shared (always-on) experts
+    capacity_factor: float = 1.25
+    min_capacity: int = 8     # floor so tiny decode batches never drop
+
+
+def init_moe(key, cfg: MoEConfig, dtype):
+    ks = jax.random.split(key, 5)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    p = {
+        "router": _dense_init(ks[0], (d, e), jnp.float32),
+        "wi": _dense_init(ks[1], (e, d, f), dtype),
+        "wg": _dense_init(ks[2], (e, d, f), dtype),
+        "wo": _dense_init(ks[3], (e, f, d), dtype),
+    }
+    if cfg.n_shared:
+        p["shared"] = init_mlp(ks[4], d, f * cfg.n_shared, dtype)
+    return p
+
+
+def moe(params, cfg: MoEConfig, x):
+    """Capacity-based MoE: gather tokens per expert, batched expert matmul,
+    weighted scatter back.  Static shapes throughout (drops overflow)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    cap = max(1, int(t * k / e * cfg.capacity_factor),
+              min(t * k, cfg.min_capacity))
+
+    xf = x.reshape(t, d)
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        params["router"])
+    gates, idx = lax.top_k(jax.nn.softmax(logits, -1), k)   # (t, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # position of token-copy (t, k) within its expert's buffer
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)          # (t, k, e)
+    flat_oh = onehot.reshape(t * k, e)
+    pos_in_e = jnp.cumsum(flat_oh, 0) * flat_oh - 1           # (t*k, e)
+    slot = jnp.max(pos_in_e, -1)                              # (t*k,)
+    eid = idx.reshape(t * k)
+    keep = slot < cap
+
+    # scatter token ids into (e, cap) gather indices (t = sentinel)
+    dest = jnp.where(keep, eid * cap + slot, e * cap)
+    src_token = jnp.arange(t * k) // k
+    gather_idx = jnp.full((e * cap + 1,), t, jnp.int32).at[dest].set(
+        src_token, mode="drop")[:-1].reshape(e, cap)
+
+    xg = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)])[gather_idx]
+    # Pin the dispatched tokens to the data axis: the expert row-matmul's
+    # partial-sum all-reduce then moves 1/dp-sized shards instead of the
+    # full (e, cap, d) tensor (EXPERIMENTS.md §Perf grok iteration).
+    xg = shardctx.act(xg, (None, "dp", None))
+    f32 = functools.partial(jnp.einsum, preferred_element_type=jnp.float32)
+    h = jax.nn.silu(f32("ecd,edf->ecf", xg, shardctx.gather("wg", params["wg"])))
+    h = h * f32("ecd,edf->ecf", xg, shardctx.gather("wi", params["wi"]))
+    ye = f32("ecf,efd->ecd", h.astype(x.dtype),
+             shardctx.gather("wo", params["wo"]))  # (e, cap, d)
+    ye = shardctx.act(ye.astype(x.dtype), (None, "dp", None))
+
+    # combine: each token-copy reads back its expert output, weighted.
+    # 2-D advanced indexing (not reshape-then-gather): a flatten of the
+    # dp-sharded cap dim would force an all-gather of ye.
+    copy_val = ye[jnp.where(keep, eid, 0), jnp.where(keep, slot, 0)]
+    w = gates.reshape(t * k)[:, None] * keep[:, None]
+    out = jnp.zeros((t, d), jnp.float32).at[src_token].add(
+        copy_val.astype(jnp.float32) * w)
+
+    if cfg.n_shared:
+        out = out + mlp(params["shared"], x).reshape(t, d).astype(jnp.float32)
+
+    aux = _load_balance_loss(logits, idx, e)
+    return out.reshape(b, s, d).astype(x.dtype), aux
+
+
+def _load_balance_loss(logits, idx, e):
+    """Switch-style auxiliary load-balancing loss."""
+    probs = jax.nn.softmax(logits, -1)
+    me = jnp.mean(probs, 0)
+    ce = jnp.mean(jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32), 0)
+    return e * jnp.sum(me * ce)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma real-gated linear recurrent unit)
+
+
+def init_rglru(key, d, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "lam": jnp.full((d,), 2.0, jnp.float32),  # softplus-param of decay
+        "wa": _dense_init(ks[0], (d, d), dtype),  # recurrence gate
+        "wx": _dense_init(ks[1], (d, d), dtype),  # input gate
+    }
+
+
+def rglru(params, x, state=None, c=8.0):
+    """x: (B, S, D). Associative-scan linear recurrence.
+
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+    a_t = exp(-c * softplus(lam) * sigmoid(r_t))
+    Returns (y, last_state).
+    """
+    b, s, d = x.shape
+    f32 = functools.partial(jnp.einsum, preferred_element_type=jnp.float32)
+    r = jax.nn.sigmoid(f32("bsd,de->bse", x, shardctx.gather("wa", params["wa"])))
+    i = jax.nn.sigmoid(f32("bsd,de->bse", x, shardctx.gather("wx", params["wx"])))
+    log_a = -c * jax.nn.softplus(params["lam"]) * r         # (B,S,D) f32
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9)) * (
+        i * x.astype(jnp.float32))
+
+    def comb(p, q):
+        a1, u1 = p
+        a2, u2 = q
+        return a1 * a2, u1 * a2 + u2
+
+    if state is not None:
+        gated = gated.at[:, 0].add(a[:, 0] * state)
+    a_sc, h = lax.associative_scan(comb, (a, gated), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 selective SSM block
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_model: int
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+
+    @property
+    def d_inner(self):
+        return self.expand * self.d_model
+
+
+def init_mamba(key, cfg: MambaConfig, dtype):
+    ks = jax.random.split(key, 7)
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.d_state
+    dt_rank = max(1, d // 16)
+    return {
+        "in_proj": _dense_init(ks[0], (d, 2 * di), dtype),
+        "conv_w": _dense_init(ks[1], (cfg.d_conv, di), dtype, scale=0.5),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": _dense_init(ks[2], (di, dt_rank + 2 * n), dtype),
+        "dt_proj": _dense_init(ks[3], (dt_rank, di), dtype),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                  (di, 1))),   # (di, n)
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": _dense_init(ks[4], (di, d), dtype),
+    }
+
+
+def mamba(params, cfg: MambaConfig, x, state=None):
+    """x: (B, S, D) -> (y, new_state).
+
+    state: None (training) or dict(conv: (B, d_conv-1, di), ssm: (B, di, n)).
+    Selective scan via associative_scan (parallel in S).
+    """
+    b, s, d = x.shape
+    di, n = cfg.d_inner, cfg.d_state
+    dt_rank = params["dt_proj"].shape[0]
+    f32 = functools.partial(jnp.einsum, preferred_element_type=jnp.float32)
+
+    xz = f32("bsd,de->bse", x,
+             shardctx.gather("in_proj", params["in_proj"])).astype(x.dtype)
+    xi, z = xz[..., :di], xz[..., di:]
+
+    # depthwise causal conv1d
+    kw = cfg.d_conv
+    if state is not None:
+        xpad = jnp.concatenate([state["conv"].astype(xi.dtype), xi], 1)
+        new_conv = xpad[:, -(kw - 1):].astype(jnp.float32)
+    else:
+        xpad = jnp.pad(xi, ((0, 0), (kw - 1, 0), (0, 0)))
+        new_conv = xpad[:, -(kw - 1):].astype(jnp.float32)
+    conv = sum(xpad[:, i: i + s] * params["conv_w"][i] for i in range(kw))
+    xc = jax.nn.silu(conv + params["conv_b"])
+
+    # input-dependent SSM parameters
+    dbc = f32("bsi,ie->bse", xc, shardctx.gather("x_proj", params["x_proj"]))
+    dt = jax.nn.softplus(
+        f32("bsr,ri->bsi", dbc[..., :dt_rank].astype(x.dtype),
+            params["dt_proj"]) + params["dt_bias"])            # (B,S,di)
+    Bc = dbc[..., dt_rank: dt_rank + n]                        # (B,S,n)
+    Cc = dbc[..., dt_rank + n:]                                # (B,S,n)
+
+    A = -jnp.exp(params["A_log"])                              # (di,n)
+    dA = jnp.exp(dt[..., None] * A)                            # (B,S,di,n)
+    dBx = (dt * xc.astype(jnp.float32))[..., None] * Bc[:, :, None, :]
+
+    if state is not None:
+        dBx = dBx.at[:, 0].add(dA[:, 0] * state["ssm"])
+
+    def comb(p, q):
+        a1, u1 = p
+        a2, u2 = q
+        return a1 * a2, u1 * a2 + u2
+
+    _, h = lax.associative_scan(comb, (dA, dBx), axis=1)       # (B,S,di,n)
+    y = jnp.einsum("bsin,bsn->bsi", h, Cc) + params["D"] * xc.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = f32("bsi,id->bsd", y.astype(x.dtype),
+              shardctx.gather("out_proj", params["out_proj"]))
+    new_state = {"conv": new_conv, "ssm": h[:, -1]}
+    return out.astype(x.dtype), new_state
+
+
+def init_mamba_state(cfg: MambaConfig, batch):
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), jnp.float32),
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+
+
+def init_embedding(key, vocab, d_model, dtype):
+    return {"table": _dense_init(key, (vocab, d_model), dtype, scale=0.02)}
+
+
+def embed(params, ids):
+    return shardctx.gather("table", params["table"])[ids]
+
+
+def unembed(params, x):
+    return jnp.einsum("bsd,vd->bsv", x,
+                      shardctx.gather("table", params["table"]),
+                      preferred_element_type=jnp.float32)

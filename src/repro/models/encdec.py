@@ -1,0 +1,212 @@
+"""Encoder-decoder transformer (Whisper-style).
+
+The audio conv frontend is a STUB per the assignment: ``input_specs()``
+feeds precomputed mel-frame embeddings of shape (B, n_frames, d_model)
+directly to the encoder.  Encoder layers are bidirectional; decoder layers
+are causal self-attention + cross-attention over the encoder output.
+Cross-attention KV is computed once per sequence and cached for decode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import common as C
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    name: str
+    n_layers: int              # decoder layers (encoder matches)
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    n_audio_frames: int = 1500
+    dtype: str = "bfloat16"
+    remat: bool = True
+
+    @property
+    def hd(self):
+        return self.d_model // self.n_heads
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    def attn_cfg(self):
+        return C.AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, head_dim=self.hd)
+
+
+def _cross_attention(p, cfg: EncDecConfig, x, enc_kv):
+    """Bidirectional attention of x over precomputed encoder (k, v)."""
+    b, s, _ = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    k, v = enc_kv
+    q = jnp.einsum("bsd,de->bse", x, p["wq"],
+                   preferred_element_type=jnp.float32)
+    q = q.reshape(b, s, h, hd).astype(x.dtype)
+    se = k.shape[1]
+    qpos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    kpos = jnp.zeros((b, se), jnp.int32)   # kpos=0 <= qpos: full visibility
+    y = C.chunked_attention(q, k, v, qpos, kpos)
+    out = jnp.einsum("bsf,fd->bsd", y.reshape(b, s, -1), p["wo"],
+                     preferred_element_type=jnp.float32)
+    return out.astype(x.dtype)
+
+
+def _init_cross(key, cfg: EncDecConfig, dt):
+    ks = jax.random.split(key, 4)
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    return {
+        "wq": C._dense_init(ks[0], (d, h * hd), dt),
+        "wk": C._dense_init(ks[1], (d, kv * hd), dt),
+        "wv": C._dense_init(ks[2], (d, kv * hd), dt),
+        "wo": C._dense_init(ks[3], (h * hd, d), dt),
+    }
+
+
+class EncDecLM:
+    def __init__(self, cfg: EncDecConfig):
+        self.cfg = cfg
+
+    def init(self, key):
+        cfg = self.cfg
+        dt = cfg.jdtype
+        k_enc, k_dec, k_emb, k_pos = jax.random.split(key, 4)
+
+        def enc_layer(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "ln1": C.init_rmsnorm(cfg.d_model, dt),
+                "attn": C.init_attn(k1, cfg.attn_cfg(), dt),
+                "ln2": C.init_rmsnorm(cfg.d_model, dt),
+                "mlp": C.init_mlp(k2, cfg.d_model, cfg.d_ff, dt),
+            }
+
+        def dec_layer(k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            return {
+                "ln1": C.init_rmsnorm(cfg.d_model, dt),
+                "attn": C.init_attn(k1, cfg.attn_cfg(), dt),
+                "lnx": C.init_rmsnorm(cfg.d_model, dt),
+                "xattn": _init_cross(k2, cfg, dt),
+                "ln2": C.init_rmsnorm(cfg.d_model, dt),
+                "mlp": C.init_mlp(k3, cfg.d_model, cfg.d_ff, dt),
+            }
+
+        return {
+            "embed": C.init_embedding(k_emb, cfg.vocab, cfg.d_model, dt),
+            "enc_pos": C._dense_init(k_pos, (cfg.n_audio_frames,
+                                             cfg.d_model), dt, scale=0.02),
+            "enc": jax.vmap(enc_layer)(jax.random.split(k_enc, cfg.n_layers)),
+            "dec": jax.vmap(dec_layer)(jax.random.split(k_dec, cfg.n_layers)),
+            "ln_f": C.init_rmsnorm(cfg.d_model, dt),
+        }
+
+    def encode(self, params, frames):
+        """frames: (B, T, d_model) stub mel embeddings -> encoder output."""
+        cfg = self.cfg
+        x = frames.astype(cfg.jdtype) + params["enc_pos"][None, : frames.shape[1]]
+        b, t, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+
+        def body(x, lp):
+            # bidirectional: query every position against every position by
+            # zeroing the causal comparison (kpos=0)
+            h = C.rmsnorm(lp["ln1"], x)
+            q, k, v = C._project_qkv(lp["attn"], cfg.attn_cfg(), h, pos)
+            y = C.chunked_attention(
+                q, k, v, jnp.full_like(pos, t), pos)  # qpos=t: sees all
+            y = jnp.einsum("bsf,fd->bsd", y.reshape(b, t, -1),
+                           lp["attn"]["wo"],
+                           preferred_element_type=jnp.float32).astype(x.dtype)
+            x = x + y
+            x = x + C.mlp(lp["mlp"], C.rmsnorm(lp["ln2"], x))
+            return x, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = lax.scan(body, x, params["enc"])
+        return x
+
+    def _enc_kv(self, params, enc_out):
+        """Precompute per-decoder-layer cross-attention K/V."""
+        cfg = self.cfg
+        b, t, _ = enc_out.shape
+        kv, hd = cfg.n_kv_heads, cfg.hd
+
+        def proj(lp):
+            k = jnp.einsum("bsd,de->bse", enc_out, lp["xattn"]["wk"],
+                           preferred_element_type=jnp.float32)
+            v = jnp.einsum("bsd,de->bse", enc_out, lp["xattn"]["wv"],
+                           preferred_element_type=jnp.float32)
+            return (k.reshape(b, t, kv, hd).astype(enc_out.dtype),
+                    v.reshape(b, t, kv, hd).astype(enc_out.dtype))
+
+        return jax.vmap(proj)(params["dec"])
+
+    def apply(self, params, frames, tokens, state=None):
+        """Returns (logits, new_state, aux).
+
+        state: None (teacher forcing) or dict(kv_caches, enc_kv) for decode.
+        """
+        cfg = self.cfg
+        if state is not None and "enc_kv" in state:
+            enc_kv = state["enc_kv"]
+        else:
+            enc_out = self.encode(params, frames)
+            enc_kv = self._enc_kv(params, enc_out)
+        x = C.embed(params["embed"], tokens)
+        b, s = tokens.shape
+        if state is not None:
+            pos0 = state["pos0"]
+            pos = pos0 + jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32),
+                                          (b, s))
+        else:
+            pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+        caches = state["caches"] if state is not None else None
+
+        def body(x, xs):
+            lp = xs[0] if caches is not None else xs[0]
+            ekv = xs[1]
+            cache = xs[2] if caches is not None else None
+            h, nc = C.attention(lp["attn"], cfg.attn_cfg(),
+                                C.rmsnorm(lp["ln1"], x), pos, cache)
+            x = x + h
+            x = x + _cross_attention(lp["xattn"], cfg,
+                                     C.rmsnorm(lp["lnx"], x), ekv)
+            x = x + C.mlp(lp["mlp"], C.rmsnorm(lp["ln2"], x))
+            return x, nc
+
+        if cfg.remat and state is None:
+            body = jax.checkpoint(body)
+        xs = (params["dec"], enc_kv, caches) if caches is not None else (
+            params["dec"], enc_kv)
+        x, new_caches = lax.scan(body, x, xs)
+        x = C.rmsnorm(params["ln_f"], x)
+        logits = C.unembed(params["embed"], x)
+        new_state = None
+        if state is not None:
+            new_state = {"enc_kv": enc_kv, "caches": new_caches,
+                         "pos0": pos0 + s}
+        return logits, new_state, jnp.float32(0)
+
+    def init_state(self, params, frames, batch, capacity):
+        cfg = self.cfg
+        enc_out = self.encode(params, frames)
+        one = C.init_attn_cache(cfg.attn_cfg(), batch, capacity, cfg.jdtype)
+        caches = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), one)
+        return {"enc_kv": self._enc_kv(params, enc_out), "caches": caches,
+                "pos0": jnp.int32(0)}

@@ -1,0 +1,311 @@
+"""Generic decoder-only LM covering dense / MoE / Griffin-hybrid / Mamba.
+
+A model is a sequence of **segments**; each segment is ``count`` structurally
+identical layers whose parameters are stacked along a leading axis and
+executed with ``lax.scan`` — the MaxText pattern that keeps trace/compile
+time O(1) in depth (one layer traced per segment, not per layer).  Mixed
+architectures (RecurrentGemma's 2-recurrent:1-attention pattern,
+DeepSeekMoE's dense first layer) become short segment lists.
+
+Layer kinds:
+  * ``dense``   — GQA attention + SwiGLU MLP (llama/qwen/granite family)
+  * ``moe``     — GQA attention + top-k MoE (grok, deepseek-moe)
+  * ``griffin`` — composite period: RG-LRU block x2 + local attention
+  * ``rec``     — single RG-LRU block (pattern remainders)
+  * ``mamba``   — Mamba-1 selective-SSM block (attention-free)
+
+Every kind threads an explicit per-layer state (KV cache / recurrent
+state), so one code path serves train (state=None), prefill and decode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import common as C
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    pattern: str = "dense"            # dense | moe | griffin | mamba
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    window: Optional[int] = None      # sliding-window attention (SWA)
+    local_window: int = 2048          # griffin local-attention window
+    rope_theta: float = 10000.0
+    mrope_sections: Optional[tuple] = None
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared: int = 0
+    moe_d_ff: Optional[int] = None    # routed-expert hidden (deepseek: 1408)
+    first_dense: bool = False         # deepseek: layer 0 is a dense MLP
+    dense_d_ff: Optional[int] = None  # hidden of that dense layer (10944)
+    capacity_factor: float = 1.25     # MoE; 8.0 in reduced configs => no drops
+    # Mamba
+    ssm_state: int = 16
+    # misc
+    dtype: str = "bfloat16"
+    remat: bool = True
+    remat_policy: str = "full"   # full | dots (save matmul outputs)
+
+    @property
+    def hd(self):
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    def attn_cfg(self, window=None):
+        return C.AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, head_dim=self.hd,
+            qkv_bias=self.qkv_bias, qk_norm=self.qk_norm,
+            window=window if window is not None else self.window,
+            rope_theta=self.rope_theta, mrope_sections=self.mrope_sections)
+
+    def moe_cfg(self):
+        return C.MoEConfig(
+            d_model=self.d_model, d_ff=self.moe_d_ff or self.d_ff,
+            n_experts=self.n_experts, top_k=self.top_k,
+            n_shared=self.n_shared, capacity_factor=self.capacity_factor)
+
+    def mamba_cfg(self):
+        return C.MambaConfig(d_model=self.d_model, d_state=self.ssm_state)
+
+    def segments(self) -> Sequence[Tuple[str, int]]:
+        """(kind, count) list; counts sum to n_layers (griffin periods
+        count 3 layers each)."""
+        if self.pattern == "dense":
+            return (("dense", self.n_layers),)
+        if self.pattern == "moe":
+            if self.first_dense:
+                return (("dense", 1), ("moe", self.n_layers - 1))
+            return (("moe", self.n_layers),)
+        if self.pattern == "griffin":
+            periods, rem = divmod(self.n_layers, 3)
+            segs = [("griffin", periods)]
+            if rem:
+                segs.append(("rec", rem))
+            return tuple(segs)
+        if self.pattern == "mamba":
+            return (("mamba", self.n_layers),)
+        raise ValueError(self.pattern)
+
+
+# ---------------------------------------------------------------------------
+# per-kind init / apply / state-init
+
+
+def _init_layer(key, cfg: LMConfig, kind: str):
+    dt = cfg.jdtype
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    if kind == "dense":
+        d_ff = cfg.dense_d_ff if (cfg.pattern == "moe" and cfg.dense_d_ff) \
+            else cfg.d_ff
+        return {
+            "ln1": C.init_rmsnorm(d, dt),
+            "attn": C.init_attn(ks[0], cfg.attn_cfg(), dt),
+            "ln2": C.init_rmsnorm(d, dt),
+            "mlp": C.init_mlp(ks[1], d, d_ff, dt),
+        }
+    if kind == "moe":
+        return {
+            "ln1": C.init_rmsnorm(d, dt),
+            "attn": C.init_attn(ks[0], cfg.attn_cfg(), dt),
+            "ln2": C.init_rmsnorm(d, dt),
+            "moe": C.init_moe(ks[1], cfg.moe_cfg(), dt),
+        }
+    if kind == "griffin":
+        sub = {}
+        for j in range(2):
+            sub[f"rec{j}"] = {
+                "ln1": C.init_rmsnorm(d, dt),
+                "rglru": C.init_rglru(ks[2 * j], d, dt),
+                "ln2": C.init_rmsnorm(d, dt),
+                "mlp": C.init_mlp(ks[2 * j + 1], d, cfg.d_ff, dt),
+            }
+        sub["attn"] = {
+            "ln1": C.init_rmsnorm(d, dt),
+            "attn": C.init_attn(ks[4], cfg.attn_cfg(cfg.local_window), dt),
+            "ln2": C.init_rmsnorm(d, dt),
+            "mlp": C.init_mlp(ks[5], d, cfg.d_ff, dt),
+        }
+        return sub
+    if kind == "rec":
+        return {
+            "ln1": C.init_rmsnorm(d, dt),
+            "rglru": C.init_rglru(ks[0], d, dt),
+            "ln2": C.init_rmsnorm(d, dt),
+            "mlp": C.init_mlp(ks[1], d, cfg.d_ff, dt),
+        }
+    if kind == "mamba":
+        return {
+            "ln": C.init_rmsnorm(d, dt),
+            "mamba": C.init_mamba(ks[0], cfg.mamba_cfg(), dt),
+        }
+    raise ValueError(kind)
+
+
+def _init_state(cfg: LMConfig, kind: str, batch, capacity):
+    dt = cfg.jdtype
+    if kind == "dense" or kind == "moe":
+        cap = capacity if cfg.window is None else min(capacity, cfg.window)
+        return C.init_attn_cache(cfg.attn_cfg(), batch, cap, dt)
+    if kind == "griffin":
+        cap = min(capacity, cfg.local_window)
+        return {
+            "rec0": jnp.zeros((batch, cfg.d_model), jnp.float32),
+            "rec1": jnp.zeros((batch, cfg.d_model), jnp.float32),
+            "attn": C.init_attn_cache(
+                cfg.attn_cfg(cfg.local_window), batch, cap, dt),
+        }
+    if kind == "rec":
+        return jnp.zeros((batch, cfg.d_model), jnp.float32)
+    if kind == "mamba":
+        return C.init_mamba_state(cfg.mamba_cfg(), batch)
+    raise ValueError(kind)
+
+
+def _apply_layer(cfg: LMConfig, kind: str, p, x, pos, state):
+    """Returns (x, new_state, aux_loss)."""
+    aux = jnp.float32(0)
+    if kind in ("dense", "moe"):
+        h, new_cache = C.attention(p["attn"], cfg.attn_cfg(),
+                                   C.rmsnorm(p["ln1"], x), pos, state)
+        x = x + h
+        if kind == "dense":
+            x = x + C.mlp(p["mlp"], C.rmsnorm(p["ln2"], x))
+        else:
+            y, aux = C.moe(p["moe"], cfg.moe_cfg(), C.rmsnorm(p["ln2"], x))
+            x = x + y
+        return x, new_cache, aux
+    if kind == "griffin":
+        new_state = {}
+        for j in range(2):
+            sp = p[f"rec{j}"]
+            st = state[f"rec{j}"] if state is not None else None
+            h, ns = C.rglru(sp["rglru"], C.rmsnorm(sp["ln1"], x), st)
+            x = x + h
+            x = x + C.mlp(sp["mlp"], C.rmsnorm(sp["ln2"], x))
+            new_state[f"rec{j}"] = ns
+        ap = p["attn"]
+        st = state["attn"] if state is not None else None
+        h, nc = C.attention(ap["attn"], cfg.attn_cfg(cfg.local_window),
+                            C.rmsnorm(ap["ln1"], x), pos, st)
+        x = x + h
+        x = x + C.mlp(ap["mlp"], C.rmsnorm(ap["ln2"], x))
+        new_state["attn"] = nc
+        return x, (new_state if state is not None else None), aux
+    if kind == "rec":
+        h, ns = C.rglru(p["rglru"], C.rmsnorm(p["ln1"], x), state)
+        x = x + h
+        x = x + C.mlp(p["mlp"], C.rmsnorm(p["ln2"], x))
+        return x, (ns if state is not None else None), aux
+    if kind == "mamba":
+        h, ns = C.mamba(p["mamba"], cfg.mamba_cfg(),
+                        C.rmsnorm(p["ln"], x), state)
+        x = x + h
+        return x, (ns if state is not None else None), aux
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# The model
+
+
+class DecoderLM:
+    """Functional decoder LM.  ``params`` is a pytree; apply is pure."""
+
+    def __init__(self, cfg: LMConfig):
+        self.cfg = cfg
+
+    # -- init ------------------------------------------------------------
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        keys = jax.random.split(key, len(cfg.segments()) + 2)
+        params = {"embed": C.init_embedding(keys[0], cfg.vocab, cfg.d_model,
+                                            cfg.jdtype),
+                  "ln_f": C.init_rmsnorm(cfg.d_model, cfg.jdtype)}
+        for i, (kind, count) in enumerate(cfg.segments()):
+            lkeys = jax.random.split(keys[i + 1], count)
+            stacked = jax.vmap(
+                lambda k, kind=kind: _init_layer(k, cfg, kind))(lkeys)
+            params[f"seg{i}_{kind}"] = stacked
+        return params
+
+    def init_state(self, batch: int, capacity: int):
+        """Stacked per-segment decode state (KV caches / SSM states)."""
+        cfg = self.cfg
+        state = {}
+        for i, (kind, count) in enumerate(cfg.segments()):
+            one = _init_state(cfg, kind, batch, capacity)
+            state[f"seg{i}_{kind}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (count,) + a.shape), one)
+        return state
+
+    # -- apply -----------------------------------------------------------
+    def apply(self, params, tokens, pos=None, state=None, logits: bool = True):
+        """tokens: (B, S) int32 (or (B, S, D) pre-embedded for stubs).
+
+        pos: (B, S) or (3, B, S) for M-RoPE; defaults to arange.
+        state: None for training, else the pytree from ``init_state``.
+        Returns (logits_or_hidden, new_state, aux_loss).
+        """
+        cfg = self.cfg
+        if tokens.ndim == 2:
+            x = C.embed(params["embed"], tokens)
+        else:
+            x = tokens.astype(cfg.jdtype)
+        b, s = x.shape[0], x.shape[1]
+        if pos is None:
+            pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        aux = jnp.float32(0)
+        new_state = {} if state is not None else None
+
+        for i, (kind, count) in enumerate(cfg.segments()):
+            seg_params = params[f"seg{i}_{kind}"]
+            seg_state = state[f"seg{i}_{kind}"] if state is not None else None
+
+            def body(carry, xs, kind=kind):
+                x, aux = carry
+                lp = xs[0] if seg_state is not None else xs
+                ls = xs[1] if seg_state is not None else None
+                x, ns, a = _apply_layer(cfg, kind, lp, x, pos, ls)
+                return (x, aux + a), ns
+
+            if cfg.remat and state is None:
+                if cfg.remat_policy == "dots":
+                    body = jax.checkpoint(
+                        body, policy=jax.checkpoint_policies
+                        .dots_with_no_batch_dims_saveable)
+                else:
+                    body = jax.checkpoint(body)
+            xs = (seg_params, seg_state) if state is not None else seg_params
+            (x, aux), seg_new = lax.scan(body, (x, aux), xs)
+            if state is not None:
+                new_state[f"seg{i}_{kind}"] = seg_new
+
+        x = C.rmsnorm(params["ln_f"], x)
+        out = C.unembed(params["embed"], x) if logits else x
+        return out, new_state, aux
+
+    # -- param count -------------------------------------------------------
+    def param_count(self, params) -> int:
+        return sum(p.size for p in jax.tree.leaves(params))

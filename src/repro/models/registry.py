@@ -1,0 +1,25 @@
+"""Model registry: arch id -> (family, config, model instance)."""
+
+from __future__ import annotations
+
+from repro import configs as cfgmod
+from repro.models.encdec import EncDecConfig, EncDecLM
+from repro.models.lm import DecoderLM, LMConfig
+from repro.models.vlm import VLM
+
+
+def build(cfg):
+    """Config object -> model instance."""
+    if isinstance(cfg, EncDecConfig):
+        return EncDecLM(cfg)
+    assert isinstance(cfg, LMConfig)
+    if cfg.mrope_sections is not None:
+        return VLM(cfg)
+    return DecoderLM(cfg)
+
+
+def get(arch_id: str, reduced: bool = False):
+    """Returns (family, cfg, model)."""
+    mod = cfgmod.get_module(arch_id)
+    cfg = mod.reduced() if reduced else mod.CONFIG
+    return mod.FAMILY, cfg, build(cfg)

@@ -1,0 +1,117 @@
+"""Activation/weight sharding-constraint context (hillclimb opt-1).
+
+Dry-run profiling showed XLA resolving the FSDP-sharded contracting dim
+of every weight by **all-reducing the activation** (GBs per layer) rather
+than all-gathering the weight (MBs): 468 GB/device/step of collective
+traffic on h2o-danube train_4k, 88% of it activation all-reduces
+(EXPERIMENTS.md §Perf, iteration 1).
+
+When enabled, layers wrap each weight in ``with_sharding_constraint``
+that keeps the tensor-parallel axis and *clears the FSDP axes* — i.e. an
+explicit ZeRO-3 "re-gather before use".  XLA then emits one small weight
+all-gather per layer (overlappable with the previous layer's compute
+inside the scan) instead of giant activation all-reduces.
+
+Enabled only under a mesh context (the dry-run / production path); unit
+tests and CPU smoke tests run with the context off and see no
+constraints at all.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+def _cfg():
+    return getattr(_state, "cfg", None)
+
+
+@contextlib.contextmanager
+def use(tp_axis="model", tp_size=16, dp_axes=("data",), dp_size=16):
+    """Enable weight re-gather constraints within a mesh context."""
+    prev = _cfg()
+    _state.cfg = {"tp": tp_axis, "tp_n": tp_size,
+                  "dp": dp_axes, "dp_n": dp_size}
+    try:
+        yield
+    finally:
+        _state.cfg = prev
+
+
+def act(x, pattern):
+    """Constrain an activation: pattern entries are 'tp' | 'dp' | None.
+
+    Divisibility-checked; no-op when the context is off.  Used to pin MoE
+    dispatch tensors so XLA distributes the expert all-reduce instead of
+    materialising it at global size.
+    """
+    cfg = _cfg()
+    if cfg is None:
+        return x
+    dims = []
+    for i, p in enumerate(pattern):
+        if p == "tp" and cfg["tp"] is not None and \
+                x.shape[i] % cfg["tp_n"] == 0 and x.shape[i] >= cfg["tp_n"]:
+            dims.append(cfg["tp"])
+        elif p == "dp" and x.shape[i] % cfg["dp_n"] == 0 \
+                and x.shape[i] >= cfg["dp_n"]:
+            dp = cfg["dp"]
+            dims.append(dp if len(dp) > 1 else dp[0])
+        else:
+            dims.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*dims))
+
+
+# tp-dim rules mirroring repro.train.sharding (column/row/embed/MoE)
+_COLUMN = {"wq", "wk", "wv", "wi", "wg", "in_proj", "wa", "wx", "x_proj"}
+_ROW = {"wo", "out_proj", "dt_proj"}
+
+
+def gather(name: str, w):
+    """Constrain ``w`` to TP-only sharding (FSDP axes cleared).
+
+    With tp_axis=None (pure-DP layout) every weight is constrained fully
+    replicated — an explicit ZeRO-3 all-gather before use.
+    """
+    cfg = _cfg()
+    if cfg is None or w.ndim < 2:
+        return w
+    tp, tp_n = cfg["tp"], cfg["tp_n"]
+    dims = [None] * w.ndim
+    body = list(w.shape)
+    if tp is None:
+        return jax.lax.with_sharding_constraint(w, P(*dims))
+
+    def ok(i):
+        return body[i] % tp_n == 0 and body[i] >= tp_n
+
+    if name == "table":
+        if ok(0):
+            dims[0] = tp
+    elif w.ndim == 3 and name in ("wi", "wg", "wo"):   # MoE experts
+        # Size threshold (§Perf grok iteration 1, refuted): re-gathering
+        # multi-GB expert stacks costs more than FSDP partial sums.
+        # Keep the stored (EP/TP + FSDP) sharding for stacks > 256 MB.
+        if w.size * 2 > 256 * 2**20:
+            return w
+        if ok(0):
+            dims[0] = tp
+        else:
+            j = 2 if name != "wo" else 1
+            if ok(j):
+                dims[j] = tp
+    elif name in _COLUMN and w.ndim == 2:
+        if ok(1):
+            dims[1] = tp
+    elif name in _ROW and w.ndim == 2:
+        if ok(0):
+            dims[0] = tp
+    else:
+        return w
+    return jax.lax.with_sharding_constraint(w, P(*dims))

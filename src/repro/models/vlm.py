@@ -1,0 +1,73 @@
+"""Vision-language model (Qwen2-VL style): M-RoPE text backbone + stub
+vision frontend.
+
+Per the assignment the modality frontend is a STUB: ``input_specs()``
+provides precomputed patch embeddings (B, n_patches, d_model).  This module
+owns what is NOT stubbed — the M-RoPE position bookkeeping that
+distinguishes the architecture: vision tokens get (temporal, height, width)
+grid positions; text tokens get equal positions on all three streams,
+continuing after the vision block.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import common as C
+from repro.models.lm import DecoderLM, LMConfig
+
+
+class VLM:
+    """DecoderLM with multimodal position ids and embedding concat."""
+
+    def __init__(self, cfg: LMConfig):
+        assert cfg.mrope_sections is not None
+        self.cfg = cfg
+        self.lm = DecoderLM(cfg)
+
+    def init(self, key):
+        return self.lm.init(key)
+
+    def mm_positions(self, batch, n_patches, grid_hw, n_text):
+        """(3, B, n_patches + n_text) M-RoPE positions.
+
+        Vision: temporal=0, height/width from the patch grid.  Text:
+        all three streams equal, starting at max(grid)+1 (Qwen2-VL rule).
+        """
+        gh, gw = grid_hw
+        assert gh * gw == n_patches
+        t = jnp.zeros((n_patches,), jnp.int32)
+        h = jnp.repeat(jnp.arange(gh, dtype=jnp.int32), gw)
+        w = jnp.tile(jnp.arange(gw, dtype=jnp.int32), gh)
+        text0 = max(gh, gw)
+        tx = text0 + jnp.arange(n_text, dtype=jnp.int32)
+        pos3 = jnp.stack([
+            jnp.concatenate([t, tx]),
+            jnp.concatenate([h, tx]),
+            jnp.concatenate([w, tx]),
+        ])  # (3, S)
+        return jnp.broadcast_to(pos3[:, None, :],
+                                (3, batch, n_patches + n_text))
+
+    def apply(self, params, patch_embeds, tokens, state=None):
+        """patch_embeds: (B, P, D) stub frontend output; tokens: (B, T)."""
+        b, p, _ = patch_embeds.shape
+        t = tokens.shape[1]
+        x_txt = C.embed(params["embed"], tokens)
+        x = jnp.concatenate([patch_embeds.astype(x_txt.dtype), x_txt], 1)
+        # assume a near-square patch grid for the stub
+        gh = int(p ** 0.5)
+        gw = p // gh
+        while gh * gw != p:
+            gh -= 1
+            gw = p // gh
+        pos3 = self.mm_positions(b, p, (gh, gw), t)
+        return self.lm.apply(params, x, pos=pos3, state=state)
+
+    def apply_text(self, params, tokens, pos=None, state=None):
+        """Text-only path (used by the dry-run LM shapes)."""
+        b, s = tokens.shape
+        if pos is None:
+            p = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+            pos = jnp.broadcast_to(p, (3, b, s))
+        return self.lm.apply(params, tokens, pos=pos, state=state)

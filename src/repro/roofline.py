@@ -1,0 +1,289 @@
+"""Three-term roofline analysis from AOT-compiled artifacts.
+
+This container is CPU-only; TPU v5e is the *target*.  Wall-clock MFU
+cannot be measured, so per (arch x shape x mesh) cell we derive:
+
+    compute term    = HLO_FLOPs   / (chips * PEAK_FLOPS)
+    memory term     = HLO_bytes   / (chips * HBM_BW)
+    collective term = coll_bytes  / (chips * ICI_BW)
+
+``cost_analysis()`` provides HLO_FLOPs and bytes-accessed.  Collective
+bytes are NOT in cost_analysis: we parse the optimized HLO text and sum
+the output sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute.  The dominant term is the bottleneck the
+§Perf loop iterates on.
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) gives the
+useful-compute ratio (catches remat/redundant compute).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+# TPU v5e hardware constants (per chip).
+PEAK_FLOPS = 197e12     # bf16 FLOP/s
+HBM_BW = 819e9          # bytes/s
+ICI_BW = 50e9           # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of 'bf16[256,1024]' or a '(s, s, ...)' tuple prefix."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_WHILE_RE = re.compile(
+    r"while\(.*?condition=%?([\w.\-]+), body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_CALL_RE = re.compile(r"(?:to_apply|calls)=%?([\w.\-]+)")
+_COMPDEF_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?.*\{\s*$")
+
+
+def _parse_computations(hlo_text: str):
+    """Split HLO text into {computation_name: [lines]}."""
+    comps = {}
+    cur = None
+    entry = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if cur is None:
+            m = _COMPDEF_RE.match(s)
+            if m and ("->" in s or s.startswith("ENTRY")):
+                cur = m.group(1)
+                comps[cur] = []
+                if raw.startswith("ENTRY") or s.startswith("ENTRY"):
+                    entry = cur
+        else:
+            if s == "}":
+                cur = None
+            else:
+                comps[cur].append(s)
+    return comps, entry
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Collective bytes from optimized HLO, with while-loop trip counts.
+
+    XLA annotates each while with ``backend_config known_trip_count``; a
+    collective inside a scanned layer loop is charged trip_count times
+    (nested loops compose).  Without this, scanned models undercount
+    collectives by ~n_layers x.
+    """
+    comps, entry = _parse_computations(hlo_text)
+    if entry is None:                      # fallback: flat scan
+        comps = {"_all": hlo_text.splitlines()}
+        entry = "_all"
+
+    def comp_cost(name, seen):
+        if name not in comps or name in seen:
+            return {k: 0.0 for k in _COLLECTIVES}, {k: 0 for k in _COLLECTIVES}
+        seen = seen | {name}
+        byts = {k: 0.0 for k in _COLLECTIVES}
+        cnts = {k: 0 for k in _COLLECTIVES}
+        for s in comps[name]:
+            matched = False
+            for kind in _COLLECTIVES:
+                if f" {kind}(" in s or f" {kind}-start(" in s:
+                    eq = s.find(" = ")
+                    if eq >= 0:
+                        op_pos = s.find(f" {kind}")
+                        byts[kind] += _shape_bytes(s[eq + 3: op_pos])
+                        cnts[kind] += 1
+                    matched = True
+                    break
+            if matched:
+                continue
+            wm = _WHILE_RE.search(s)
+            if wm:
+                trip = 1
+                tm = _TRIP_RE.search(s)
+                if tm:
+                    trip = int(tm.group(1))
+                for sub in (wm.group(2), wm.group(1)):  # body, cond
+                    b, c = comp_cost(sub, seen)
+                    mult = trip if sub == wm.group(2) else 1
+                    for k in _COLLECTIVES:
+                        byts[k] += b[k] * mult
+                        cnts[k] += c[k] * mult
+                continue
+            cm = _CALL_RE.search(s)
+            if cm and (" call(" in s or " fusion(" in s or " async" in s):
+                b, c = comp_cost(cm.group(1), seen)
+                for k in _COLLECTIVES:
+                    byts[k] += b[k]
+                    cnts[k] += c[k]
+        return byts, cnts
+
+    byts, cnts = comp_cost(entry, frozenset())
+    out = dict(byts)
+    out["_counts"] = cnts
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_detail: dict
+    model_flops: Optional[float] = None
+
+    @property
+    def t_compute(self):
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self):
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self):
+        return self.coll_bytes / (self.chips * ICI_BW)
+
+    @property
+    def bottleneck(self):
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self):
+        if not self.model_flops or not self.hlo_flops:
+            return None
+        return self.model_flops / self.hlo_flops
+
+    @property
+    def t_ideal(self):
+        """Useful-compute time: MODEL_FLOPS at peak on all chips."""
+        if not self.model_flops:
+            return None
+        return self.model_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def roofline_fraction(self):
+        """t_ideal / max(term): fraction of roofline achieved assuming
+        perfect compute/memory/collective overlap — the §Perf score.
+        1.0 = the step takes exactly as long as the useful FLOPs at peak."""
+        binding = max(self.t_compute, self.t_memory, self.t_collective)
+        if not self.model_flops or binding == 0:
+            return None
+        return self.t_ideal / binding
+
+    @property
+    def balance(self):
+        """max(term)/sum(terms): 1.0 = single dominant roof."""
+        tot = self.t_compute + self.t_memory + self.t_collective
+        if tot == 0:
+            return None
+        return max(self.t_compute, self.t_memory, self.t_collective) / tot
+
+    def to_dict(self):
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "xla_flops": getattr(self, "xla_flops", None),
+            "xla_bytes": getattr(self, "xla_bytes", None),
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "coll_bytes": self.coll_bytes,
+            "coll_detail": self.coll_detail,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "t_ideal_s": self.t_ideal,
+            "roofline_fraction": self.roofline_fraction,
+            "balance": self.balance,
+        }
+
+
+def analyze(arch, shape, mesh_name, chips, compiled, lowered=None,
+            model_flops=None, jaxpr_cost=None):
+    """Build a Roofline from a compiled AOT artifact.
+
+    flops/bytes come from the jaxpr cost model (``repro.costmodel``) when
+    provided — XLA's cost_analysis counts while bodies once and is kept
+    only as the raw reference (``xla_*`` fields in to_dict callers).
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    xla_flops = float(ca.get("flops", 0.0))
+    xla_bytes = float(ca.get("bytes accessed", 0.0))
+    if jaxpr_cost is not None:
+        flops, byts = jaxpr_cost.flops, jaxpr_cost.bytes
+    else:
+        flops, byts = xla_flops, xla_bytes
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = lowered.as_text() if lowered is not None else ""
+    coll = collective_bytes(hlo)
+    counts = coll.pop("_counts")
+    # SPMD HLO shapes are per-device shards; the roofline formula divides
+    # by chips, so scale the parsed per-device bytes up to global.
+    total_coll = float(sum(coll.values())) * chips
+    rl = Roofline(arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+                  hlo_flops=flops, hlo_bytes=byts, coll_bytes=total_coll,
+                  coll_detail={**coll, "counts": counts},
+                  model_flops=model_flops)
+    rl.xla_flops = xla_flops   # raw reference values
+    rl.xla_bytes = xla_bytes
+    return rl
+
+
+def count_params(shapes_tree) -> int:
+    import jax
+    return sum(int(_prod(l.shape)) for l in jax.tree.leaves(shapes_tree))
+
+
+def _prod(t):
+    r = 1
+    for x in t:
+        r *= x
+    return r
+
+
+def active_params(cfg, n_params: int) -> float:
+    """MoE: active parameter count for 6*N_active*D."""
+    try:
+        pattern = cfg.pattern
+    except AttributeError:
+        return float(n_params)
+    if pattern != "moe":
+        return float(n_params)
+    # fraction of expert params that are active: top_k (+shared) of n_experts
+    e, k, sh = cfg.n_experts, cfg.top_k, cfg.n_shared
+    d, f = cfg.d_model, (cfg.moe_d_ff or cfg.d_ff)
+    per_expert = 3 * d * f
+    expert_total = cfg.n_layers * e * per_expert
+    expert_active = cfg.n_layers * (k + sh) * per_expert
+    return float(n_params - expert_total + expert_active)

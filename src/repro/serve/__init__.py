@@ -1,0 +1,1 @@
+from repro.serve import kvcache, serve_step, engine  # noqa: F401

@@ -1,0 +1,136 @@
+"""Batched serving engine with transcode ingress/egress.
+
+Requests arrive as raw UTF-8 (or UTF-16LE) byte strings.  The engine:
+
+  1. **ingress** — validates + tokenizes the prompt bytes through
+     ``repro.core`` (the paper's validation running at the API boundary,
+     exactly its motivating deployment);
+  2. batches admitted requests into fixed decode slots (padded prefill,
+     per-row cursors), runs the jitted prefill + decode loop;
+  3. **egress** — detokenizes to UTF-8 or UTF-16 through the vectorized
+     encoder (``utf32_to_utf8`` / ``utf32_to_utf16``), so a Java/.NET
+     client can request UTF-16 at no extra host cost.
+
+Wave-based continuous batching: a wave admits up to ``max_batch``
+requests; finished rows (EOS / max_new) are masked out and their slots
+idle until the wave drains.  (True slot-level refill is a mechanical
+extension — admission is already per-slot.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import transcode as tc
+from repro.data.tokenizer import BOS_ID, EOS_ID, N_SPECIAL, ByteTokenizer
+from repro.serve import kvcache, serve_step
+
+
+@dataclasses.dataclass
+class Request:
+    prompt_bytes: bytes
+    max_new: int = 32
+    out_encoding: str = "utf-8"     # "utf-8" | "utf-16-le"
+
+
+@dataclasses.dataclass
+class Result:
+    ok: bool
+    text_bytes: bytes = b""
+    error: str = ""
+
+
+class Engine:
+    def __init__(self, model, cfg, family: str, params, max_batch: int = 8,
+                 max_prompt: int = 512, max_new: int = 128,
+                 temperature: float = 0.0):
+        self.model, self.cfg, self.family = model, cfg, family
+        self.params = params
+        self.max_batch, self.max_prompt, self.max_new = (
+            max_batch, max_prompt, max_new)
+        self.tok = ByteTokenizer()
+        self._prefill = jax.jit(serve_step.make_prefill(model, family))
+        self._decode = jax.jit(serve_step.make_decode(model, family,
+                                                      temperature))
+        self._ctx = max_prompt + max_new
+
+    # ------------------------------------------------------------------
+    def _ingress(self, req: Request):
+        raw = np.frombuffer(req.prompt_bytes, np.uint8)
+        if len(raw) == 0 or len(raw) > self.max_prompt - 1:
+            return None, "empty or oversize prompt"
+        ok = bool(tc.validate_utf8(jnp.asarray(raw.astype(np.int32)),
+                                   len(raw)))
+        if not ok:
+            return None, "invalid UTF-8 prompt"
+        ids = np.concatenate([[BOS_ID], raw.astype(np.int32) + N_SPECIAL])
+        return ids, ""
+
+    def _egress(self, token_ids: np.ndarray, encoding: str) -> bytes:
+        byte_vals = token_ids - N_SPECIAL
+        byte_vals = byte_vals[(byte_vals >= 0) & (byte_vals < 256)]
+        b = jnp.asarray(byte_vals.astype(np.int32))
+        if encoding == "utf-16-le":
+            if len(byte_vals) == 0:
+                return b""
+            out, count, err = tc.transcode_utf8_to_utf16(b, len(byte_vals))
+            units = np.asarray(out)[: int(count)].astype(np.uint16)
+            return units.tobytes()
+        return bytes(byte_vals.astype(np.uint8))
+
+    # ------------------------------------------------------------------
+    def serve(self, requests: List[Request]) -> List[Result]:
+        results: List[Optional[Result]] = [None] * len(requests)
+        wave: List[tuple] = []
+        for i, r in enumerate(requests):
+            ids, err = self._ingress(r)
+            if ids is None:
+                results[i] = Result(ok=False, error=err)
+            else:
+                wave.append((i, r, ids))
+
+        for w0 in range(0, len(wave), self.max_batch):
+            chunk = wave[w0: w0 + self.max_batch]
+            self._run_wave(chunk, results)
+        return results  # type: ignore[return-value]
+
+    def _run_wave(self, chunk, results):
+        b = len(chunk)
+        if b == 0:
+            return
+        lens = np.array([len(ids) for _, _, ids in chunk], np.int32)
+        s = int(lens.max())
+        toks = np.zeros((b, s), np.int32)
+        for j, (_, _, ids) in enumerate(chunk):
+            toks[j, : len(ids)] = ids
+
+        state = kvcache.init_state(self.model, self.cfg, b, self._ctx)
+        last_logits, state = self._prefill(
+            self.params, jnp.asarray(toks), jnp.asarray(lens), state)
+        cur = jnp.argmax(last_logits, -1).astype(jnp.int32)
+
+        pos = jnp.asarray(lens)
+        out = np.full((b, self.max_new), -1, np.int64)
+        done = np.zeros(b, bool)
+        key = jax.random.PRNGKey(0)
+        for t in range(self.max_new):
+            out[:, t] = np.where(done, -1, np.asarray(cur))
+            done |= np.asarray(cur) == EOS_ID
+            if done.all():
+                break
+            key, sub = jax.random.split(key)
+            cur, _, state = self._decode(
+                self.params, cur[:, None], pos, state, sub)
+            pos = pos + 1
+
+        for j, (i, req, ids) in enumerate(chunk):
+            gen = out[j]
+            gen = gen[(gen >= 0) & (gen != EOS_ID)]
+            results[i] = Result(
+                ok=True, text_bytes=self._egress(gen, req.out_encoding))

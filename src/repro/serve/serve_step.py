@@ -1,0 +1,87 @@
+"""Prefill and decode step functions (the units the dry-run lowers).
+
+``make_prefill``/``make_decode`` return pure functions suitable for
+jit/pjit.  Prompts in a batch may have different lengths: padding lanes
+carry position -1 which the attention mask treats as empty, and per-row
+cache cursors advance by the padded length so slot layout stays uniform.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as C
+
+
+def _positions(family, tokens, lens=None, offset=None):
+    b, s = tokens.shape
+    base = jnp.arange(s, dtype=jnp.int32)[None, :]
+    if offset is not None:
+        pos = base + offset[:, None]
+    else:
+        pos = jnp.broadcast_to(base, (b, s))
+    if lens is not None:
+        pos = jnp.where(base < lens[:, None], pos, -1)  # padding -> masked
+    if family == "vlm":
+        pos = jnp.broadcast_to(pos, (3, b, s))
+    return pos
+
+
+def make_prefill(model, family: str):
+    """prefill(params, tokens, lens, state) -> (last_logits, state).
+
+    tokens: (B, S) padded prompts; lens: (B,) true lengths.
+    last_logits: (B, vocab) at each prompt's final real token.
+    """
+    lm = getattr(model, "lm", model)
+
+    def prefill(params, tokens, lens, state):
+        pos = _positions(family, tokens, lens=lens)
+        logits, state, _ = lm.apply(params, tokens, pos=pos, state=state)
+        last = jnp.take_along_axis(
+            logits, (lens - 1)[:, None, None].astype(jnp.int32), axis=1)
+        return last[:, 0], state
+
+    return prefill
+
+
+def make_decode(model, family: str, temperature: float = 0.0):
+    """decode(params, tok, pos, state, key) -> (next_tok, logits, state).
+
+    tok: (B, 1) current token; pos: (B,) its position.
+    Greedy when temperature == 0, else temperature sampling.
+    """
+    lm = getattr(model, "lm", model)
+
+    def decode(params, tok, pos, state, key):
+        p = pos[:, None]
+        if family == "vlm":
+            p = jnp.broadcast_to(p, (3,) + p.shape)
+        logits, state, _ = lm.apply(params, tok, pos=p, state=state)
+        logits = logits[:, 0]                      # (B, V)
+        if temperature > 0:
+            nxt = jax.random.categorical(key, logits / temperature, -1)
+        else:
+            nxt = jnp.argmax(logits, -1)
+        return nxt.astype(jnp.int32), logits, state
+
+    return decode
+
+
+def make_encdec_steps(model):
+    """Whisper-style: (prefill, decode) against a fixed encoder output."""
+
+    def prefill(params, frames, tokens, capacity):
+        b, s = tokens.shape
+        state = model.init_state(params, frames, b, capacity)
+        logits, state, _ = model.apply(params, frames, tokens, state=state)
+        return logits[:, -1], state
+
+    def decode(params, tok, state):
+        logits, state, _ = model.apply(params, None, tok, state=state)
+        return jnp.argmax(logits[:, 0], -1).astype(jnp.int32), logits[:, 0], state
+
+    return prefill, decode

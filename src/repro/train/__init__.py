@@ -1,0 +1,1 @@
+from repro.train import optimizer, grad, train_step, checkpoint, sharding  # noqa: F401

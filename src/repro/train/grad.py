@@ -1,0 +1,136 @@
+"""Distributed-optimization tricks: gradient compression + hierarchical
+collectives + microbatch accumulation.
+
+``compressed_psum``: int8-quantized all-reduce with **error feedback** —
+the quantization residual is carried in optimizer-side state and added
+back the next step, so the compression bias does not accumulate (Seide et
+al. / EF-SGD).  Intended for the slow cross-pod (DCN) hop of a
+hierarchical reduction: reduce-scatter intra-pod over ICI at full
+precision, all-reduce the 1/N-sized shard across pods in int8, then
+all-gather intra-pod.
+
+These are ``shard_map``-level building blocks: they take explicit mesh
+axis names.  The pjit training path lets XLA insert full-precision
+reductions automatically; ``launch/train.py --grad-sync=compressed``
+switches to the explicit path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def quantize_int8(x):
+    """Per-tensor symmetric int8 quantization.  Returns (q, scale)."""
+    x = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(x, axis_name, err):
+    """int8 all-reduce over ``axis_name`` with error feedback.
+
+    The quantization scale is made **uniform across the axis** first
+    (one scalar pmax), so the integer sum dequantizes exactly —
+    per-device scales would make sum(q_i * s_i) != s * sum(q_i).
+
+    Args:
+      x: local f32 gradient shard.
+      err: residual carried from the previous step (same shape).
+    Returns (reduced, new_err).
+    """
+    x = x.astype(jnp.float32) + err
+    amax = lax.pmax(jnp.max(jnp.abs(x)), axis_name)   # scalar wire cost
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    new_err = x - q.astype(jnp.float32) * scale       # quantization loss
+    # int8 payload on the wire; widen for the accumulator
+    total = lax.psum(q.astype(jnp.int32), axis_name)
+    return total.astype(jnp.float32) * scale, new_err
+
+
+def hierarchical_grad_sync(grads, err, *, ici_axis="data", dcn_axis="pod",
+                           compress=True):
+    """Hierarchical gradient reduction inside ``shard_map``.
+
+    1. ``psum_scatter`` over the intra-pod ICI axis (full precision —
+       ICI is fast, and scattering makes the cross-pod payload 1/N).
+    2. all-reduce the shard across pods over DCN, int8 + error feedback.
+    3. ``all_gather`` the result back over ICI.
+
+    grads/err: congruent pytrees of f32 leaves.  Returns (grads, new_err).
+    """
+    def sync_leaf(g, e):
+        g = g.astype(jnp.float32)
+        flat = g.reshape(-1)
+        n = lax.psum(1, ici_axis)
+        pad = (-flat.shape[0]) % n
+        if pad:
+            flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+        shard = lax.psum_scatter(flat, ici_axis, scatter_dimension=0,
+                                 tiled=True)
+        if compress:
+            shard, new_e = compressed_psum(shard, dcn_axis, e)
+        else:
+            shard, new_e = lax.psum(shard, dcn_axis), e
+        full = lax.all_gather(shard, ici_axis, axis=0, tiled=True)
+        if pad:
+            full = full[:-pad]
+        return full.reshape(g.shape), new_e
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err)
+    out = [sync_leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(treedef, [o[0] for o in out]),
+            jax.tree.unflatten(treedef, [o[1] for o in out]))
+
+
+def init_error_feedback(grads_like, *, ici_axis_size):
+    """Residual buffers matching the post-scatter shard shapes."""
+    def shard_shape(g):
+        n = g.size
+        n_pad = n + ((-n) % ici_axis_size)
+        return jnp.zeros((n_pad // ici_axis_size,), jnp.float32)
+    return jax.tree.map(shard_shape, grads_like)
+
+
+def accumulate_microbatches(loss_fn, params, batch, n_micro: int):
+    """Gradient accumulation over ``n_micro`` microbatches via scan.
+
+    batch: pytree whose leaves have leading dim B = n_micro * b_micro.
+    Returns (mean_loss, mean_grads, mean_metrics).
+    """
+    if n_micro == 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, grads, metrics
+
+    def reshape(x):
+        return x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+
+    micro = jax.tree.map(reshape, batch)
+    zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def body(carry, mb):
+        acc_loss, acc_g = carry
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, mb)
+        acc_g = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                             acc_g, grads)
+        return (acc_loss + loss, acc_g), metrics
+
+    (tot_loss, tot_g), metrics = lax.scan(body, (jnp.float32(0), zero_g),
+                                          micro)
+    grads = jax.tree.map(lambda g: g / n_micro, tot_g)
+    last_metrics = jax.tree.map(lambda m: m[-1], metrics)
+    return tot_loss / n_micro, grads, last_metrics

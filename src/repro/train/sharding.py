@@ -1,0 +1,178 @@
+"""Parameter/activation sharding rules (Megatron TP + FSDP + EP).
+
+``param_specs(params)`` walks the param pytree and assigns a
+PartitionSpec per leaf from its *name* and *shape*:
+
+  * column-parallel weights (wq/wk/wv/wi/wg/in_proj/...) — output dim on
+    the tensor axis, input dim on the FSDP axes;
+  * row-parallel weights (wo/out_proj/dt_proj) — input dim on the tensor
+    axis, output dim on the FSDP axes;
+  * embeddings — vocab on the tensor axis (vocab-parallel logits);
+  * MoE experts — expert dim on the tensor axis when divisible
+    (expert parallelism), otherwise hidden dim; FSDP on d_model;
+  * stacked layer segments (leading scan axis) are never sharded.
+
+Every assignment is divisibility-checked against the mesh, so one rule
+set serves all 10 architectures on any mesh shape (the deepseek 64-expert
+table shards over model=16; grok's 8 experts fall back to hidden-dim
+sharding automatically).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+# column-parallel: output (last) dim -> TP
+_COLUMN = {"wq", "wk", "wv", "wi", "wg", "in_proj", "wa", "wx", "x_proj"}
+# row-parallel: input (first of the trailing 2 dims) -> TP
+_ROW = {"wo", "out_proj", "dt_proj"}
+_REPLICATED = {"router", "scale", "lam", "D", "dt_bias", "conv_b",
+               "bq", "bk", "bv", "conv_w", "A_log", "enc_pos"}
+
+
+def _axis_size(mesh, axes):
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def leaf_spec(name: str, shape, mesh, tp="model", fsdp="data",
+              stacked: bool = False):
+    """PartitionSpec for one named parameter leaf."""
+    tp_n = _axis_size(mesh, tp)
+    fsdp_n = _axis_size(mesh, fsdp)
+    nd = len(shape)
+    off = 1 if stacked else 0       # leading layer-stack axis: replicated
+    dims: list = [None] * nd
+    body = shape[off:]
+
+    def try_set(i, axes, n):
+        if axes is None:
+            return False
+        if dims[off + i] is None and body[i] % n == 0 and body[i] >= n:
+            dims[off + i] = axes
+            return True
+        return False
+
+    if name in _REPLICATED:
+        return P(*dims)
+
+    if name == "table":              # (vocab, d_model)
+        try_set(0, tp, tp_n)
+        try_set(1, fsdp, fsdp_n)
+        return P(*dims)
+
+    if len(body) == 3 and name in ("wi", "wg", "wo"):   # MoE (e, d, f)/(e, f, d)
+        if not try_set(0, tp, tp_n):                    # expert parallelism
+            try_set(2 if name != "wo" else 1, tp, tp_n)  # else hidden dim
+        # FSDP on d_model (dim 1 for wi/wg, dim 2 for wo)
+        try_set(1 if name != "wo" else 2, fsdp, fsdp_n)
+        return P(*dims)
+
+    if len(body) == 2 and name in _COLUMN:
+        try_set(1, tp, tp_n)
+        try_set(0, fsdp, fsdp_n)
+        return P(*dims)
+
+    if len(body) == 2 and name in _ROW:
+        try_set(0, tp, tp_n)
+        try_set(1, fsdp, fsdp_n)
+        return P(*dims)
+
+    # generic fallback: shard the largest divisible dim on TP
+    if len(body) >= 2:
+        order = sorted(range(len(body)), key=lambda i: -body[i])
+        for i in order:
+            if try_set(i, tp, tp_n):
+                break
+        for i in order:
+            if try_set(i, fsdp, fsdp_n):
+                break
+    return P(*dims)
+
+
+def param_specs(params, mesh, tp="model", fsdp="data"):
+    """Pytree of PartitionSpec congruent with ``params``."""
+    def walk(path, leaf):
+        name = None
+        for entry in reversed(path):
+            key = getattr(entry, "key", getattr(entry, "name", None))
+            if isinstance(key, str):
+                name = key
+                break
+        stacked = any(
+            isinstance(getattr(e, "key", None), str)
+            and (getattr(e, "key", "").startswith("seg")
+                 or getattr(e, "key", "") in ("enc", "dec"))
+            for e in path)
+        return leaf_spec(name or "", leaf.shape, mesh, tp, fsdp, stacked)
+
+    return jax.tree_util.tree_map_with_path(walk, params)
+
+
+def state_specs(state_shapes, mesh, dp=("data",), tp="model"):
+    """Sharding for decode-state pytrees (stacked KV caches / SSM states).
+
+    Leaves look like (n_layers, B, cap, kv, hd) / (n_layers, B, d) /
+    (n_layers, B): skip the layer-stack dim, shard the batch dim over DP
+    when divisible (falling back to the sequence/cap dim — sequence
+    parallelism for batch=1 long-context cells), and the widest remaining
+    dim over TP.
+    """
+    dp_n = _axis_size(mesh, dp)
+    tp_n = _axis_size(mesh, tp)
+    dp_ax = dp if len(dp) > 1 else dp[0]
+
+    def spec(leaf):
+        shape = leaf.shape
+        nd = len(shape)
+        dims: list = [None] * nd
+        if nd < 2:
+            return P(*dims)
+        # dim 0 is the layer stack; dim 1 is batch
+        used_dp = False
+        if shape[1] % dp_n == 0 and shape[1] >= dp_n:
+            dims[1] = dp_ax
+            used_dp = True
+        body = list(range(2, nd))
+        if not used_dp:
+            for i in body:             # SP fallback: cache-length dim
+                if shape[i] % dp_n == 0 and shape[i] >= dp_n:
+                    dims[i] = dp_ax
+                    used_dp = True
+                    body.remove(i)
+                    break
+        # TP from the TRAILING dims (kv heads / head_dim): never the
+        # cache-length dim 2 of a 5-D attention cache — the decode chunk
+        # scan dynamic-slices along it and a TP shard there forces an
+        # all-gather per chunk.  (4-D SSM states shard dim 2 = d_inner.)
+        for i in reversed(body):
+            if i == 2 and nd >= 5:
+                continue
+            if tp is not None and dims[i] is None \
+                    and shape[i] % tp_n == 0 and shape[i] >= tp_n:
+                dims[i] = tp
+                break
+        return P(*dims)
+
+    return jax.tree.map(spec, state_shapes)
+
+
+def batch_specs(kind: str, batch: int, mesh, dp=("data",)):
+    """Activation/input sharding for a given step kind.
+
+    Data parallelism over the batch when divisible; otherwise sequence
+    parallelism (shard the sequence/cache-length axis) — the long_500k
+    batch=1 cells rely on this.
+    """
+    dp_n = _axis_size(mesh, dp)
+    dp_ax = dp if len(dp) > 1 else dp[0]
+    if batch % dp_n == 0 and batch >= dp_n:
+        return P(dp_ax, None)      # (B, S): shard batch
+    return P(None, dp_ax)          # shard sequence instead (SP)

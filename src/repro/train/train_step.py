@@ -1,0 +1,108 @@
+"""Training step factory: chunked-CE loss + AdamW update.
+
+The cross-entropy is computed **chunked over the sequence**: the model
+returns final hidden states and the loss unembeds one sequence chunk at a
+time inside a ``lax.scan``, so the (B, S, V) logits tensor is never
+materialised.  For the train_4k shapes this cuts peak activation memory by
+the full logits size (e.g. qwen2.5-32b: 4096 x 152064 x 4 B ~ 2.5 GiB per
+batch row) at zero FLOP cost — a beyond-paper memory optimization recorded
+in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import common as C
+from repro.train import grad as G
+from repro.train import optimizer as O
+
+LOSS_CHUNK = 512
+
+
+def chunked_ce_loss(embed_params, hidden, labels, chunk=LOSS_CHUNK):
+    """Mean CE over labels >= 0, computed in sequence chunks.
+
+    hidden: (B, S, D); labels: (B, S) int32 with -1 = no loss.
+    """
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    nchunk = s // chunk
+    rem = s - nchunk * chunk
+
+    def one(h, l):
+        logits = C.unembed(embed_params, h)          # (B, c, V) f32
+        lse = jax.nn.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(l, 0)[..., None], -1)[..., 0]
+        mask = (l >= 0).astype(jnp.float32)
+        return jnp.sum((lse - gold) * mask), jnp.sum(mask)
+
+    hc = hidden[:, : nchunk * chunk].reshape(b, nchunk, chunk, d)
+    lc = labels[:, : nchunk * chunk].reshape(b, nchunk, chunk)
+
+    def body(carry, xs):
+        h, l = xs
+        tl, tn = one(h, l)
+        return (carry[0] + tl, carry[1] + tn), None
+
+    (tot, n), _ = lax.scan(
+        body, (jnp.float32(0), jnp.float32(0)),
+        (jnp.moveaxis(hc, 1, 0), jnp.moveaxis(lc, 1, 0)))
+    if rem:
+        tl, tn = one(hidden[:, nchunk * chunk:], labels[:, nchunk * chunk:])
+        tot, n = tot + tl, n + tn
+    return tot / jnp.maximum(n, 1.0)
+
+
+def make_loss_fn(model, family: str, aux_weight: float = 0.01):
+    """Returns loss_fn(params, batch) -> (loss, metrics)."""
+
+    def loss_fn(params, batch):
+        if family == "encdec":
+            logits, _, aux = model.apply(params, batch["frames"],
+                                         batch["tokens"])
+            lse = jax.nn.logsumexp(logits, -1)
+            gold = jnp.take_along_axis(
+                logits, jnp.maximum(batch["labels"], 0)[..., None], -1)[..., 0]
+            mask = (batch["labels"] >= 0).astype(jnp.float32)
+            ce = jnp.sum((lse - gold) * mask) / jnp.maximum(jnp.sum(mask), 1)
+        else:
+            lm = model.lm if family == "vlm" else model
+            if family == "vlm":
+                b, s = batch["tokens"].shape
+                p = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+                pos = jnp.broadcast_to(p, (3, b, s))
+            else:
+                pos = None
+            hidden, _, aux = lm.apply(params, batch["tokens"], pos=pos,
+                                      logits=False)
+            ce = chunked_ce_loss(params["embed"], hidden, batch["labels"])
+        loss = ce + aux_weight * aux
+        return loss, {"ce": ce, "aux": aux}
+
+    return loss_fn
+
+
+def make_train_step(model, family: str, opt_cfg: O.AdamWConfig,
+                    n_micro: int = 1):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    Pure function of its inputs — jit/pjit it with the sharding specs from
+    ``repro.train.sharding``.
+    """
+    loss_fn = make_loss_fn(model, family)
+
+    def step(params, opt_state, batch):
+        loss, grads, metrics = G.accumulate_microbatches(
+            loss_fn, params, batch, n_micro)
+        params, opt_state, opt_metrics = O.adamw_update(
+            opt_cfg, params, grads, opt_state)
+        return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+
+    return step

@@ -1,0 +1,12 @@
+"""Test fixtures.  NOTE: XLA_FLAGS/device-count tricks are deliberately NOT
+set here — smoke tests and benches must see the real single device; only
+the dry-run (and subprocess-based distribution tests) force 512/8 devices.
+"""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

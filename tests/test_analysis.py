@@ -1,0 +1,133 @@
+"""Tests for the measurement stack itself: the jaxpr cost model and the
+HLO collective parser.  These are the §Roofline sources of truth, so they
+get the same scrutiny as the kernels (a wrong profiler silently corrupts
+every §Perf decision — EXPERIMENTS.md lesson 4)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax
+
+from repro import costmodel as CM
+from repro import roofline as RL
+
+
+# ---------------------------------------------------------------------------
+# costmodel: exact FLOPs on known programs
+
+
+def test_matmul_flops_exact():
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    c = CM.fn_cost(lambda x, y: x @ y, a, b)
+    assert c.flops == 2 * 64 * 128 * 32
+    assert c.bytes == 4 * (64 * 128 + 128 * 32 + 64 * 32)
+
+
+def test_scan_multiplies_trip_count():
+    a = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+
+    def f(x):
+        def body(h, _):
+            return h @ h, None
+        y, _ = lax.scan(body, x, None, length=7)
+        return y
+
+    c = CM.fn_cost(f, a)
+    assert c.flops >= 7 * 2 * 16 ** 3       # 7 iterations counted
+    assert c.flops < 8 * 2 * 16 ** 3 + 1000
+
+
+def test_batched_dot_general():
+    a = jax.ShapeDtypeStruct((4, 8, 16), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 16, 8), jnp.float32)
+    c = CM.fn_cost(lambda x, y: jnp.einsum("bij,bjk->bik", x, y), a, b)
+    assert c.flops == 4 * 2 * 8 * 16 * 8
+
+
+def test_grad_includes_backward():
+    a = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+
+    def loss(w):
+        return jnp.sum((w @ w) ** 2)
+
+    fwd = CM.fn_cost(loss, a)
+    both = CM.fn_cost(jax.grad(loss), a)
+    assert both.flops > 2 * fwd.flops    # backward ~2x forward for matmuls
+
+
+def test_remat_recompute_counted():
+    a = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+
+    def block(w):
+        return jnp.sum(jnp.tanh(w @ w) @ w)
+
+    plain = CM.fn_cost(jax.grad(block), a)
+    rematted = CM.fn_cost(jax.grad(jax.checkpoint(block)), a)
+    assert rematted.flops > plain.flops  # recompute shows up
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parser
+
+
+_FAKE_HLO = """
+HloModule jit_f
+
+%region_body (p: (s32[], f32[16,8])) -> (s32[], f32[16,8]) {
+  %ag = f32[16,8]{1,0} all-gather(%x), dimensions={1}
+  ROOT %t = tuple(...)
+}
+
+%region_cond (p: (s32[], f32[16,8])) -> pred[] {
+  ROOT %lt = pred[] compare(%a, %b), direction=LT
+}
+
+ENTRY %main (a: f32[16,8]) -> f32[16,8] {
+  %ar = f32[4,4]{1,0} all-reduce(%a), replica_groups={}
+  %w = (s32[], f32[16,8]) while(%init), condition=%region_cond, body=%region_body, backend_config={"known_trip_count":{"n":"5"}}
+  ROOT %r = f32[16,8] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_collective_parser_trip_counts():
+    out = RL.collective_bytes(_FAKE_HLO)
+    # all-reduce in ENTRY: 4*4*4 = 64 B, counted once
+    assert out["all-reduce"] == 64
+    # all-gather inside the while body: 16*8*4 = 512 B x trip 5
+    assert out["all-gather"] == 512 * 5
+    assert out["_counts"]["all-gather"] == 5
+
+
+def test_shape_bytes_tuple_and_dtypes():
+    assert RL._shape_bytes("f32[10,10]") == 400
+    assert RL._shape_bytes("bf16[8]") == 16
+    assert RL._shape_bytes("(f32[4], s8[16])") == 16 + 16
+    assert RL._shape_bytes("pred[]") == 0 or RL._shape_bytes("pred[]") == 1
+
+
+def test_roofline_terms_and_fraction():
+    rl = RL.Roofline(arch="x", shape="train_4k", mesh="16x16", chips=256,
+                     hlo_flops=1e18, hlo_bytes=1e15, coll_bytes=1e14,
+                     coll_detail={}, model_flops=5e17)
+    # terms
+    assert rl.t_compute == pytest.approx(1e18 / (256 * RL.PEAK_FLOPS))
+    assert rl.t_memory == pytest.approx(1e15 / (256 * RL.HBM_BW))
+    assert rl.t_collective == pytest.approx(1e14 / (256 * RL.ICI_BW))
+    assert rl.bottleneck == "compute"
+    # fraction: ideal/binding <= 1, equals model/hlo ratio here
+    assert 0 < rl.roofline_fraction <= 1
+    assert rl.roofline_fraction == pytest.approx(0.5)
+
+
+def test_active_params_moe():
+    from repro.models import registry
+    _, cfg, _ = registry.get("grok-1-314b")
+    import repro.roofline as R
+    n = 314e9
+    act = R.active_params(cfg, int(n))
+    assert act < n * 0.4          # top-2 of 8 experts -> ~26% active
+    _, dcfg, _ = registry.get("qwen3-8b")
+    assert R.active_params(dcfg, 8_000_000_000) == 8_000_000_000

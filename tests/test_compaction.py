@@ -1,0 +1,63 @@
+"""Property tests for stream compaction (the pshufb replacement)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import compaction
+
+SETTINGS = dict(max_examples=50, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(st.lists(st.tuples(st.integers(-100, 100), st.booleans()),
+                min_size=1, max_size=64))
+def test_compact_matches_numpy(items):
+    vals = np.array([v for v, _ in items], np.int32)
+    mask = np.array([m for _, m in items], bool)
+    out, cnt = compaction.compact(jnp.asarray(vals), jnp.asarray(mask),
+                                  len(vals))
+    want = vals[mask]
+    assert int(cnt) == len(want)
+    assert np.array_equal(np.asarray(out)[: len(want)], want)
+
+
+@settings(**SETTINGS)
+@given(st.lists(st.tuples(st.integers(-100, 100), st.booleans()),
+                min_size=1, max_size=64))
+def test_compact_gather_matches_scatter(items):
+    vals = np.array([v for v, _ in items], np.int32)
+    mask = np.array([m for _, m in items], bool)
+    o1, c1 = compaction.compact(jnp.asarray(vals), jnp.asarray(mask),
+                                len(vals))
+    o2, c2 = compaction.compact_gather(jnp.asarray(vals), jnp.asarray(mask),
+                                       len(vals))
+    assert int(c1) == int(c2)
+    assert np.array_equal(np.asarray(o1)[: int(c1)],
+                          np.asarray(o2)[: int(c2)])
+
+
+@settings(**SETTINGS)
+@given(st.lists(st.tuples(st.integers(0, 255), st.integers(0, 4),
+                          st.booleans()),
+                min_size=1, max_size=48))
+def test_compact_offsets_matches_numpy(items):
+    n = len(items)
+    k = 4
+    vals = np.zeros((n, k), np.int32)
+    lens = np.array([l for _, l, _ in items], np.int32)
+    mask = np.array([m for _, _, m in items], bool)
+    rng = np.random.default_rng(0)
+    for i, (v, l, _) in enumerate(items):
+        vals[i, :] = rng.integers(0, 256, k)
+    cap = int((lens * mask).sum()) + 8
+    out, total = compaction.compact_offsets(
+        jnp.asarray(vals), jnp.asarray(lens), jnp.asarray(mask), cap)
+    want = []
+    for i in range(n):
+        if mask[i]:
+            want.extend(vals[i, : lens[i]])
+    assert int(total) == len(want)
+    assert np.array_equal(np.asarray(out)[: len(want)],
+                          np.array(want, np.int32))

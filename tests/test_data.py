@@ -1,0 +1,90 @@
+"""Data pipeline: Table-4 profile fidelity, determinism, elastic sharding."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import transcode as tc
+from repro.data import pipeline as P
+from repro.data import synthetic
+from repro.data.tokenizer import ByteTokenizer, CodepointTokenizer, N_SPECIAL
+
+
+@pytest.mark.parametrize("lang,expect2,expect3",
+                         [("arabic", 0.78, 0.0), ("chinese", 0.0, 0.99),
+                          ("latin", 0.0, 0.0), ("korean", 0.01, 0.72)])
+def test_profiles_match_table4(lang, expect2, expect3):
+    b = synthetic.utf8_array(lang, 30000, seed=3)
+    lead = (b & 0xC0) != 0x80
+    nch = lead.sum()
+    f2 = ((b >= 0xC0) & (b < 0xE0)).sum() / nch
+    f3 = ((b >= 0xE0) & (b < 0xF0)).sum() / nch
+    assert abs(f2 - expect2) < 0.02
+    assert abs(f3 - expect3) < 0.02
+
+
+@pytest.mark.parametrize("lang", list(synthetic.LANG_PROFILES))
+def test_generated_utf8_is_valid(lang):
+    b = synthetic.utf8_array(lang, 5000, seed=1).astype(np.int32)
+    assert bool(tc.validate_utf8(jnp.asarray(b), len(b)))
+
+
+def test_pipeline_deterministic():
+    cfg = P.PipelineConfig(seq_len=128, global_batch=4)
+    a = P.TextPipeline(cfg).next_batch()
+    b = P.TextPipeline(cfg).next_batch()
+    assert np.array_equal(a["tokens"], b["tokens"])
+
+
+def test_pipeline_skip_ahead():
+    cfg = P.PipelineConfig(seq_len=128, global_batch=4)
+    p1 = P.TextPipeline(cfg)
+    for _ in range(3):
+        p1.next_batch()
+    want = p1.next_batch()
+    p2 = P.TextPipeline(cfg)
+    p2.skip_to(3)
+    got = p2.next_batch()
+    assert np.array_equal(want["tokens"], got["tokens"])
+
+
+def test_pipeline_elastic_host_invariance():
+    """Global batch content is invariant to the host count."""
+    cfg1 = P.PipelineConfig(seq_len=128, global_batch=4, n_hosts=1)
+    full = P.TextPipeline(cfg1).next_batch()["tokens"]
+    parts = []
+    for h in range(2):
+        cfg = P.PipelineConfig(seq_len=128, global_batch=4, n_hosts=2,
+                               host_id=h)
+        parts.append(P.TextPipeline(cfg).next_batch()["tokens"])
+    combined = np.zeros_like(full)
+    combined[0::2] = parts[0]   # host 0 owns slots 0, 2
+    combined[1::2] = parts[1]
+    assert np.array_equal(np.asarray(full), combined)
+
+
+def test_labels_shifted_and_masked():
+    cfg = P.PipelineConfig(seq_len=64, global_batch=1, langs=("latin",))
+    b = P.TextPipeline(cfg).next_batch()
+    toks, labs = np.asarray(b["tokens"][0]), np.asarray(b["labels"][0])
+    # label at i == token at i+1 wherever loss is active
+    active = labs >= 0
+    assert (labs[active] == np.roll(toks, -1)[active]).all()
+    assert (labs[-1] == -1) or (toks[-1] != 0)
+
+
+def test_byte_tokenizer_roundtrip():
+    tok = ByteTokenizer()
+    b = jnp.asarray(np.frombuffer("héllo".encode(), np.uint8).astype(np.int32))
+    ids = tok.encode(b)
+    assert int(ids.min()) >= N_SPECIAL
+    back = tok.decode(ids)
+    assert np.array_equal(np.asarray(back), np.asarray(b))
+
+
+def test_codepoint_tokenizer_in_range():
+    tok = CodepointTokenizer(vocab_size=1000)
+    cps = jnp.asarray([65, 0x4E2D, 0x1F389, 0x10FFFF])
+    ids = tok.encode(cps)
+    assert int(ids.min()) >= 0 and int(ids.max()) < 1000

@@ -1,0 +1,62 @@
+"""Flash-attention Pallas kernel vs the pure-jnp online-softmax oracle."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention
+from repro.models.common import chunked_attention
+
+
+def _ref(q, k, v, window):
+    b, s, h, d = q.shape
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    return chunked_attention(q, k, v, pos, pos, window=window, chunk=128)
+
+
+@pytest.mark.parametrize("seq,heads,dim", [(128, 2, 64), (256, 4, 128),
+                                           (384, 1, 32)])
+@pytest.mark.parametrize("window", [None, 128])
+def test_flash_matches_oracle(seq, heads, dim, window):
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv = jax.random.split(key, 3)
+    b = 2
+    q = jax.random.normal(kq, (b, seq, heads, dim), jnp.float32)
+    k = jax.random.normal(kk, (b, seq, heads, dim), jnp.float32)
+    v = jax.random.normal(kv, (b, seq, heads, dim), jnp.float32)
+    got = flash_attention(q, k, v, window=window, bq=128, bk=128)
+    want = _ref(q, k, v, window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_flash_causality():
+    """Future tokens must not influence the output."""
+    key = jax.random.PRNGKey(1)
+    b, s, h, d = 1, 256, 2, 64
+    q = jax.random.normal(key, (b, s, h, d))
+    k = jax.random.normal(jax.random.PRNGKey(2), (b, s, h, d))
+    v = jax.random.normal(jax.random.PRNGKey(3), (b, s, h, d))
+    base = flash_attention(q, k, v)
+    # mutate the future relative to position 100
+    k2 = k.at[:, 200:].set(9.9)
+    v2 = v.at[:, 200:].set(9.9)
+    out2 = flash_attention(q, k2, v2)
+    np.testing.assert_allclose(np.asarray(base[:, :200]),
+                               np.asarray(out2[:, :200]), atol=1e-6)
+
+
+def test_flash_bf16():
+    key = jax.random.PRNGKey(4)
+    b, s, h, d = 1, 128, 2, 128
+    q = jax.random.normal(key, (b, s, h, d)).astype(jnp.bfloat16)
+    k = jax.random.normal(jax.random.PRNGKey(5), (b, s, h, d)).astype(jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(6), (b, s, h, d)).astype(jnp.bfloat16)
+    got = flash_attention(q, k, v)
+    want = _ref(q, k, v, None)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=3e-2, rtol=3e-2)

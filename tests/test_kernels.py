@@ -1,0 +1,122 @@
+"""Per-kernel validation: interpret=True execution vs pure-jnp oracle.
+
+Sweeps shapes (tile-aligned and ragged) and content classes; integer
+outputs must agree exactly (array_equal, not allclose).
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.data import synthetic
+from repro.kernels import ops, ref
+from repro.kernels import utf8_decode as kdec
+from repro.kernels import utf8_validate as kval
+from repro.kernels import utf16_encode as kenc
+
+LANGS = ["latin", "arabic", "chinese", "emoji", "korean"]
+SIZES = [1, 7, 127, 1024, 1025, 4096, 5000]
+
+
+def _utf8(lang, n):
+    b = synthetic.utf8_array(lang, n, seed=42)
+    return b.astype(np.int32)
+
+
+@pytest.mark.parametrize("lang", LANGS)
+@pytest.mark.parametrize("size", SIZES)
+def test_decode_kernel_vs_ref(lang, size):
+    b = _utf8(lang, size)[:size]
+    if len(b) == 0:
+        return
+    n = len(b)
+    cp_k, lead_k, units_k, err_k = ops.decode_utf8(jnp.asarray(b), n)
+    # kernel pads to tiles with zeros; a size that cuts mid-character is a
+    # *truncation error* visible at the first padding byte — give the ref
+    # the same 4 zero-padding bytes so semantics match exactly.
+    b_pad = np.concatenate([b, np.zeros(4, np.int32)])
+    cp_r, lead_r, units_r, err_r = ref.utf8_decode_ref(jnp.asarray(b_pad))
+    assert np.array_equal(cp_k[:n], cp_r[:n])
+    assert np.array_equal(lead_k[:n], lead_r[:n])
+    assert np.array_equal(units_k[:n], units_r[:n])
+    assert bool(err_k) == bool(err_r > 0)
+
+
+@pytest.mark.parametrize("lang", LANGS)
+@pytest.mark.parametrize("size", [64, 1024, 3000])
+def test_validate_kernel_vs_ref(lang, size):
+    b = _utf8(lang, size)[:size]
+    # truncate to a character boundary so the stream stays valid
+    end = len(b)
+    while end > 0 and (b[end - 1] & 0xC0) == 0x80:
+        end -= 1
+    if end > 0 and b[end - 1] >= 0xC0:
+        end -= 1
+    b = b[:end]
+    if len(b) == 0:
+        return
+    assert bool(ops.validate_utf8(jnp.asarray(b), len(b)))
+    r = ref.utf8_validate_ref(jnp.asarray(b))
+    assert int(r) == 0
+
+
+@pytest.mark.parametrize("bad", [b"\xff", b"\xed\xa0\x80", b"\xc0\xaf",
+                                 b"\x80", b"\xf5\x80\x80\x80"])
+def test_validate_kernel_rejects(bad):
+    b = np.zeros(2048, np.int32)  # spans >1 tile
+    b[100: 100 + len(bad)] = np.frombuffer(bad, np.uint8)
+    b[: 100] = 0x41
+    assert not bool(ops.validate_utf8(jnp.asarray(b), 100 + len(bad)))
+
+
+@pytest.mark.parametrize("lang", LANGS)
+@pytest.mark.parametrize("size", [8, 1024, 1030, 4096])
+def test_utf16_encode_kernel_vs_ref(lang, size):
+    u = synthetic.utf16_units(lang, size, seed=7).astype(np.int32)[:size]
+    if len(u) == 0:
+        return
+    out, cnt, err = ops.utf16_to_utf8(jnp.asarray(u), len(u))
+    b0, b1, b2, b3, L, err_r = ref.utf16_encode_ref(jnp.asarray(u))
+    # cross-check against python oracle
+    s = u.astype(np.uint16).tobytes().decode("utf-16-le")
+    want = np.frombuffer(s.encode("utf-8"), np.uint8)
+    got = np.asarray(out)[: int(cnt)]
+    assert np.array_equal(got, want)
+    assert not bool(err)
+    assert int(err_r) == 0
+
+
+def test_kernel_transcode_cross_boundary_surrogate():
+    """A surrogate pair straddling a 1024-byte tile boundary."""
+    u = np.full(2048, 0x41, np.int32)
+    u[1023] = 0xD83C
+    u[1024] = 0xDF89
+    out, cnt, err = ops.utf16_to_utf8(jnp.asarray(u), 2048)
+    assert not bool(err)
+    s = u.astype(np.uint16).tobytes().decode("utf-16-le")
+    want = np.frombuffer(s.encode("utf-8"), np.uint8)
+    assert np.array_equal(np.asarray(out)[: int(cnt)], want)
+
+
+def test_kernel_decode_cross_boundary_char():
+    """A 4-byte UTF-8 char straddling the tile boundary."""
+    s = "A" * 1022 + "🎉" + "B" * 100
+    b = np.frombuffer(s.encode("utf-8"), np.uint8).astype(np.int32)
+    out, cnt, err = ops.utf8_to_utf16(jnp.asarray(b), len(b))
+    want = np.frombuffer(s.encode("utf-16-le"), np.uint16)
+    assert not bool(err)
+    assert np.array_equal(np.asarray(out)[: int(cnt)], want)
+
+
+def test_kernel_vs_core_blockparallel():
+    """The Pallas path and the pure-XLA path agree everywhere."""
+    from repro.core import transcode as tc
+    for lang in LANGS:
+        b = _utf8(lang, 2000)
+        o1, c1, e1 = ops.utf8_to_utf16(jnp.asarray(b), len(b))
+        o2, c2, e2 = tc.utf8_to_utf16(jnp.asarray(b), len(b))
+        assert int(c1) == int(c2)
+        assert np.array_equal(np.asarray(o1)[: int(c1)],
+                              np.asarray(o2)[: int(c2)])
+        assert bool(e1) == bool(e2)

@@ -1,0 +1,116 @@
+"""Directed edge cases from the paper's §3 validation rules."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import transcode as tc
+
+
+def _check_invalid(raw: bytes):
+    b = np.zeros(max(len(raw), 8), np.int32)
+    b[: len(raw)] = np.frombuffer(raw, np.uint8)
+    assert not bool(tc.validate_utf8(jnp.asarray(b), len(raw))), raw
+    _, _, err = tc.utf8_to_utf16(jnp.asarray(b), len(raw))
+    assert bool(err), raw
+
+
+def _check_valid(raw: bytes):
+    b = np.zeros(max(len(raw), 8), np.int32)
+    b[: len(raw)] = np.frombuffer(raw, np.uint8)
+    assert bool(tc.validate_utf8(jnp.asarray(b), len(raw))), raw
+
+
+# paper rule 1: five MSBs never all ones
+@pytest.mark.parametrize("lead", [0xF8, 0xFC, 0xFE, 0xFF])
+def test_forbidden_lead_bytes(lead):
+    _check_invalid(bytes([lead, 0x80, 0x80, 0x80, 0x80]))
+
+
+# paper rule 2/3: continuation bookkeeping
+def test_missing_continuation():
+    _check_invalid(b"\xC3A")          # 2-byte lead + ASCII
+    _check_invalid(b"\xE4\xB8A")      # 3-byte lead + 1 cont + ASCII
+    _check_invalid(b"\xF0\x9F\x98A")  # 4-byte lead + 2 cont + ASCII
+
+
+def test_stray_continuation():
+    _check_invalid(b"\x80")
+    _check_invalid(b"A\x80B")
+    _check_invalid(b"\xC3\xA9\x80")   # valid 2-byte then stray cont
+
+
+def test_truncated_at_end():
+    _check_invalid(b"abc\xC3")
+    _check_invalid(b"abc\xE4\xB8")
+    _check_invalid(b"abc\xF0\x9F\x98")
+
+
+# paper rule 4: overlong encodings
+def test_overlong():
+    _check_invalid(b"\xC0\xAF")           # '/' in 2 bytes
+    _check_invalid(b"\xC1\xBF")
+    _check_invalid(b"\xE0\x80\xAF")       # overlong 3-byte
+    _check_invalid(b"\xE0\x9F\xBF")       # < U+0800
+    _check_invalid(b"\xF0\x80\x80\xAF")   # overlong 4-byte
+    _check_invalid(b"\xF0\x8F\xBF\xBF")   # < U+10000
+
+
+# paper rule 5: beyond U+10FFFF
+def test_too_large():
+    _check_invalid(b"\xF4\x90\x80\x80")   # U+110000
+    _check_invalid(b"\xF5\x80\x80\x80")
+    _check_invalid(b"\xF7\xBF\xBF\xBF")
+
+
+# paper rule 6: surrogate range U+D800..DFFF
+def test_surrogates_in_utf8():
+    _check_invalid(b"\xED\xA0\x80")       # U+D800
+    _check_invalid(b"\xED\xBF\xBF")       # U+DFFF
+    _check_valid(b"\xED\x9F\xBF")         # U+D7FF boundary: valid
+    _check_valid(b"\xEE\x80\x80")         # U+E000 boundary: valid
+
+
+def test_boundaries_valid():
+    for cp in [0x7F, 0x80, 0x7FF, 0x800, 0xFFFF, 0x10000, 0x10FFFF]:
+        _check_valid(chr(cp).encode("utf-8"))
+
+
+def test_surrogate_pair_transcoding():
+    s = "🎉"  # U+1F389 -> surrogate pair
+    b = np.frombuffer(s.encode("utf-8"), np.uint8).astype(np.int32)
+    u = np.frombuffer(s.encode("utf-16-le"), np.uint16).astype(np.int32)
+    assert list(u) == [0xD83C, 0xDF89]
+    out, cnt, err = tc.utf8_to_utf16(jnp.asarray(b), len(b))
+    assert not bool(err) and np.array_equal(np.asarray(out)[: int(cnt)], u)
+    out, cnt, err = tc.utf16_to_utf8(jnp.asarray(u), len(u))
+    assert not bool(err) and np.array_equal(np.asarray(out)[: int(cnt)], b)
+
+
+def test_unpaired_surrogates_utf16():
+    for units in [[0xD800], [0xDC00], [0xD800, 0x41], [0x41, 0xDC00],
+                  [0xDC00, 0xD800]]:
+        u = np.zeros(8, np.int32)
+        u[: len(units)] = units
+        assert not bool(tc.validate_utf16(jnp.asarray(u), len(units))), units
+        _, _, err = tc.utf16_to_utf8(jnp.asarray(u), len(units))
+        assert bool(err), units
+
+
+def test_ascii_fast_path_equivalence():
+    s = ("the quick brown fox " * 20).encode()
+    b = jnp.asarray(np.frombuffer(s, np.uint8).astype(np.int32))
+    for fast in (True, False):
+        out, cnt, err = tc.utf8_to_utf16(b, len(s), ascii_fastpath=fast)
+        assert int(cnt) == len(s) and not bool(err)
+        assert np.array_equal(np.asarray(out)[: len(s)],
+                              np.frombuffer(s, np.uint8))
+
+
+def test_utf16le_byte_helpers():
+    s = "héllo 🎉"
+    raw = np.frombuffer(s.encode("utf-16-le"), np.uint8).astype(np.int32)
+    units = tc.utf16le_bytes_to_units(jnp.asarray(raw))
+    back = tc.units_to_utf16le_bytes(units)
+    assert np.array_equal(np.asarray(back), raw)
