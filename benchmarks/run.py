@@ -1,36 +1,86 @@
 """Benchmark aggregator: ``PYTHONPATH=src python -m benchmarks.run``.
 
 Runs every paper-table analogue (Tables 5/6/9, Table 8 proxy, Fig. 7)
-plus the ingest-pipeline microbench, printing CSV blocks.  Pass --quick
-for a reduced sweep (CI).
+plus the ingest-pipeline microbench, printing CSV blocks and writing a
+machine-readable ``BENCH_transcode.json`` (strategy x language x Gchars/s
+for every table) so the perf trajectory is tracked across PRs.
+
+Flags:
+  --quick   reduced sweep (CI)
+  --smoke   2-language micro sweep of Tables 5/6/9 only (kernel-regression
+            gate for scripts/check.sh; still writes the JSON)
+  --out P   JSON output path (default: BENCH_transcode.json in the cwd)
 """
 
+import json
 import sys
 
 
-def main() -> None:
-    quick = "--quick" in sys.argv
+def _records(table: str, rows):
+    """Flatten a strategy-keyed CSV row block into one record per cell."""
+    out = []
+    for row in rows:
+        lang = row.get("lang")
+        for key, val in row.items():
+            if key == "lang" or not isinstance(val, float):
+                continue
+            out.append({"table": table, "lang": lang, "strategy": key,
+                        "gchars_per_s": val})
+    return out
+
+
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    quick = "--quick" in argv
+    smoke = "--smoke" in argv
+    out_path = "BENCH_transcode.json"
+    if "--out" in argv:
+        i = argv.index("--out")
+        if i + 1 >= len(argv) or argv[i + 1].startswith("--"):
+            sys.exit("error: --out requires a path argument")
+        out_path = argv[i + 1]
+
     from benchmarks import transcode_bench as tb
 
-    langs = ["arabic", "chinese", "emoji", "latin"] if quick \
-        else tb.LIPSUM_LANGS
-    n = 1 << 13 if quick else tb.N_CHARS
+    if smoke:
+        # Two languages at full buffer size: at small sizes the ASCII
+        # fast paths are dispatch-overhead-bound and the strategy
+        # ordering is timer noise.
+        langs, n = ["latin", "arabic"], tb.N_CHARS
+    elif quick:
+        langs, n = ["arabic", "chinese", "emoji", "latin"], 1 << 13
+    else:
+        langs, n = tb.LIPSUM_LANGS, tb.N_CHARS
 
-    tb.print_rows("Table 5: non-validating UTF-8 -> UTF-16 (Gchars/s)",
-                  tb.table5(langs, n))
-    tb.print_rows("Table 6: validating UTF-8 -> UTF-16 (Gchars/s)",
-                  tb.table6(langs, n, with_scalar=not quick))
-    tb.print_rows("Table 9: validating UTF-16 -> UTF-8 (Gchars/s)",
-                  tb.table9(langs, n))
-    tb.print_rows("Table 8 proxy: ops per input byte",
-                  tb.table8_proxy())
-    tb.print_rows("Fig 7: input-size sweep (arabic)",
-                  tb.fig7(sizes=(64, 1024, 16384) if quick
-                          else (64, 256, 1024, 4096, 16384, 65536)))
+    report = {"langs": langs, "n_chars": n,
+              "mode": "smoke" if smoke else ("quick" if quick else "full"),
+              "records": []}
 
-    from benchmarks import pipeline_bench as pb
-    tb.print_rows("Pipeline: device ingest throughput", pb.ingest_bench(
-        n_chars=1 << 12 if quick else 1 << 15))
+    t5 = tb.table5(langs, n)
+    tb.print_rows("Table 5: non-validating UTF-8 -> UTF-16 (Gchars/s)", t5)
+    report["records"] += _records("table5", t5)
+
+    t6 = tb.table6(langs, n, with_scalar=not (quick or smoke))
+    tb.print_rows("Table 6: validating UTF-8 -> UTF-16 (Gchars/s)", t6)
+    report["records"] += _records("table6", t6)
+
+    t9 = tb.table9(langs, n)
+    tb.print_rows("Table 9: validating UTF-16 -> UTF-8 (Gchars/s)", t9)
+    report["records"] += _records("table9", t9)
+
+    if not smoke:
+        tb.print_rows("Table 8 proxy: ops per input byte", tb.table8_proxy())
+        fig7 = tb.fig7(sizes=(64, 1024, 16384) if quick
+                       else (64, 256, 1024, 4096, 16384, 65536))
+        tb.print_rows("Fig 7: input-size sweep (arabic)", fig7)
+
+        from benchmarks import pipeline_bench as pb
+        tb.print_rows("Pipeline: device ingest throughput", pb.ingest_bench(
+            n_chars=1 << 12 if quick else 1 << 15))
+
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"\nwrote {out_path} ({len(report['records'])} records)")
 
 
 if __name__ == "__main__":

@@ -26,8 +26,8 @@ def main():
     bad = jnp.asarray(np.array([0xED, 0xA0, 0x80, 0, 0, 0, 0, 0], np.int32))
     show("validate_utf8(surrogate U+D800)", bool(tc.validate_utf8(bad, 3)))
 
-    # --- UTF-8 -> UTF-16 (both strategies) ------------------------------
-    for strat in ("blockparallel", "windowed"):
+    # --- UTF-8 -> UTF-16 (all strategies) -------------------------------
+    for strat in ("fused", "blockparallel", "windowed"):
         out, cnt, err = tc.transcode_utf8_to_utf16(
             jnp.asarray(utf8), len(utf8), strategy=strat)
         got = np.asarray(out)[: int(cnt)].astype(np.uint16)

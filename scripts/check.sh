@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Fast regression gate: tier-1 tests + a 2-language transcode bench smoke
+# (interpret-mode kernels).  Run from anywhere; exits non-zero on any
+# test failure, bench crash, or a bench JSON missing one of the three
+# transcode strategies.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+
+python -m benchmarks.run --smoke --out BENCH_transcode.json
+
+python - <<'PY'
+import json
+report = json.load(open("BENCH_transcode.json"))
+strategies = {r["strategy"] for r in report["records"]}
+need = {"fused", "blockparallel", "windowed(paper)"}
+missing = need - strategies
+assert not missing, f"BENCH_transcode.json missing strategies: {missing}"
+tables = {r["table"] for r in report["records"]}
+assert {"table5", "table6", "table9"} <= tables, tables
+print("bench smoke OK:", sorted(strategies), "across", sorted(tables))
+PY

@@ -14,6 +14,12 @@ way XLA lowers efficiently.  Both forms are provided:
 
 Both are jit-safe: output capacity is static, the logical length is returned
 as a scalar.
+
+The fused two-pass pipeline (DESIGN.md §5) replaces the *global* cumsum +
+scatter with hierarchical compaction: an intra-tile scan inside the Pallas
+kernel (:func:`tile_exclusive_scan`) plus a tiny inter-tile scan over one
+scalar per tile (:func:`tile_base_offsets`).  Only the two helpers below
+ever see per-tile state; no full-capacity index array is materialized.
 """
 
 from __future__ import annotations
@@ -60,6 +66,37 @@ def compact_offsets(values: jax.Array, lengths: jax.Array, mask: jax.Array,
     out = jnp.full((capacity,), fill, values.dtype)
     out = out.at[dest.reshape(-1)].set(values.reshape(-1), mode="drop")
     return out, total
+
+
+def tile_exclusive_scan(x: jax.Array, rows: int = 8):
+    """Flat exclusive prefix sum of a VMEM tile, as two short scans.
+
+    ``x`` is a flat int32 tile (e.g. 1024 lanes) viewed as ``(rows, -1)``:
+    a per-row inclusive cumsum along the lane axis plus a ``rows``-element
+    scan of the row totals gives the row-major flat prefix — the TPU-native
+    shape for an in-register scan (no 1D lane-crossing cumsum needed).
+
+    Returns ``(exclusive, total)``: the flat exclusive prefix (same shape
+    as ``x``) and the scalar tile total.  Runs inside Pallas kernels.
+    """
+    x2 = x.reshape(rows, -1)
+    incl = jnp.cumsum(x2, axis=1)
+    row_tot = incl[:, -1]
+    row_off = (jnp.cumsum(row_tot) - row_tot)[:, None]
+    flat_incl = (incl + row_off).reshape(x.shape)
+    return flat_incl - x, jnp.sum(row_tot)
+
+
+def tile_base_offsets(tile_totals: jax.Array):
+    """Exclusive scan over per-tile totals -> (base_offsets, grand_total).
+
+    This is the only inter-tile coordination the fused pipeline needs: an
+    ``nblk``-element cumsum (one scalar per tile, not one per element).
+    """
+    base = jnp.cumsum(tile_totals) - tile_totals
+    total = (base[-1] + tile_totals[-1]) if tile_totals.shape[0] > 0 \
+        else jnp.int32(0)
+    return base, total
 
 
 def compact_gather(values: jax.Array, mask: jax.Array, capacity: int, fill=0):

@@ -6,11 +6,21 @@ and batch with ``vmap`` / shard with ``pjit``.  Outputs are (buffer, count,
 err): a fixed-capacity buffer, the number of meaningful elements, and a
 validation flag.
 
-Strategies:
-  * ``blockparallel`` (default) -- speculative per-position decode + cumsum
-    compaction; fully branch-free, the TPU-native beyond-paper form.
-  * ``windowed``                -- the paper-faithful Algorithm 2/3 structure
-    (see ``repro.core.windowed``).
+Strategies (the ``strategy=`` kwarg of ``transcode_utf8_to_utf16`` /
+``transcode_utf16_to_utf8``; full decision table in DESIGN.md §5):
+
+  * ``fused`` (default)  -- two-pass Pallas pipeline with hierarchical
+    in-kernel compaction and narrow (uint8/uint16) I/O; no full-capacity
+    int32 intermediate ever reaches HBM.  The high-performance path
+    (``repro.kernels.fused_transcode``).  Output buffers are narrow
+    (uint16 units / uint8 bytes); ``buffer[:count]``, ``count`` and
+    ``err`` are bit-identical to ``blockparallel``.
+  * ``blockparallel``    -- speculative per-position decode + global XLA
+    cumsum compaction; fully branch-free, pure-jnp (no Pallas), the
+    portable beyond-paper form and the semantic reference.
+  * ``windowed``         -- the paper-faithful Algorithm 2/3 structure
+    (see ``repro.core.windowed``); serial window walk, the measured
+    baseline.
 
 The ASCII fast path of Algorithm 3 survives as a whole-chunk ``lax.cond``:
 for ASCII-pure chunks (the paper's Latin benchmark) the entire decode is a
@@ -231,13 +241,20 @@ def units_to_utf16le_bytes(u):
 
 
 # ---------------------------------------------------------------------------
-# Strategy dispatch (windowed = paper-faithful; imported lazily to avoid a
-# circular import with repro.core.windowed).
+# Strategy dispatch (fused = Pallas two-pass, windowed = paper-faithful;
+# both imported lazily to avoid circular imports).
+
+DEFAULT_STRATEGY = "fused"
 
 
-def transcode_utf8_to_utf16(b, n_valid=None, *, strategy: str = "blockparallel",
+def transcode_utf8_to_utf16(b, n_valid=None, *, strategy: str = DEFAULT_STRATEGY,
                             validate: bool = True):
-    if strategy == "blockparallel":
+    """Strategy-dispatched UTF-8 -> UTF-16.  See module docstring."""
+    if strategy == "fused":
+        from repro.kernels import fused_transcode
+        return fused_transcode.utf8_to_utf16_fused(b, n_valid,
+                                                   validate=validate)
+    elif strategy == "blockparallel":
         return utf8_to_utf16(b, n_valid, validate=validate)
     elif strategy == "windowed":
         from repro.core import windowed
@@ -245,9 +262,14 @@ def transcode_utf8_to_utf16(b, n_valid=None, *, strategy: str = "blockparallel",
     raise ValueError(f"unknown strategy: {strategy}")
 
 
-def transcode_utf16_to_utf8(u, n_valid=None, *, strategy: str = "blockparallel",
+def transcode_utf16_to_utf8(u, n_valid=None, *, strategy: str = DEFAULT_STRATEGY,
                             validate: bool = True):
-    if strategy == "blockparallel":
+    """Strategy-dispatched UTF-16 -> UTF-8.  See module docstring."""
+    if strategy == "fused":
+        from repro.kernels import fused_transcode
+        return fused_transcode.utf16_to_utf8_fused(u, n_valid,
+                                                   validate=validate)
+    elif strategy == "blockparallel":
         return utf16_to_utf8(u, n_valid, validate=validate)
     elif strategy == "windowed":
         from repro.core import windowed

@@ -1,0 +1,298 @@
+"""Fused two-pass Pallas transcode pipeline (strategy ``"fused"``).
+
+This is the hierarchical, in-kernel answer to the global cumsum+scatter
+compaction of ``repro.core.transcode`` (DESIGN.md §5).  The block-parallel
+strategy round-trips three full-capacity int32 candidate arrays
+(cp / lead / units, 12 bytes per input byte) through HBM before XLA
+compacts them — the TPU analogue of writing every speculative lane to
+memory and shuffling afterwards.  Here nothing full-capacity and nothing
+int32 ever leaves the kernels:
+
+  Pass 1 (count)   Each grid step speculatively decodes its VMEM tile
+                   (re-using :func:`repro.kernels.utf8_decode.decode_tile`
+                   / :func:`repro.kernels.utf16_encode.encode_tile`) and
+                   emits ONE scalar — the tile's total output length —
+                   plus a fused validation flag.  HBM egress: 8 bytes per
+                   1024-element tile.
+
+  Inter-tile scan  An ``nblk``-element exclusive cumsum over the per-tile
+                   totals (``compaction.tile_base_offsets``) yields each
+                   tile's base offset in the compact output.  This is the
+                   only global coordination: nblk scalars, not N lanes.
+
+  Pass 2 (write)   Each grid step re-decodes its tile (decode is cheap;
+                   bandwidth is not), compacts it *inside VMEM* with an
+                   intra-tile exclusive scan (``tile_exclusive_scan``) and
+                   an in-register scatter — the hierarchical equivalent of
+                   AVX-512 ``vpcompressb`` compress-store — and stores the
+                   compact tile at ``base[tile]``.  Output lane j of the
+                   final buffer is written exactly once, at
+                   ``base[tile] + local_rank``.
+
+The writer stores a full tile-width window at ``base[tile]``; the slack
+beyond the tile's total is overwritten by the next tile's window (grid
+steps execute in order), and the slack after the *last* tile is cleared
+by the wrapper.  I/O dtypes are narrow end-to-end: UTF-8 bytes travel as
+``uint8`` and UTF-16 units as ``uint16``; lanes widen to int32 only
+inside VMEM.  Ingress HBM traffic drops 4x vs the int32 paths.
+
+Interpreter-mode notes: the in-tile compaction is expressed as a jnp
+scatter on VMEM-resident values and the writer output block is the whole
+staging buffer revisited every grid step with a dynamic-offset store.
+Both passes are plain ``pl.pallas_call``s and run under
+``interpret=True`` on CPU (auto-detected, see ``repro.kernels.runtime``).
+Compiled-TPU caveat: the whole-buffer output block implies full-buffer
+VMEM residency, which bounds a single call to roughly VMEM-sized inputs
+(~4 MB); larger documents must be chunked at that granularity, or the
+writer re-expressed with a per-tile output block at a scalar-prefetched
+base offset (PrefetchScalarGridSpec) plus the on-chip shuffle form of
+the in-tile scatter — the planned shape for real-TPU deployment.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import compaction
+from repro.core import utf16 as u16mod
+from repro.kernels import runtime
+from repro.kernels import utf8_decode as kdec
+from repro.kernels import utf16_encode as kenc
+
+ROWS = 8
+LANES = 128
+BLOCK = ROWS * LANES
+# Per-tile staging widths are sized for the SPECULATIVE worst case, not the
+# valid-input worst case: on garbage input every byte of a tile can decode
+# as a 4-byte lead with a supplementary code point (2 units), so a UTF-8
+# tile can claim up to 2*BLOCK units.  A UTF-16 tile tops out at
+# 3*BLOCK + 1 bytes: a 4-byte lane is normally followed in-tile by its
+# 0-byte trailing-surrogate lane, EXCEPT in the last lane, whose pairing
+# low surrogate lives in the next tile (1023 three-byte lanes + one
+# 4-byte lane).  Undersizing these desynchronizes base offsets from
+# blockparallel's global cumsum and overflows the windowed store.
+STAGE16 = 2 * BLOCK      # max UTF-16 units out of one 1024-byte UTF-8 tile
+STAGE8 = 3 * BLOCK + 1   # max UTF-8 bytes out of one 1024-unit UTF-16 tile
+
+
+def _tile(x):
+    """Pad flat narrow array to whole tiles + one zero boundary tile/side."""
+    return runtime.tile_with_boundaries(x, ROWS, LANES, boundary_tiles=2)
+
+
+def _gidx(shape):
+    """Global stream index of every lane in the current tile."""
+    i = pl.program_id(0)
+    return i * BLOCK + jnp.arange(BLOCK, dtype=jnp.int32).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# UTF-8 -> UTF-16
+
+
+def _count8_kernel(n_ref, bp_ref, b_ref, bn_ref, tot_ref, err_ref):
+    b = b_ref[...].astype(jnp.int32)
+    bp = bp_ref[...].astype(jnp.int32)
+    bn = bn_ref[...].astype(jnp.int32)
+    _cp, is_lead, units, err_map = kdec.decode_tile(b, bp, bn)
+    live = is_lead & (_gidx(b.shape) < n_ref[0])
+    tot_ref[0] = jnp.sum(jnp.where(live, units, 0))
+    err_ref[0] = jnp.max(err_map.astype(jnp.int32))
+
+
+def _write8_kernel(n_ref, base_ref, bp_ref, b_ref, bn_ref, out_ref):
+    b = b_ref[...].astype(jnp.int32)
+    bp = bp_ref[...].astype(jnp.int32)
+    bn = bn_ref[...].astype(jnp.int32)
+    cp, is_lead, units, _err = kdec.decode_tile(b, bp, bn)
+    live = (is_lead & (_gidx(b.shape) < n_ref[0])).reshape(-1)
+    eff = jnp.where(live, units.reshape(-1), 0)
+    rank, _tot = compaction.tile_exclusive_scan(eff, rows=ROWS)
+    _u, u0, u1, _bad = u16mod.encode_candidates(cp)
+    # In-register compress-store (vpcompressb analogue): scatter the 1-2
+    # code units of each live lane to base-relative rank inside VMEM.
+    stage = jnp.zeros((STAGE16,), jnp.int32)
+    stage = stage.at[jnp.where(live, rank, STAGE16)].set(
+        u0.reshape(-1), mode="drop")
+    stage = stage.at[jnp.where(live & (eff == 2), rank + 1, STAGE16)].set(
+        u1.reshape(-1), mode="drop")
+    out_ref[pl.ds(base_ref[0], STAGE16)] = stage.astype(jnp.uint16)
+
+
+@functools.partial(jax.jit, static_argnames=("validate", "interpret",
+                                             "ascii_fastpath", "masked"))
+def _utf8_to_utf16_impl(b, n, validate, interpret, ascii_fastpath, masked):
+    cap = b.shape[0]
+    idx = jnp.arange(cap)
+    bm = jnp.where(idx < n, b, 0).astype(jnp.uint8) if masked else b
+
+    def general(bm):
+        b3, nblk = _tile(bm)
+        n1 = jnp.asarray(n, jnp.int32).reshape(1)
+        spec = lambda off: pl.BlockSpec(
+            (1, ROWS, LANES), lambda i, off=off: (i + off, 0, 0))
+        scalar = pl.BlockSpec((1,), lambda i: (0,))
+        per_tile = pl.BlockSpec((1,), lambda i: (i,))
+        totals, errs = pl.pallas_call(
+            _count8_kernel,
+            grid=(nblk,),
+            in_specs=[scalar, spec(0), spec(1), spec(2)],
+            out_specs=[per_tile, per_tile],
+            out_shape=[jax.ShapeDtypeStruct((nblk,), jnp.int32),
+                       jax.ShapeDtypeStruct((nblk,), jnp.int32)],
+            interpret=interpret,
+        )(n1, b3, b3, b3)
+        base, total = compaction.tile_base_offsets(totals)
+        outp = pl.pallas_call(
+            _write8_kernel,
+            grid=(nblk,),
+            in_specs=[scalar, per_tile, spec(0), spec(1), spec(2)],
+            # The whole compact buffer is one revisited block: each grid
+            # step stores its tile at a data-dependent offset inside it.
+            # Sized so the window store at the largest possible base
+            # (STAGE16 per preceding tile, speculative worst case) fits.
+            out_specs=pl.BlockSpec((nblk * STAGE16,), lambda i: (0,)),
+            out_shape=jax.ShapeDtypeStruct((nblk * STAGE16,), jnp.uint16),
+            interpret=interpret,
+        )(n1, base, b3, b3, b3)
+        # Keep the first `cap` lanes (matching blockparallel's drop-at-
+        # capacity) and clear the write-window slack after the last tile.
+        outp = outp[:cap]
+        outp = jnp.where(jnp.arange(cap) < total, outp, 0)
+        err = ((jnp.max(errs) > 0) | kdec.tail_lead_err(bm, n)) if validate \
+            else jnp.bool_(False)
+        return outp, total, err
+
+    def ascii(bm):
+        # Paper Algorithm 3 fast path: widening copy (uint8 -> uint16).
+        return bm.astype(jnp.uint16), jnp.asarray(n, jnp.int32), \
+            jnp.bool_(False)
+
+    if not ascii_fastpath:
+        return general(bm)
+    return jax.lax.cond(jnp.all(bm < 0x80), ascii, general, bm)
+
+
+def utf8_to_utf16_fused(b, n_valid=None, *, validate: bool = True,
+                        interpret=None, ascii_fastpath: bool = True):
+    """Fused two-pass UTF-8 -> UTF-16 transcode.
+
+    Returns ``(u16_buffer[uint16, capacity=len(b)], count, err)`` —
+    bit-identical in ``buffer[:count]``/``count``/``err`` to the
+    block-parallel strategy, with narrow I/O and no full-capacity int32
+    intermediates.
+    """
+    b = jnp.asarray(b)
+    if b.dtype != jnp.uint8:
+        b = b.astype(jnp.uint8)
+    n = b.shape[0] if n_valid is None else n_valid
+    return _utf8_to_utf16_impl(
+        b, jnp.asarray(n, jnp.int32), validate,
+        runtime.resolve_interpret(interpret), ascii_fastpath,
+        n_valid is not None)
+
+
+# ---------------------------------------------------------------------------
+# UTF-16 -> UTF-8
+
+
+def _count16_kernel(n_ref, up_ref, u_ref, un_ref, tot_ref, err_ref):
+    u = u_ref[...].astype(jnp.int32)
+    up = up_ref[...].astype(jnp.int32)
+    un = un_ref[...].astype(jnp.int32)
+    _b0, _b1, _b2, _b3, L, err_map = kenc.encode_tile(u, up, un)
+    live = (L > 0) & (_gidx(u.shape) < n_ref[0])
+    tot_ref[0] = jnp.sum(jnp.where(live, L, 0))
+    err_ref[0] = jnp.max(err_map.astype(jnp.int32))
+
+
+def _write16_kernel(n_ref, base_ref, up_ref, u_ref, un_ref, out_ref):
+    u = u_ref[...].astype(jnp.int32)
+    up = up_ref[...].astype(jnp.int32)
+    un = un_ref[...].astype(jnp.int32)
+    b0, b1, b2, b3, L, _err = kenc.encode_tile(u, up, un)
+    live = ((L > 0) & (_gidx(u.shape) < n_ref[0])).reshape(-1)
+    eff = jnp.where(live, L.reshape(-1), 0)
+    rank, _tot = compaction.tile_exclusive_scan(eff, rows=ROWS)
+    # Variable 1-4 byte egress: ``compact_offsets`` semantics, in-tile.
+    stage = jnp.zeros((STAGE8,), jnp.int32)
+    stage = stage.at[jnp.where(live, rank, STAGE8)].set(
+        b0.reshape(-1), mode="drop")
+    stage = stage.at[jnp.where(live & (eff >= 2), rank + 1, STAGE8)].set(
+        b1.reshape(-1), mode="drop")
+    stage = stage.at[jnp.where(live & (eff >= 3), rank + 2, STAGE8)].set(
+        b2.reshape(-1), mode="drop")
+    stage = stage.at[jnp.where(live & (eff == 4), rank + 3, STAGE8)].set(
+        b3.reshape(-1), mode="drop")
+    out_ref[pl.ds(base_ref[0], STAGE8)] = stage.astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("validate", "interpret",
+                                             "ascii_fastpath", "masked"))
+def _utf16_to_utf8_impl(u, n, validate, interpret, ascii_fastpath, masked):
+    cap_in = u.shape[0]
+    cap = 3 * cap_in
+    idx = jnp.arange(cap_in)
+    um = jnp.where(idx < n, u, 0).astype(jnp.uint16) if masked else u
+
+    def general(um):
+        u3, nblk = _tile(um)
+        n1 = jnp.asarray(n, jnp.int32).reshape(1)
+        spec = lambda off: pl.BlockSpec(
+            (1, ROWS, LANES), lambda i, off=off: (i + off, 0, 0))
+        scalar = pl.BlockSpec((1,), lambda i: (0,))
+        per_tile = pl.BlockSpec((1,), lambda i: (i,))
+        totals, errs = pl.pallas_call(
+            _count16_kernel,
+            grid=(nblk,),
+            in_specs=[scalar, spec(0), spec(1), spec(2)],
+            out_specs=[per_tile, per_tile],
+            out_shape=[jax.ShapeDtypeStruct((nblk,), jnp.int32),
+                       jax.ShapeDtypeStruct((nblk,), jnp.int32)],
+            interpret=interpret,
+        )(n1, u3, u3, u3)
+        base, total = compaction.tile_base_offsets(totals)
+        outp = pl.pallas_call(
+            _write16_kernel,
+            grid=(nblk,),
+            in_specs=[scalar, per_tile, spec(0), spec(1), spec(2)],
+            out_specs=pl.BlockSpec((nblk * STAGE8,), lambda i: (0,)),
+            out_shape=jax.ShapeDtypeStruct((nblk * STAGE8,), jnp.uint8),
+            interpret=interpret,
+        )(n1, base, u3, u3, u3)
+        outp = outp[:cap]
+        outp = jnp.where(jnp.arange(cap) < total, outp, 0)
+        err = (jnp.max(errs) > 0) if validate else jnp.bool_(False)
+        return outp, total, err
+
+    def ascii(um):
+        out = jnp.concatenate(
+            [um.astype(jnp.uint8), jnp.zeros((cap - cap_in,), jnp.uint8)])
+        return out, jnp.asarray(n, jnp.int32), jnp.bool_(False)
+
+    if not ascii_fastpath:
+        return general(um)
+    return jax.lax.cond(jnp.all(um < 0x80), ascii, general, um)
+
+
+def utf16_to_utf8_fused(u, n_valid=None, *, validate: bool = True,
+                        interpret=None, ascii_fastpath: bool = True):
+    """Fused two-pass UTF-16 -> UTF-8 transcode.
+
+    Returns ``(byte_buffer[uint8, capacity=3*len(u)], count, err)`` —
+    bit-identical in ``buffer[:count]``/``count``/``err`` to the
+    block-parallel strategy, with narrow I/O and no full-capacity int32
+    intermediates.
+    """
+    u = jnp.asarray(u)
+    if u.dtype != jnp.uint16:
+        u = u.astype(jnp.uint16)
+    n = u.shape[0] if n_valid is None else n_valid
+    return _utf16_to_utf8_impl(
+        u, jnp.asarray(n, jnp.int32), validate,
+        runtime.resolve_interpret(interpret), ascii_fastpath,
+        n_valid is not None)

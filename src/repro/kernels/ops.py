@@ -2,9 +2,9 @@
 
 Each op pads the flat input to whole (ROWS, LANES) VMEM tiles (adding the
 zero boundary tiles the kernels' prev/next BlockSpecs expect), invokes the
-kernel, and strips the padding.  On this container kernels run with
-``interpret=True`` (CPU execution of the kernel body); on a real TPU the
-same code path compiles with ``interpret=False``.
+kernel, and strips the padding.  Execution mode is auto-detected
+(``repro.kernels.runtime``): kernels run interpreted on CPU hosts and
+compiled on TPU; pass ``interpret=True/False`` to force either.
 
 The kernel-backed transcoders compose a Pallas compute stage (per-lane
 classification + bit surgery + fused validation) with an XLA compaction
@@ -21,9 +21,12 @@ import jax.numpy as jnp
 
 from repro.core import compaction
 from repro.core import utf16 as u16mod
+from repro.kernels import runtime
 from repro.kernels import utf8_decode as kdec
 from repro.kernels import utf8_validate as kval
 from repro.kernels import utf16_encode as kenc
+from repro.kernels.fused_transcode import (  # noqa: F401  (re-export)
+    utf8_to_utf16_fused, utf16_to_utf8_fused)
 
 ROWS, LANES, BLOCK = kdec.ROWS, kdec.LANES, kdec.BLOCK
 
@@ -38,39 +41,33 @@ def _mask_padding(x, n_valid):
 
 def _tile(x, boundary_tiles: int):
     """Pad flat int32 x to whole BLOCK tiles + zero boundary tiles."""
-    n = x.shape[0]
-    nblk = max(1, -(-n // BLOCK))
-    pad = nblk * BLOCK - n
-    x = jnp.concatenate([x, jnp.zeros((pad,), jnp.int32)])
-    x3 = x.reshape(nblk, ROWS, LANES)
-    z = jnp.zeros((1, ROWS, LANES), jnp.int32)
-    if boundary_tiles == 1:        # leading zero tile only (validate)
-        return jnp.concatenate([z, x3], 0), nblk
-    return jnp.concatenate([z, x3, z], 0), nblk  # both ends (decode/encode)
+    return runtime.tile_with_boundaries(x, ROWS, LANES, boundary_tiles)
+
+
+def validate_utf8(b, n_valid=None, interpret=None):
+    """Keiser-Lemire validation via the Pallas kernel.  Scalar bool."""
+    return _validate_utf8_jit(b, n_valid, runtime.resolve_interpret(interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def validate_utf8(b, n_valid=None, interpret: bool = True):
-    """Keiser-Lemire validation via the Pallas kernel.  Scalar bool."""
+def _validate_utf8_jit(b, n_valid, interpret):
     b, n = _mask_padding(b, n_valid)
     b3, _ = _tile(b, boundary_tiles=1)
     errs = kval._call(b3, interpret=interpret)
     # Tail truncation (needs the logical length; checked outside the kernel).
-    idx = jnp.arange(b.shape[0])
-    tail_lead = (
-        ((b >= 0xC0) & (idx >= n - 1))
-        | ((b >= 0xE0) & (idx >= n - 2))
-        | ((b >= 0xF0) & (idx >= n - 3))
-    ) & (idx < n)
-    return (jnp.max(errs) == 0) & ~jnp.any(tail_lead)
+    return (jnp.max(errs) == 0) & ~kdec.tail_lead_err(b, n)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def decode_utf8(b, n_valid=None, interpret: bool = True):
+def decode_utf8(b, n_valid=None, interpret=None):
     """Per-position speculative decode via the Pallas kernel.
 
     Returns (cp, lead, units, err) over the original buffer length.
     """
+    return _decode_utf8_jit(b, n_valid, runtime.resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _decode_utf8_jit(b, n_valid, interpret):
     b, n = _mask_padding(b, n_valid)
     cap = b.shape[0]
     b3, nblk = _tile(b, boundary_tiles=2)
@@ -78,24 +75,20 @@ def decode_utf8(b, n_valid=None, interpret: bool = True):
     cp = cp.reshape(-1)[:cap]
     lead = lead.reshape(-1)[:cap]
     units = units.reshape(-1)[:cap]
-    # A multi-byte lead truncated by the buffer end falls in the zero
-    # boundary tile when n is tile-aligned — check the tail here.
-    idx = jnp.arange(cap)
-    tail_lead = (
-        ((b >= 0xC0) & (idx >= n - 1))
-        | ((b >= 0xE0) & (idx >= n - 2))
-        | ((b >= 0xF0) & (idx >= n - 3))
-    ) & (idx < n)
-    return cp, lead, units, (jnp.max(errs) > 0) | jnp.any(tail_lead)
+    return cp, lead, units, (jnp.max(errs) > 0) | kdec.tail_lead_err(b, n)
+
+
+def utf8_to_utf16(b, n_valid=None, interpret=None, validate: bool = True):
+    """Kernel-backed UTF-8 -> UTF-16 transcode.  (buffer, count, err)."""
+    return _utf8_to_utf16_jit(b, n_valid, runtime.resolve_interpret(interpret),
+                              validate)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "validate"))
-def utf8_to_utf16(b, n_valid=None, interpret: bool = True,
-                  validate: bool = True):
-    """Kernel-backed UTF-8 -> UTF-16 transcode.  (buffer, count, err)."""
+def _utf8_to_utf16_jit(b, n_valid, interpret, validate):
     b, n = _mask_padding(b, n_valid)
     cap = b.shape[0]
-    cp, lead, units, dec_err = decode_utf8(b, None, interpret=interpret)
+    cp, lead, units, dec_err = _decode_utf8_jit(b, None, interpret)
     idx = jnp.arange(cap)
     mask = (lead > 0) & (idx < n)
     _, u0, u1, _bad = u16mod.encode_candidates(cp)
@@ -103,14 +96,18 @@ def utf8_to_utf16(b, n_valid=None, interpret: bool = True,
     out, count = compaction.compact_offsets(vals, units, mask, cap)
     err = dec_err if validate else jnp.bool_(False)
     if validate:
-        err = err | ~validate_utf8(b, n, interpret=interpret)
+        err = err | ~_validate_utf8_jit(b, n, interpret)
     return out, count, err
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "validate"))
-def utf16_to_utf8(u, n_valid=None, interpret: bool = True,
-                  validate: bool = True):
+def utf16_to_utf8(u, n_valid=None, interpret=None, validate: bool = True):
     """Kernel-backed UTF-16 -> UTF-8 transcode.  (buffer, count, err)."""
+    return _utf16_to_utf8_jit(u, n_valid, runtime.resolve_interpret(interpret),
+                              validate)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "validate"))
+def _utf16_to_utf8_jit(u, n_valid, interpret, validate):
     u, n = _mask_padding(u, n_valid)
     cap_in = u.shape[0]
     cap = 3 * cap_in

@@ -1,0 +1,51 @@
+"""Shared runtime helpers for the Pallas kernels: execution mode + tiling.
+
+Every ``pl.pallas_call`` wrapper in this package takes ``interpret=None``
+and resolves it here: on a TPU backend the kernel compiles (Mosaic), on
+anything else (CPU CI containers, GPU hosts) it runs under the Pallas
+interpreter, which executes the kernel body as ordinary traced jax ops.
+Callers can still force either mode explicitly — the resolved value is a
+static jit argument, so both variants cache independently.
+
+``tile_with_boundaries`` is the one place the pad-to-VMEM-tiles + zero
+boundary-tile convention lives; every kernel wrapper (ops.py and the
+fused pipeline) shares it.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def default_interpret() -> bool:
+    """True when Pallas kernels must run interpreted (no TPU present)."""
+    try:
+        return jax.default_backend() != "tpu"
+    except RuntimeError:  # pragma: no cover - no backend at all
+        return True
+
+
+def resolve_interpret(interpret) -> bool:
+    """Resolve an ``interpret=None`` kwarg to a concrete static bool."""
+    if interpret is None:
+        return default_interpret()
+    return bool(interpret)
+
+
+def tile_with_boundaries(x, rows: int, lanes: int, boundary_tiles: int = 2):
+    """Pad flat ``x`` (dtype preserved) to whole (rows, lanes) tiles and
+    add zero boundary tiles: one leading tile for kernels that only look
+    back (``boundary_tiles=1``), one on each end for kernels with
+    prev/next BlockSpecs (``boundary_tiles=2``).  Returns ``(x3, nblk)``.
+    """
+    block = rows * lanes
+    n = x.shape[0]
+    nblk = max(1, -(-n // block))
+    pad = nblk * block - n
+    x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
+    x3 = x.reshape(nblk, rows, lanes)
+    z = jnp.zeros((1, rows, lanes), x.dtype)
+    if boundary_tiles == 1:
+        return jnp.concatenate([z, x3], 0), nblk
+    return jnp.concatenate([z, x3, z], 0), nblk

@@ -9,6 +9,11 @@ per-lane byte length — exactly the state the paper's pshufb compress-store
 consumes.  Global stream compaction (cumsum + scatter over the whole
 buffer) happens outside the kernel in XLA.
 
+The per-tile encode body lives in :func:`encode_tile` so that the fused
+two-pass pipeline (``repro.kernels.fused_transcode``, DESIGN.md §5) can
+re-run it inside its counting and writer kernels without shipping the four
+full-capacity candidate arrays through HBM.
+
 The paper's Algorithm 4 branches per 16-byte register on the maximal range
 class.  TPU tiles are 1024 lanes and branching per tile would flush the
 whole pipeline, so the kernel is branch-free: every lane computes all four
@@ -24,6 +29,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import runtime
 
 ROWS = 8
 LANES = 128
@@ -42,12 +49,16 @@ def _shift_right_flat(cur, prev, n):
     return jnp.concatenate([p[-n:], c[:-n]]).reshape(cur.shape)
 
 
-def utf16_encode_kernel(u_prev_ref, u_cur_ref, u_next_ref,
-                        b0_ref, b1_ref, b2_ref, b3_ref, len_ref, err_ref):
-    u = u_cur_ref[...].astype(jnp.int32)
-    up = u_prev_ref[...].astype(jnp.int32)
-    un = u_next_ref[...].astype(jnp.int32)
+def encode_tile(u, up, un):
+    """Encode one tile of UTF-16 units given its two neighbour tiles.
 
+    All arguments are int32 arrays of identical (arbitrary) shape, treated
+    as row-major flat unit streams by the shift helpers.  Returns
+    ``(b0, b1, b2, b3, L, err_map)`` of the same shape: the four candidate
+    UTF-8 bytes, the per-lane byte length (0 at non-lead trailing surrogate
+    halves), and a per-position unpaired-surrogate error map (bool).
+    Shared between :func:`utf16_encode_kernel` and the fused pipeline.
+    """
     top6 = u >> 10
     is_hi = top6 == 0x36
     is_lo = top6 == 0x37
@@ -87,18 +98,28 @@ def utf16_encode_kernel(u_prev_ref, u_cur_ref, u_next_ref,
     L = jnp.where(is_lead, L, 0)
 
     # Fused UTF-16 validation: unpaired surrogate halves.
-    err = (is_hi & ~nxt_is_lo) | (is_lo & ~prv_is_hi)
+    err_map = (is_hi & ~nxt_is_lo) | (is_lo & ~prv_is_hi)
+    return b0, b1, b2, b3, L, err_map
+
+
+def utf16_encode_kernel(u_prev_ref, u_cur_ref, u_next_ref,
+                        b0_ref, b1_ref, b2_ref, b3_ref, len_ref, err_ref):
+    u = u_cur_ref[...].astype(jnp.int32)
+    up = u_prev_ref[...].astype(jnp.int32)
+    un = u_next_ref[...].astype(jnp.int32)
+
+    b0, b1, b2, b3, L, err_map = encode_tile(u, up, un)
 
     b0_ref[...] = b0
     b1_ref[...] = b1
     b2_ref[...] = b2
     b3_ref[...] = b3
     len_ref[...] = L
-    err_ref[0] = jnp.max(err.astype(jnp.int32))
+    err_ref[0] = jnp.max(err_map.astype(jnp.int32))
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def _call(u3d, interpret=True):
+def _call_jit(u3d, interpret):
     """u3d: int32 (nblk+2, ROWS, LANES) — zero tile at each end."""
     nblk = u3d.shape[0] - 2
     spec = lambda off: pl.BlockSpec(
@@ -115,3 +136,7 @@ def _call(u3d, interpret=True):
                    jax.ShapeDtypeStruct((nblk,), jnp.int32)],
         interpret=interpret,
     )(u3d, u3d, u3d)
+
+
+def _call(u3d, interpret=None):
+    return _call_jit(u3d, runtime.resolve_interpret(interpret))

@@ -14,6 +14,11 @@ global stream compaction (an XLA cumsum+scatter over the whole buffer)
 needs to finish the transcode.  A per-tile structural-error flag fuses the
 decoder's own validation.
 
+The per-tile decode body lives in :func:`decode_tile` so that the fused
+two-pass pipeline (``repro.kernels.fused_transcode``, DESIGN.md §5) can
+re-run exactly the same speculative decode inside its counting and writer
+kernels without materializing these full-capacity outputs in HBM.
+
 This kernel deliberately contains no loop and no branch: it is pure VPU
 arithmetic on (8, 128) tiles, the TPU-native answer to the paper's point
 that transcoding should be straight-line SIMD work.
@@ -26,6 +31,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import runtime
 
 ROWS = 8
 LANES = 128
@@ -61,12 +68,17 @@ def _seq_len(b):
         jnp.where(b < 0xF8, 4, 0)))))
 
 
-def utf8_decode_kernel(b_prev_ref, b_cur_ref, b_next_ref,
-                       cp_ref, lead_ref, units_ref, err_ref):
-    b = b_cur_ref[...].astype(jnp.int32)
-    bp = b_prev_ref[...].astype(jnp.int32)
-    bn = b_next_ref[...].astype(jnp.int32)
+def decode_tile(b, bp, bn):
+    """Speculatively decode one tile given its two neighbour tiles.
 
+    All three arguments are int32 arrays of identical (arbitrary) shape;
+    the shift helpers treat them as row-major flat byte streams.  Returns
+    ``(cp, is_lead, units, err_map)`` of the same shape: candidate code
+    point, lead-position flag (bool), UTF-16 code units emitted by the
+    character (0 at non-leads), and a per-position structural/range error
+    map (bool).  Shared between :func:`utf8_decode_kernel` and the fused
+    pipeline's kernels.
+    """
     b1 = _shift_left_flat(b, bn, 1)
     b2 = _shift_left_flat(b, bn, 2)
     b3 = _shift_left_flat(b, bn, 3)
@@ -110,15 +122,42 @@ def utf8_decode_kernel(b_prev_ref, b_cur_ref, b_next_ref,
     )
 
     units = jnp.where(is_lead, 1 + (cp >= 0x10000).astype(jnp.int32), 0)
+    return cp, is_lead, units, struct_err | range_err
+
+
+def tail_lead_err(b, n):
+    """Scalar bool: a multi-byte lead is truncated by the logical stream
+    end.  The kernels cannot see this when ``n`` is tile-aligned (the
+    missing continuation falls in the zero boundary tile the grid never
+    scans as "cur"), so every wrapper checks it outside; harmless
+    double-flagging otherwise.
+    """
+    idx = jnp.arange(b.shape[0])
+    b = b.astype(jnp.int32)
+    tail = (
+        ((b >= 0xC0) & (idx >= n - 1))
+        | ((b >= 0xE0) & (idx >= n - 2))
+        | ((b >= 0xF0) & (idx >= n - 3))
+    ) & (idx < n)
+    return jnp.any(tail)
+
+
+def utf8_decode_kernel(b_prev_ref, b_cur_ref, b_next_ref,
+                       cp_ref, lead_ref, units_ref, err_ref):
+    b = b_cur_ref[...].astype(jnp.int32)
+    bp = b_prev_ref[...].astype(jnp.int32)
+    bn = b_next_ref[...].astype(jnp.int32)
+
+    cp, is_lead, units, err_map = decode_tile(b, bp, bn)
 
     cp_ref[...] = cp
     lead_ref[...] = is_lead.astype(jnp.int32)
     units_ref[...] = units
-    err_ref[0] = jnp.max((struct_err | range_err).astype(jnp.int32))
+    err_ref[0] = jnp.max(err_map.astype(jnp.int32))
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def _call(b2d, interpret=True):
+def _call_jit(b2d, interpret):
     """b2d: int32 (nblk+2, ROWS, LANES) — zero tile at each end."""
     nblk = b2d.shape[0] - 2
     spec = lambda off: pl.BlockSpec(
@@ -139,3 +178,7 @@ def _call(b2d, interpret=True):
         interpret=interpret,
     )(b2d, b2d, b2d)
     return cp, lead, units, err
+
+
+def _call(b2d, interpret=None):
+    return _call_jit(b2d, runtime.resolve_interpret(interpret))

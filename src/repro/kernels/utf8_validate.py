@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import tables as T
+from repro.kernels import runtime
 
 ROWS = 8
 LANES = 128
@@ -70,7 +71,7 @@ def utf8_validate_kernel(t1h_ref, t1l_ref, t2h_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def _call(b3d, interpret=True):
+def _call_jit(b3d, interpret):
     """b3d: int32 (nblk+1, ROWS, LANES) — one leading zero tile."""
     nblk = b3d.shape[0] - 1
     table_spec = pl.BlockSpec((16,), lambda i: (0,))
@@ -89,3 +90,7 @@ def _call(b3d, interpret=True):
         interpret=interpret,
     )(jnp.asarray(T.BYTE_1_HIGH), jnp.asarray(T.BYTE_1_LOW),
       jnp.asarray(T.BYTE_2_HIGH), b3d, b3d)
+
+
+def _call(b3d, interpret=None):
+    return _call_jit(b3d, runtime.resolve_interpret(interpret))

@@ -7,7 +7,7 @@ On this container it runs on the host devices (``make_host_mesh``); on a
 real cluster the same code takes the production mesh — the step function,
 sharding specs and checkpoint protocol are mesh-shape-agnostic.
 
-Fault-tolerance loop (DESIGN.md §5):
+Fault-tolerance loop (DESIGN.md §6):
   * checkpoint every ``--ckpt-every`` steps (sharded, atomic);
   * on start, ``--resume`` restores the latest step and the data pipeline
     ``skip_to``s the right global batch — a replacement host rejoins at a

@@ -79,7 +79,11 @@ class Engine:
         if encoding == "utf-16-le":
             if len(byte_vals) == 0:
                 return b""
-            out, count, err = tc.transcode_utf8_to_utf16(b, len(byte_vals))
+            # Pinned to the eager pure-jnp strategy: egress buffers have a
+            # new length per response, and the fused Pallas pipeline would
+            # recompile per distinct shape.
+            out, count, err = tc.transcode_utf8_to_utf16(
+                b, len(byte_vals), strategy="blockparallel")
             units = np.asarray(out)[: int(count)].astype(np.uint16)
             return units.tobytes()
         return bytes(byte_vals.astype(np.uint8))

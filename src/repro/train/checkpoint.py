@@ -5,7 +5,7 @@ Layout:  <dir>/step_<N>/
                                     shard layout, completion marker
            <leaf>.h<k>of<n>.npy   — host k's shard of the leaf
 
-Properties (DESIGN.md §5 fault tolerance):
+Properties (DESIGN.md §6 fault tolerance):
   * **atomic**: data is written to ``step_<N>.tmp`` and renamed only after
     every shard + manifest is on disk — a crash mid-save can never corrupt
     the latest valid checkpoint; ``latest_step`` only sees renamed dirs.

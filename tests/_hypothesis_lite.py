@@ -1,0 +1,160 @@
+"""Minimal, dependency-free stand-in for the ``hypothesis`` API surface
+used by this test suite.
+
+The container has no ``hypothesis`` wheel and nothing may be pip-installed,
+so ``conftest.py`` installs this module into ``sys.modules["hypothesis"]``
+when the real package is missing.  It implements seeded random property
+testing with the same decorator shapes (``@settings`` / ``@given`` and the
+``strategies`` combinators the tests import); no shrinking, no database.
+Each test runs ``max_examples`` deterministic examples (seeded from the
+test name), the first of which is the minimal draw from every strategy so
+size-0 / value-min edge cases are always exercised.
+"""
+
+from __future__ import annotations
+
+import random
+import sys
+import types
+import unicodedata
+import zlib
+
+
+class _Strategy:
+    def __init__(self, draw, minimal):
+        self._draw = draw
+        self._minimal = minimal
+
+    def example(self, rng, minimal=False):
+        return self._minimal(rng) if minimal else self._draw(rng)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                     lambda rng: min_value)
+
+
+def booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5, lambda rng: False)
+
+
+def sampled_from(options):
+    options = list(options)
+    return _Strategy(lambda rng: rng.choice(options),
+                     lambda rng: rng.choice(options))
+
+
+def tuples(*strategies):
+    return _Strategy(
+        lambda rng: tuple(s.example(rng) for s in strategies),
+        lambda rng: tuple(s.example(rng, minimal=True) for s in strategies))
+
+
+def lists(elements, min_size=0, max_size=10):
+    def draw(rng):
+        size = rng.randint(min_size, max_size)
+        return [elements.example(rng) for _ in range(size)]
+    return _Strategy(
+        draw,
+        lambda rng: [elements.example(rng, minimal=True)
+                     for _ in range(min_size)])
+
+
+def characters(min_codepoint=0, max_codepoint=0x10FFFF,
+               exclude_categories=()):
+    exclude = tuple(exclude_categories)
+
+    def ok(cp):
+        return not unicodedata.category(chr(cp)).startswith(exclude) \
+            if exclude else True
+
+    def draw(rng):
+        # Weight toward the interesting encoding-length boundaries.
+        bands = [(min_codepoint, min(0x7F, max_codepoint)),
+                 (0x80, 0x7FF), (0x800, 0xFFFF), (0x10000, 0x10FFFF)]
+        bands = [(lo, hi) for lo, hi in bands
+                 if lo <= max_codepoint and hi >= min_codepoint]
+        for _ in range(64):
+            lo, hi = bands[rng.randrange(len(bands))]
+            cp = rng.randint(max(lo, min_codepoint), min(hi, max_codepoint))
+            if ok(cp):
+                return chr(cp)
+        return chr(min_codepoint)
+
+    return _Strategy(draw, lambda rng: chr(min_codepoint))
+
+
+def text(alphabet=None, max_size=20, min_size=0):
+    alphabet = alphabet or characters()
+
+    def draw(rng):
+        size = rng.randint(min_size, max_size)
+        return "".join(alphabet.example(rng) for _ in range(size))
+
+    return _Strategy(draw, lambda rng: "" if min_size == 0 else
+                     alphabet.example(rng, minimal=True) * min_size)
+
+
+def binary(max_size=20, min_size=0):
+    def draw(rng):
+        size = rng.randint(min_size, max_size)
+        return bytes(rng.randrange(256) for _ in range(size))
+    return _Strategy(draw, lambda rng: b"\x00" * min_size)
+
+
+def settings(**kwargs):
+    max_examples = kwargs.get("max_examples", 100)
+
+    def deco(fn):
+        fn._lite_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies):
+    # NOTE: the wrapper deliberately exposes a bare (*args, **kwargs)
+    # signature (no functools.wraps/__wrapped__) so pytest does not mistake
+    # the property's drawn parameters for fixtures.
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_lite_max_examples",
+                        getattr(fn, "_lite_max_examples", 100))
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = random.Random(seed)
+            for i in range(n):
+                drawn = tuple(s.example(rng, minimal=(i == 0))
+                              for s in strategies)
+                try:
+                    fn(*args, *drawn, **kwargs)
+                except Exception as e:  # noqa: BLE001 - re-raise with case
+                    raise AssertionError(
+                        f"property falsified on example {i}: {drawn!r}"
+                    ) from e
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        wrapper._lite_max_examples = getattr(fn, "_lite_max_examples", 100)
+        return wrapper
+    return deco
+
+
+def install():
+    """Register this module as ``hypothesis`` if the real one is absent."""
+    if "hypothesis" in sys.modules:
+        return
+    try:
+        import hypothesis  # noqa: F401 - prefer the real package
+        return
+    except ImportError:
+        pass
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    strategies = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "booleans", "sampled_from", "tuples", "lists",
+                 "characters", "text", "binary"):
+        setattr(strategies, name, globals()[name])
+    mod.strategies = strategies
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies

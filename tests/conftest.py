@@ -6,6 +6,12 @@ the dry-run (and subprocess-based distribution tests) force 512/8 devices.
 import numpy as np
 import pytest
 
+import _hypothesis_lite
+
+# The container has no hypothesis wheel; fall back to the seeded-random
+# shim (no-op when the real package is importable).
+_hypothesis_lite.install()
+
 
 @pytest.fixture(scope="session")
 def rng():

@@ -38,6 +38,77 @@ def test_compact_gather_matches_scatter(items):
                           np.asarray(o2)[: int(c2)])
 
 
+# ---------------------------------------------------------------------------
+# Directed edge cases (satellite of the fused-pipeline PR): empty inputs,
+# degenerate masks, exact-capacity and overflow buffers, tile-scan helpers.
+
+
+def test_compact_all_false_mask():
+    vals = jnp.arange(16, dtype=jnp.int32)
+    out, cnt = compaction.compact(vals, jnp.zeros(16, bool), 16, fill=-7)
+    assert int(cnt) == 0
+    assert np.all(np.asarray(out) == -7)
+    out, tot = compaction.compact_offsets(
+        jnp.ones((16, 4), jnp.int32), jnp.full(16, 3, jnp.int32),
+        jnp.zeros(16, bool), 8)
+    assert int(tot) == 0
+
+
+def test_compact_zero_length_input():
+    out, cnt = compaction.compact(
+        jnp.zeros((0,), jnp.int32), jnp.zeros((0,), bool), 4)
+    assert int(cnt) == 0 and out.shape == (4,)
+    out, tot = compaction.compact_offsets(
+        jnp.zeros((0, 4), jnp.int32), jnp.zeros((0,), jnp.int32),
+        jnp.zeros((0,), bool), 4)
+    assert int(tot) == 0 and out.shape == (4,)
+
+
+def test_compact_offsets_exact_capacity():
+    vals = jnp.arange(12, dtype=jnp.int32).reshape(6, 2)
+    lens = jnp.full(6, 2, jnp.int32)
+    mask = jnp.ones(6, bool)
+    out, tot = compaction.compact_offsets(vals, lens, mask, 12)
+    assert int(tot) == 12
+    assert np.array_equal(np.asarray(out), np.arange(12))
+
+
+def test_compact_offsets_overflow_drops_tail():
+    vals = jnp.arange(12, dtype=jnp.int32).reshape(6, 2)
+    lens = jnp.full(6, 2, jnp.int32)
+    mask = jnp.ones(6, bool)
+    out, tot = compaction.compact_offsets(vals, lens, mask, 5)
+    assert int(tot) == 12  # logical total; buffer truncates physically
+    assert np.array_equal(np.asarray(out), np.arange(5))
+
+
+def test_compact_overflow_drops_tail():
+    vals = jnp.arange(10, dtype=jnp.int32)
+    out, cnt = compaction.compact(vals, jnp.ones(10, bool), 4)
+    assert int(cnt) == 10
+    assert np.array_equal(np.asarray(out), np.arange(4))
+
+
+def test_tile_exclusive_scan_matches_numpy():
+    rng = np.random.default_rng(3)
+    x = rng.integers(0, 5, 1024).astype(np.int32)
+    excl, tot = compaction.tile_exclusive_scan(jnp.asarray(x), rows=8)
+    want = np.cumsum(x) - x
+    assert np.array_equal(np.asarray(excl), want)
+    assert int(tot) == int(x.sum())
+    # ragged row width + all-zero tile
+    x = np.zeros(256, np.int32)
+    excl, tot = compaction.tile_exclusive_scan(jnp.asarray(x), rows=4)
+    assert int(tot) == 0 and np.all(np.asarray(excl) == 0)
+
+
+def test_tile_base_offsets_matches_numpy():
+    totals = jnp.asarray([3, 0, 7, 1], jnp.int32)
+    base, total = compaction.tile_base_offsets(totals)
+    assert np.array_equal(np.asarray(base), [0, 3, 3, 10])
+    assert int(total) == 11
+
+
 @settings(**SETTINGS)
 @given(st.lists(st.tuples(st.integers(0, 255), st.integers(0, 4),
                           st.booleans()),

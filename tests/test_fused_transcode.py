@@ -1,0 +1,367 @@
+"""Fused two-pass pipeline: strategy equivalence, edge cases, and
+HBM-traffic shape checks (narrow ingress, no full-capacity int32 between
+decode and compaction)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.core
+import jax.numpy as jnp
+
+from repro.core import transcode as tc
+from repro.data import pipeline, synthetic
+from repro.kernels import fused_transcode as ft
+from repro.kernels import ops, runtime
+
+LIPSUM_LANGS = ["arabic", "chinese", "emoji", "hebrew", "hindi",
+                "japanese", "korean", "latin", "russian"]
+
+
+def _utf8(lang, n_chars, seed=0):
+    return synthetic.utf8_array(lang, n_chars, seed)
+
+
+def _utf16(lang, n_chars, seed=0):
+    return synthetic.utf16_units(lang, n_chars, seed)
+
+
+def _unpack(res):
+    out, cnt, err = res
+    return np.asarray(out)[: int(cnt)], int(cnt), bool(err)
+
+
+# ---------------------------------------------------------------------------
+# Equivalence on every benchmark corpus
+
+
+@pytest.mark.parametrize("lang", LIPSUM_LANGS)
+def test_fused_equals_blockparallel_and_windowed_utf8_to_utf16(lang):
+    b = _utf8(lang, 1200, seed=11)
+    n = len(b)
+    got_f = _unpack(tc.transcode_utf8_to_utf16(
+        jnp.asarray(b), n, strategy="fused"))
+    got_b = _unpack(tc.transcode_utf8_to_utf16(
+        jnp.asarray(b.astype(np.int32)), n, strategy="blockparallel"))
+    got_w = _unpack(tc.transcode_utf8_to_utf16(
+        jnp.asarray(b.astype(np.int32)), n, strategy="windowed"))
+    assert got_f[1] == got_b[1] == got_w[1]
+    assert np.array_equal(got_f[0], got_b[0])
+    assert np.array_equal(got_f[0], got_w[0])
+    assert got_f[2] == got_b[2] == got_w[2] is False
+    # python oracle
+    want = np.frombuffer(bytes(b).decode("utf-8").encode("utf-16-le"),
+                         np.uint16)
+    assert np.array_equal(got_f[0], want)
+
+
+@pytest.mark.parametrize("lang", LIPSUM_LANGS)
+def test_fused_equals_blockparallel_and_windowed_utf16_to_utf8(lang):
+    u = _utf16(lang, 1200, seed=11)
+    n = len(u)
+    got_f = _unpack(tc.transcode_utf16_to_utf8(
+        jnp.asarray(u), n, strategy="fused"))
+    got_b = _unpack(tc.transcode_utf16_to_utf8(
+        jnp.asarray(u.astype(np.int32)), n, strategy="blockparallel"))
+    got_w = _unpack(tc.transcode_utf16_to_utf8(
+        jnp.asarray(u.astype(np.int32)), n, strategy="windowed"))
+    assert got_f[1] == got_b[1] == got_w[1]
+    assert np.array_equal(got_f[0], got_b[0])
+    assert np.array_equal(got_f[0], got_w[0])
+    assert got_f[2] == got_b[2] == got_w[2] is False
+    want = np.frombuffer(
+        u.tobytes().decode("utf-16-le").encode("utf-8"), np.uint8)
+    assert np.array_equal(got_f[0], want)
+
+
+# ---------------------------------------------------------------------------
+# Property test: random valid + mutated-invalid streams
+
+
+def test_fused_equals_blockparallel_on_mutated_streams():
+    rng = np.random.default_rng(7)
+    langs = ["latin", "arabic", "chinese", "emoji"]
+    fixed = 1536  # fixed buffer so all cases share one compilation
+    for trial in range(24):
+        b = _utf8(langs[trial % 4], 400, seed=trial)[:fixed]
+        buf = np.zeros(fixed, np.uint8)
+        buf[: len(b)] = b
+        n = len(b)
+        if trial % 3:  # two thirds of cases: corrupt 1-3 random bytes
+            k = rng.integers(1, 4)
+            buf[rng.integers(0, max(n, 1), k)] = rng.integers(0, 256, k)
+        try:
+            bytes(buf[:n]).decode("utf-8")
+            valid = True
+        except UnicodeDecodeError:
+            valid = False
+        got_f = _unpack(ft.utf8_to_utf16_fused(jnp.asarray(buf), n))
+        got_b = _unpack(tc.utf8_to_utf16(
+            jnp.asarray(buf.astype(np.int32)), n))
+        assert got_f[1] == got_b[1], trial
+        assert np.array_equal(got_f[0], got_b[0]), trial
+        assert got_f[2] == got_b[2] == (not valid), trial
+
+
+def test_fused_equals_blockparallel_on_mutated_utf16_streams():
+    rng = np.random.default_rng(9)
+    fixed = 1280
+    for trial in range(16):
+        u = _utf16(["latin", "emoji", "korean", "russian"][trial % 4],
+                   400, seed=trial)[:fixed]
+        buf = np.zeros(fixed, np.uint16)
+        buf[: len(u)] = u
+        n = len(u)
+        if trial % 2:  # half the cases: corrupt 1-2 random units
+            k = rng.integers(1, 3)
+            buf[rng.integers(0, max(n, 1), k)] = \
+                rng.integers(0, 1 << 16, k)
+        try:
+            buf[:n].tobytes().decode("utf-16-le")
+            valid = True
+        except UnicodeDecodeError:
+            valid = False
+        got_f = _unpack(ft.utf16_to_utf8_fused(jnp.asarray(buf), n))
+        got_b = _unpack(tc.utf16_to_utf8(
+            jnp.asarray(buf.astype(np.int32)), n))
+        assert got_f[1] == got_b[1], trial
+        assert np.array_equal(got_f[0], got_b[0]), trial
+        assert got_f[2] == got_b[2] == (not valid), trial
+
+
+# ---------------------------------------------------------------------------
+# Edge cases
+
+
+def test_fused_speculative_worst_case_stage_width():
+    """Invalid input dense in 4-byte leads makes EVERY byte of a tile a
+    speculative 2-unit lead (2*BLOCK units per tile) — the per-tile stage
+    must absorb that or base offsets desynchronize from blockparallel."""
+    b = np.concatenate([np.full(1024, 0xF4, np.uint8),
+                        np.full(1024, 0xF1, np.uint8)])
+    got_f = _unpack(ft.utf8_to_utf16_fused(jnp.asarray(b), len(b)))
+    got_b = _unpack(tc.utf8_to_utf16(jnp.asarray(b.astype(np.int32)),
+                                     len(b)))
+    assert got_f[1] == got_b[1]
+    assert np.array_equal(got_f[0], got_b[0])
+    assert got_f[2] and got_b[2]
+    # UTF-16 side: every unit a speculative 3-byte lane (valid stream of
+    # U+E000) exactly fills the 3*BLOCK stage.
+    u = np.full(2048, 0xE000, np.uint16)
+    got_f = _unpack(ft.utf16_to_utf8_fused(jnp.asarray(u), len(u)))
+    got_b = _unpack(tc.utf16_to_utf8(jnp.asarray(u.astype(np.int32)),
+                                     len(u)))
+    assert got_f[1] == got_b[1] == 3 * 2048
+    assert np.array_equal(got_f[0], got_b[0])
+    # VALID input overflow: a surrogate pair straddling the tile boundary
+    # gives tile 0 a 4-byte lane with no compensating 0-lane in-tile, so
+    # its total is 3*BLOCK + 1 — one past the naive stage bound.
+    u = np.concatenate([np.full(1023, 0xE000, np.uint16),
+                        np.asarray([0xD800, 0xDC00], np.uint16),
+                        np.full(1023, 0x41, np.uint16)])
+    got_f = _unpack(ft.utf16_to_utf8_fused(jnp.asarray(u), len(u)))
+    got_b = _unpack(tc.utf16_to_utf8(jnp.asarray(u.astype(np.int32)),
+                                     len(u)))
+    want = np.frombuffer(
+        u.tobytes().decode("utf-16-le").encode("utf-8"), np.uint8)
+    assert got_f[1] == got_b[1] == len(want)
+    assert np.array_equal(got_f[0], want)
+    assert np.array_equal(got_b[0], want)
+    assert not got_f[2] and not got_b[2]
+    # and the unpaired-high-surrogate flood (mixed 3-byte/4-byte lanes)
+    u = np.full(2048, 0xD800, np.uint16)
+    got_f = _unpack(ft.utf16_to_utf8_fused(jnp.asarray(u), len(u)))
+    got_b = _unpack(tc.utf16_to_utf8(jnp.asarray(u.astype(np.int32)),
+                                     len(u)))
+    assert got_f[1] == got_b[1]
+    assert np.array_equal(got_f[0], got_b[0])
+    assert got_f[2] and got_b[2]
+
+
+def test_fused_zero_length():
+    out, cnt, err = ft.utf8_to_utf16_fused(jnp.zeros((0,), jnp.uint8), 0)
+    assert out.shape == (0,) and int(cnt) == 0 and not bool(err)
+    out, cnt, err = ft.utf16_to_utf8_fused(jnp.zeros((0,), jnp.uint16), 0)
+    assert out.shape == (0,) and int(cnt) == 0 and not bool(err)
+
+
+def test_fused_n_valid_zero():
+    b = jnp.asarray(np.full(64, 0xFF, np.uint8))  # garbage beyond n
+    out, cnt, err = ft.utf8_to_utf16_fused(b, 0)
+    assert int(cnt) == 0 and not bool(err)
+
+
+def test_fused_tile_aligned_trailing_truncation():
+    b = np.full(2048, 0x41, np.uint8)
+    b[-1] = 0xC3  # lead byte truncated exactly at a tile boundary
+    _, _, err = ft.utf8_to_utf16_fused(jnp.asarray(b), 2048)
+    assert bool(err)
+    u = np.full(1024, 0x41, np.uint16)
+    u[-1] = 0xD800  # lone high surrogate at the tile boundary
+    _, _, err = ft.utf16_to_utf8_fused(jnp.asarray(u), 1024)
+    assert bool(err)
+
+
+def test_fused_cross_tile_characters():
+    s = "A" * 1022 + "🎉" + "B" * 100  # 4-byte char straddles the boundary
+    b = np.frombuffer(s.encode("utf-8"), np.uint8)
+    out, cnt, err = ft.utf8_to_utf16_fused(jnp.asarray(b), len(b))
+    want = np.frombuffer(s.encode("utf-16-le"), np.uint16)
+    assert not bool(err)
+    assert np.array_equal(np.asarray(out)[: int(cnt)], want)
+
+    u = np.full(2048, 0x41, np.int32)
+    u[1023], u[1024] = 0xD83C, 0xDF89  # pair straddles the boundary
+    out, cnt, err = ft.utf16_to_utf8_fused(jnp.asarray(u), 2048)
+    want = np.frombuffer(
+        u.astype(np.uint16).tobytes().decode("utf-16-le").encode("utf-8"),
+        np.uint8)
+    assert not bool(err)
+    assert np.array_equal(np.asarray(out)[: int(cnt)], want)
+
+
+def test_fused_ascii_fastpath_agrees_with_general():
+    b = _utf8("latin", 500, seed=3)
+    n = len(b)
+    fast = _unpack(ft.utf8_to_utf16_fused(jnp.asarray(b), n))
+    slow = _unpack(ft.utf8_to_utf16_fused(jnp.asarray(b), n,
+                                          ascii_fastpath=False))
+    assert fast[1] == slow[1] and fast[2] == slow[2]
+    assert np.array_equal(fast[0], slow[0])
+
+
+# ---------------------------------------------------------------------------
+# HBM-traffic shape checks (acceptance: narrow ingress, nothing
+# full-capacity int32 between decode and compaction)
+
+
+def _iter_eqns(jaxpr, into_pallas=False):
+    """All eqns of a jaxpr, recursing into sub-jaxprs (cond branches,
+    pjit bodies, scans) but NOT into pallas_call kernel bodies unless
+    asked: in-kernel VMEM ops are not HBM traffic."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        if eqn.primitive.name == "pallas_call" and not into_pallas:
+            continue
+        for v in eqn.params.values():
+            for sub in _sub_jaxprs(v):
+                yield from _iter_eqns(sub, into_pallas)
+
+
+def _sub_jaxprs(v):
+    if isinstance(v, jax.core.ClosedJaxpr):
+        yield v.jaxpr
+    elif isinstance(v, jax.core.Jaxpr):
+        yield v
+    elif isinstance(v, (tuple, list)):
+        for item in v:
+            yield from _sub_jaxprs(item)
+
+
+def _pallas_eqns(jaxpr):
+    return [e for e in _iter_eqns(jaxpr) if e.primitive.name == "pallas_call"]
+
+
+def test_fused_utf8_jaxpr_has_narrow_io_and_no_global_scatter():
+    cap = 4096
+    b = jnp.zeros((cap,), jnp.uint8)
+    jaxpr = jax.make_jaxpr(
+        lambda x: ft.utf8_to_utf16_fused(x, cap - 5, ascii_fastpath=False)
+    )(b).jaxpr
+    kernels = _pallas_eqns(jaxpr)
+    assert len(kernels) == 2  # count pass + write pass
+    for eqn in kernels:
+        # Ingress <= 1 byte/element: every large operand is uint8.
+        for v in eqn.invars:
+            if v.aval.size >= cap:
+                assert v.aval.dtype.itemsize == 1, (v.aval,)
+        # Between decode and compaction nothing full-capacity and int32
+        # leaves the kernel: outputs are per-tile scalars or narrow lanes.
+        for v in eqn.outvars:
+            assert v.aval.dtype.itemsize <= 2 or v.aval.size < cap // 256, \
+                (v.aval,)
+    # Global compaction is gone: no scatter outside the kernels.
+    names = {e.primitive.name for e in _iter_eqns(jaxpr)}
+    assert not any("scatter" in n for n in names), names
+
+
+def test_fused_utf16_jaxpr_has_narrow_io_and_no_global_scatter():
+    cap_in = 2048
+    u = jnp.zeros((cap_in,), jnp.uint16)
+    jaxpr = jax.make_jaxpr(
+        lambda x: ft.utf16_to_utf8_fused(x, cap_in - 5, ascii_fastpath=False)
+    )(u).jaxpr
+    kernels = _pallas_eqns(jaxpr)
+    assert len(kernels) == 2
+    for eqn in kernels:
+        for v in eqn.invars:
+            if v.aval.size >= cap_in:
+                assert v.aval.dtype.itemsize <= 2, (v.aval,)
+        for v in eqn.outvars:
+            assert v.aval.dtype.itemsize <= 2 or v.aval.size < cap_in // 256, \
+                (v.aval,)
+    names = {e.primitive.name for e in _iter_eqns(jaxpr)}
+    assert not any("scatter" in n for n in names), names
+
+
+def test_blockparallel_kernel_path_is_the_contrast():
+    """The pre-fusion kernel path DOES ship full-capacity int32 decode
+    outputs through HBM — the discriminating contrast for the test above."""
+    cap = 4096
+    b = jnp.zeros((cap,), jnp.int32)
+    jaxpr = jax.make_jaxpr(
+        lambda x: ops.utf8_to_utf16(x, cap - 5, validate=False))(b).jaxpr
+    wide = [
+        v for e in _pallas_eqns(jaxpr) for v in e.outvars
+        if v.aval.dtype.itemsize == 4 and v.aval.size >= cap
+    ]
+    assert wide, "expected full-capacity int32 outputs on the legacy path"
+
+
+# ---------------------------------------------------------------------------
+# Batched entry + interpret auto-detection
+
+
+def test_batched_entry_matches_per_doc():
+    L = 1536
+    langs = ["latin", "chinese", "emoji"]
+    docs = np.zeros((3, L), np.uint8)
+    lens = []
+    for i, lang in enumerate(langs):
+        d = _utf8(lang, 300, seed=i)[:L]
+        docs[i, : len(d)] = d
+        lens.append(len(d))
+    lens = np.asarray(lens, np.int32)
+    out, cnt, err = pipeline.batch_utf8_to_utf16(docs, lens)
+    assert out.shape == (3, L)
+    for i in range(3):
+        o, c, e = ft.utf8_to_utf16_fused(jnp.asarray(docs[i]), int(lens[i]))
+        assert int(cnt[i]) == int(c) and bool(err[i]) == bool(e)
+        assert np.array_equal(np.asarray(out[i])[: int(c)],
+                              np.asarray(o)[: int(c)])
+
+    units = np.zeros((2, 1024), np.uint16)
+    ulens = []
+    for i, lang in enumerate(["korean", "latin"]):
+        d = _utf16(lang, 300, seed=i)[:1024]
+        units[i, : len(d)] = d
+        ulens.append(len(d))
+    out, cnt, err = pipeline.batch_utf16_to_utf8(units, np.asarray(ulens))
+    assert out.shape == (2, 3 * 1024)
+    for i in range(2):
+        o, c, e = ft.utf16_to_utf8_fused(jnp.asarray(units[i]), ulens[i])
+        assert int(cnt[i]) == int(c) and bool(err[i]) == bool(e)
+        assert np.array_equal(np.asarray(out[i])[: int(c)],
+                              np.asarray(o)[: int(c)])
+
+
+def test_interpret_autodetect():
+    # This container has no TPU: kernels must auto-select interpret mode
+    # and still execute (interpret=None throughout the public wrappers).
+    assert runtime.default_interpret() == (jax.default_backend() != "tpu")
+    assert runtime.resolve_interpret(None) == runtime.default_interpret()
+    assert runtime.resolve_interpret(False) is False
+    b = np.frombuffer("héllo wörld".encode("utf-8"), np.uint8)
+    assert bool(ops.validate_utf8(jnp.asarray(b.astype(np.int32)), len(b)))
+    out, cnt, err = ops.utf8_to_utf16(jnp.asarray(b.astype(np.int32)), len(b))
+    assert not bool(err)
