@@ -69,6 +69,11 @@ def main(argv=None) -> None:
     report["records"] += _records("table9", t9)
 
     if not smoke:
+        tr = tb.table_replace(n_chars=n)
+        tb.print_rows("Replace policy: mutated-corpus UTF-8 -> UTF-16 "
+                      "(Gchars/s)", tr)
+        report["records"] += _records("table_replace", tr)
+
         tb.print_rows("Table 8 proxy: ops per input byte", tb.table8_proxy())
         fig7 = tb.fig7(sizes=(64, 1024, 16384) if quick
                        else (64, 256, 1024, 4096, 16384, 65536))

@@ -146,6 +146,40 @@ def table9(langs=LIPSUM_LANGS, n_chars=N_CHARS):
     return rows
 
 
+def table_replace(langs=("latin", "arabic", "emoji"), n_chars=N_CHARS,
+                  corrupt_every=257):
+    """Beyond-paper: malformed traffic under the ``errors=`` policy.
+
+    Mutates the corpus (one corrupt byte every ``corrupt_every`` input
+    bytes) and times the fused pipeline under errors="replace" — lossy
+    U+FFFD ingestion at full speed — against errors="strict" on the same
+    mutated buffer (which merely locates the first error) and against
+    the strict path on the clean buffer (the no-error baseline).
+    """
+    rows = []
+    for lang in langs:
+        nch = n_chars
+        b8, _ = _prep_narrow(lang, n_chars)
+        bad = np.asarray(b8).copy()
+        bad[::corrupt_every] = 0xFF
+        bad8 = jnp.asarray(bad)
+        fns = {
+            "replace(mutated)": (jax.jit(lambda x: tc.transcode_utf8_to_utf16(
+                x, None, strategy="fused", errors="replace")), bad8),
+            "strict(mutated)": (jax.jit(lambda x: tc.transcode_utf8_to_utf16(
+                x, None, strategy="fused", errors="strict")), bad8),
+            "strict(clean)": (jax.jit(lambda x: tc.transcode_utf8_to_utf16(
+                x, None, strategy="fused", errors="strict")), b8),
+        }
+        row = {"lang": lang}
+        for name, (f, x) in fns.items():
+            jax.block_until_ready(f(x))
+            t = _time_min(lambda f=f, x=x: jax.block_until_ready(f(x)))
+            row[name] = _gcps(nch, t)
+        rows.append(row)
+    return rows
+
+
 def table8_proxy(langs=("arabic", "latin", "chinese")):
     """Instructions-per-byte proxy (paper Table 8): jaxpr FLOPs/bytes per
     input byte for each strategy — the HLO-op analogue of instruction

@@ -45,6 +45,16 @@ def main():
     show("Pallas kernel utf8->utf16 matches", np.array_equal(
         got, utf16.astype(np.uint16)))
 
+    # --- error location + replacement (simdutf-style result) ------------
+    broken = np.frombuffer("héllo".encode("utf-8"), np.uint8).copy()
+    broken[1] = 0xFF  # corrupt the é lead byte
+    count, status = tc.scan_utf8(jnp.asarray(broken), len(broken))
+    show("scan_utf8: first invalid byte offset", int(status))
+    out, cnt, status = tc.transcode_utf8_to_utf16(
+        jnp.asarray(broken), len(broken), errors="replace")
+    fixed = np.asarray(out)[: int(cnt)].astype(np.uint16).tobytes()
+    show("errors='replace' output", fixed.decode("utf-16-le"))
+
     # --- capacity planning (simdutf-style length queries) ---------------
     show("utf16 units needed",
          int(tc.utf16_length_from_utf8(jnp.asarray(utf8), len(utf8))))

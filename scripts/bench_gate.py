@@ -1,0 +1,114 @@
+#!/usr/bin/env python3
+"""Bench regression gate: fresh --smoke run vs the committed baseline.
+
+Usage:
+    python scripts/bench_gate.py --fresh BENCH_fresh.json \
+        [--baseline BENCH_transcode.json] [--threshold 0.30] \
+        [--mode absolute|relative]
+
+Compares the fused strategy per (table, lang) cell against the committed
+``BENCH_transcode.json`` and fails (exit 1) when any cell regresses by
+more than ``threshold`` (default 30% — wide enough to absorb timer
+noise, tight enough to catch a real perf cliff).  Two modes:
+
+  * ``absolute`` (default) — raw Gchars/s.  Only sound when the fresh
+    run and the committed baseline come from the SAME machine; this is
+    what ``scripts/check.sh`` uses locally.
+  * ``relative`` — the fused/blockparallel speedup ratio per cell, so
+    absolute machine speed cancels out (both strategies are measured in
+    the same fresh run).  This is what CI uses: a GitHub-hosted runner
+    can be arbitrarily slower than the dev box that committed the
+    baseline without turning the job red, while a change that erodes the
+    fused pipeline's advantage still fails.
+
+Cells present in the baseline but missing from the fresh run fail the
+gate outright (a silently dropped strategy is a regression, not a skip).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+GATED_STRATEGY = "fused"
+REFERENCE_STRATEGY = "blockparallel"
+
+
+def _cells(report: dict, mode: str) -> dict:
+    raw = {}
+    for rec in report["records"]:
+        key = (rec["table"], rec["lang"])
+        raw.setdefault(key, {})[rec["strategy"]] = rec["gchars_per_s"]
+    out = {}
+    for key, by_strategy in raw.items():
+        if GATED_STRATEGY not in by_strategy:
+            continue
+        if mode == "relative":
+            ref = by_strategy.get(REFERENCE_STRATEGY)
+            if not ref:
+                continue
+            out[key] = by_strategy[GATED_STRATEGY] / ref
+        else:
+            out[key] = by_strategy[GATED_STRATEGY]
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fresh", required=True,
+                    help="JSON written by a fresh `benchmarks.run --smoke`")
+    ap.add_argument("--baseline", default="BENCH_transcode.json",
+                    help="committed baseline JSON")
+    ap.add_argument("--threshold", type=float, default=0.30,
+                    help="max allowed fractional regression per cell")
+    ap.add_argument("--mode", choices=("absolute", "relative"),
+                    default="absolute",
+                    help="absolute Gchars/s (same-machine baseline) or "
+                         "fused/blockparallel ratio (machine-portable)")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        base = _cells(json.load(f), args.mode)
+    with open(args.fresh) as f:
+        fresh = _cells(json.load(f), args.mode)
+
+    if not base:
+        print(f"bench gate: no '{GATED_STRATEGY}' records in baseline "
+              f"{args.baseline}", file=sys.stderr)
+        return 1
+
+    failures = []
+    unit = "Gchars/s" if args.mode == "absolute" else "x blockparallel"
+    print(f"bench gate [{args.mode}]: {GATED_STRATEGY} vs {args.baseline} "
+          f"(threshold {args.threshold:.0%}, cells in {unit})")
+    print(f"{'table':10s} {'lang':10s} {'baseline':>10s} {'fresh':>10s} "
+          f"{'ratio':>7s}")
+    for key in sorted(base):
+        table, lang = key
+        b = base[key]
+        f_ = fresh.get(key)
+        if f_ is None:
+            print(f"{table:10s} {lang:10s} {b:10.3f} {'MISSING':>10s}")
+            failures.append(f"{table}/{lang}: missing from fresh run")
+            continue
+        ratio = f_ / b if b > 0 else float("inf")
+        flag = "" if ratio >= 1.0 - args.threshold else "  << REGRESSION"
+        print(f"{table:10s} {lang:10s} {b:10.3f} {f_:10.3f} "
+              f"{ratio:7.2f}{flag}")
+        if ratio < 1.0 - args.threshold:
+            failures.append(
+                f"{table}/{lang}: {b:.3f} -> {f_:.3f} {unit} "
+                f"({ratio:.2f}x, limit {1.0 - args.threshold:.2f}x)")
+
+    if failures:
+        print("\nbench gate FAILED:", file=sys.stderr)
+        for msg in failures:
+            print(f"  {msg}", file=sys.stderr)
+        return 1
+    print(f"bench gate OK: {len(base)} cells within threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

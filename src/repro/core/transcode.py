@@ -2,25 +2,39 @@
 
 All functions are shape-polymorphic in the *static* buffer capacity and take
 an explicit ``n_valid`` scalar for the logical length, so they jit cleanly
-and batch with ``vmap`` / shard with ``pjit``.  Outputs are (buffer, count,
-err): a fixed-capacity buffer, the number of meaningful elements, and a
-validation flag.
+and batch with ``vmap`` / shard with ``pjit``.  Outputs are a
+:class:`repro.core.result.TranscodeResult` ``(buffer, count, status)``: a
+fixed-capacity buffer, the number of meaningful elements, and an int32
+simdutf-style status — -1 for a valid stream, else the input offset of the
+first invalid maximal subpart, with Python ``UnicodeDecodeError.start``
+semantics (bytes for UTF-8, code units for UTF-16).
+
+Error policy (the ``errors=`` kwarg; full table in DESIGN.md §4):
+
+  * ``"strict"``  (default) -- historical behavior: the buffer holds the
+    speculative transcode and ``status`` reports where the stream broke;
+    callers reject invalid input wholesale.
+  * ``"replace"`` -- lossy ingestion: each maximal subpart of an
+    ill-formed sequence (W3C / CPython substitution semantics) emits one
+    U+FFFD and the transcode completes at full speed; ``status`` still
+    reports the first substitution offset.
 
 Strategies (the ``strategy=`` kwarg of ``transcode_utf8_to_utf16`` /
 ``transcode_utf16_to_utf8``; full decision table in DESIGN.md §5):
 
   * ``fused`` (default)  -- two-pass Pallas pipeline with hierarchical
-    in-kernel compaction and narrow (uint8/uint16) I/O; no full-capacity
-    int32 intermediate ever reaches HBM.  The high-performance path
-    (``repro.kernels.fused_transcode``).  Output buffers are narrow
-    (uint16 units / uint8 bytes); ``buffer[:count]``, ``count`` and
-    ``err`` are bit-identical to ``blockparallel``.
+    in-kernel compaction and narrow (uint8/uint16) I/O; validation (the
+    Keiser-Lemire nibble tables + the maximal-subpart error locator) is
+    folded into the counting scan, so no standalone validation pass ever
+    re-reads the input.  Output buffers are narrow (uint16 units / uint8
+    bytes); ``buffer[:count]``, ``count`` and ``status`` are
+    bit-identical to ``blockparallel``.
   * ``blockparallel``    -- speculative per-position decode + global XLA
     cumsum compaction; fully branch-free, pure-jnp (no Pallas), the
     portable beyond-paper form and the semantic reference.
   * ``windowed``         -- the paper-faithful Algorithm 2/3 structure
     (see ``repro.core.windowed``); serial window walk, the measured
-    baseline.
+    baseline.  Supports ``errors="strict"`` only.
 
 The ASCII fast path of Algorithm 3 survives as a whole-chunk ``lax.cond``:
 for ASCII-pure chunks (the paper's Latin benchmark) the entire decode is a
@@ -29,12 +43,12 @@ widening copy.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
-from repro.core import compaction, utf16 as u16mod, utf32 as u32mod, utf8 as u8mod
+from repro.core import compaction, result as R
+from repro.core import utf16 as u16mod, utf32 as u32mod, utf8 as u8mod
+from repro.core.result import STATUS_OK, TranscodeResult  # noqa: F401  (re-export)
 
 
 def _as_i32(x):
@@ -43,6 +57,14 @@ def _as_i32(x):
 
 def _n(x, n_valid):
     return x.shape[0] if n_valid is None else n_valid
+
+
+_check_errors = R.check_errors_policy
+
+
+# Min-reduce of a per-position error map over the live region; the one
+# definition lives next to the status semantics in core/result.py.
+_first_error_status = R.first_error_status
 
 
 # ---------------------------------------------------------------------------
@@ -58,6 +80,53 @@ def validate_utf16(u, n_valid=None):
     return u16mod.validate(_as_i32(u), n_valid)
 
 
+def scan_utf8(b, n_valid=None, *, strategy: str = "fused"):
+    """Single-scan UTF-8 validation + UTF-16 capacity: ``(count, status)``.
+
+    ``status`` is -1 for valid streams, else the byte offset of the first
+    invalid maximal subpart (Python ``UnicodeDecodeError.start``);
+    ``count`` is the UTF-16 code units a transcode would emit.  The fused
+    strategy reads the input exactly once (the pipeline's counting pass
+    with its folded validation); ``blockparallel`` is the pure-jnp
+    reference with identical results.
+    """
+    if strategy == "fused":
+        from repro.kernels import fused_transcode
+        return fused_transcode.utf8_scan_fused(b, n_valid)
+    if strategy != "blockparallel":
+        raise ValueError(f"scan_utf8: unknown strategy {strategy!r}")
+    b = _mask_padding(_as_i32(b), n_valid)
+    n = _n(b, n_valid)
+    idx = jnp.arange(b.shape[0])
+    cp, is_lead, _dec_err = u8mod.decode_speculative(b)
+    units, _u0, _u1, _bad = u16mod.encode_candidates(cp)
+    count = jnp.sum(jnp.where(is_lead & (idx < n), units, 0))
+    a = u8mod.analyze(b)
+    return count, _first_error_status(a["err"], n)
+
+
+def scan_utf16(u, n_valid=None, *, strategy: str = "fused"):
+    """Single-scan UTF-16 validation + UTF-8 capacity: ``(count, status)``.
+
+    ``status`` is -1 for valid streams, else the unit offset of the first
+    unpaired surrogate half; ``count`` is the UTF-8 bytes a transcode
+    would emit.
+    """
+    if strategy == "fused":
+        from repro.kernels import fused_transcode
+        return fused_transcode.utf16_scan_fused(u, n_valid)
+    if strategy != "blockparallel":
+        raise ValueError(f"scan_utf16: unknown strategy {strategy!r}")
+    u = _mask_padding(_as_i32(u), n_valid)
+    n = _n(u, n_valid)
+    idx = jnp.arange(u.shape[0])
+    cp, is_lead, _dec_err = u16mod.decode_speculative(u)
+    L, _cand, _bad = u32mod.encode_utf8_candidates(cp)
+    count = jnp.sum(jnp.where(is_lead & (idx < n), L, 0))
+    a = u16mod.analyze(u)
+    return count, _first_error_status(a["err"], n)
+
+
 # ---------------------------------------------------------------------------
 # UTF-8 -> UTF-32 / UTF-16
 
@@ -69,48 +138,64 @@ def _mask_padding(b, n_valid):
     return jnp.where(idx < n_valid, b, 0)
 
 
-def utf8_to_utf32(b, n_valid=None, validate: bool = True):
+def utf8_to_utf32(b, n_valid=None, validate: bool = True,
+                  errors: str = "strict"):
     """Decode UTF-8 bytes to code points.
 
-    Returns (cp_buffer[int32, capacity=len(b)], count, err).
+    Returns TranscodeResult(cp_buffer[int32, capacity=len(b)], count,
+    status).
     """
+    _check_errors(errors)
     b = _mask_padding(_as_i32(b), n_valid)
     n = _n(b, n_valid)
-    cp, is_lead, dec_err = u8mod.decode_speculative(b)
     idx = jnp.arange(b.shape[0])
+    if errors == "replace":
+        a = u8mod.analyze(b)
+        mask = a["starts"] & (idx < n)
+        out, count = compaction.compact(a["cp"], mask, b.shape[0])
+        status = _first_error_status(a["err"], n) if validate else jnp.int32(STATUS_OK)
+        return TranscodeResult(out, count, status)
+    cp, is_lead, _dec_err = u8mod.decode_speculative(b)
     mask = is_lead & (idx < n)
     out, count = compaction.compact(cp, mask, b.shape[0])
-    err = dec_err if validate else jnp.bool_(False)
     if validate:
-        err = err | ~u8mod.validate_kl(b, n_valid)
-    return out, count, err
+        status = _first_error_status(u8mod.analyze(b)["err"], n)
+    else:
+        status = jnp.int32(STATUS_OK)
+    return TranscodeResult(out, count, status)
 
 
 def utf8_to_utf16(b, n_valid=None, validate: bool = True,
-                  ascii_fastpath: bool = True):
+                  ascii_fastpath: bool = True, errors: str = "strict"):
     """Transcode UTF-8 bytes to UTF-16 code units (little-endian values).
 
-    Returns (u16_buffer[int32, capacity=len(b)], count, err).
+    Returns TranscodeResult(u16_buffer[int32, capacity=len(b)], count,
+    status).
     """
+    _check_errors(errors)
     b = _mask_padding(_as_i32(b), n_valid)
     n = _n(b, n_valid)
     cap = b.shape[0]
     idx = jnp.arange(cap)
 
     def general(b):
-        cp, is_lead, dec_err = u8mod.decode_speculative(b)
-        mask = is_lead & (idx < n)
+        if errors == "replace" or validate:
+            a = u8mod.analyze(b)
+        if errors == "replace":
+            cp, mask = a["cp"], a["starts"] & (idx < n)
+        else:
+            cp, is_lead, _dec_err = u8mod.decode_speculative(b)
+            mask = is_lead & (idx < n)
         units, u0, u1, _bad = u16mod.encode_candidates(cp)
         vals = jnp.stack([u0, u1], -1)
         out, count = compaction.compact_offsets(vals, units, mask, cap)
-        err = dec_err if validate else jnp.bool_(False)
-        if validate:
-            err = err | ~u8mod.validate_kl(b, None)
-        return out, count, err
+        status = _first_error_status(a["err"], n) if validate else jnp.int32(STATUS_OK)
+        return TranscodeResult(out, count, status)
 
     def ascii(b):
         # Paper Algorithm 3 fast path: widening copy.
-        return b, jnp.asarray(n, jnp.int32), jnp.bool_(False)
+        return TranscodeResult(b, jnp.asarray(n, jnp.int32),
+                               jnp.int32(STATUS_OK))
 
     if not ascii_fastpath:
         return general(b)
@@ -122,40 +207,58 @@ def utf8_to_utf16(b, n_valid=None, validate: bool = True,
 # UTF-16 -> UTF-32 / UTF-8
 
 
-def utf16_to_utf32(u, n_valid=None, validate: bool = True):
+def utf16_to_utf32(u, n_valid=None, validate: bool = True,
+                   errors: str = "strict"):
+    _check_errors(errors)
     u = _mask_padding(_as_i32(u), n_valid)
     n = _n(u, n_valid)
-    cp, is_lead, err = u16mod.decode_speculative(u)
     idx = jnp.arange(u.shape[0])
+    if errors == "replace":
+        a = u16mod.analyze(u)
+        mask = a["starts"] & (idx < n)
+        out, count = compaction.compact(a["cp"], mask, u.shape[0])
+        status = _first_error_status(a["err"], n) if validate else jnp.int32(STATUS_OK)
+        return TranscodeResult(out, count, status)
+    cp, is_lead, _dec_err = u16mod.decode_speculative(u)
     mask = is_lead & (idx < n)
     out, count = compaction.compact(cp, mask, u.shape[0])
-    if not validate:
-        err = jnp.bool_(False)
-    return out, count, err
+    if validate:
+        status = _first_error_status(u16mod.analyze(u)["err"], n)
+    else:
+        status = jnp.int32(STATUS_OK)
+    return TranscodeResult(out, count, status)
 
 
 def utf16_to_utf8(u, n_valid=None, validate: bool = True,
-                  ascii_fastpath: bool = True):
+                  ascii_fastpath: bool = True, errors: str = "strict"):
     """Transcode UTF-16 units to UTF-8 bytes.
 
-    Returns (byte_buffer[int32, capacity=3*len(u)], count, err).
+    Returns TranscodeResult(byte_buffer[int32, capacity=3*len(u)], count,
+    status).
     """
+    _check_errors(errors)
     u = _mask_padding(_as_i32(u), n_valid)
     n = _n(u, n_valid)
     cap = 3 * u.shape[0]
     idx = jnp.arange(u.shape[0])
 
     def general(u):
-        cp, is_lead, dec_err = u16mod.decode_speculative(u)
-        mask = is_lead & (idx < n)
-        L, cand, bad = u32mod.encode_utf8_candidates(cp)
+        if errors == "replace" or validate:
+            a = u16mod.analyze(u)
+        if errors == "replace":
+            cp, mask = a["cp"], a["starts"] & (idx < n)
+        else:
+            cp, is_lead, _dec_err = u16mod.decode_speculative(u)
+            mask = is_lead & (idx < n)
+        L, cand, _bad = u32mod.encode_utf8_candidates(cp)
         out, count = compaction.compact_offsets(cand, L, mask, cap)
-        err = (dec_err | jnp.any(bad & mask)) if validate else jnp.bool_(False)
-        return out, count, err
+        status = _first_error_status(a["err"], n) if validate else jnp.int32(STATUS_OK)
+        return TranscodeResult(out, count, status)
 
     def ascii(u):
         out = jnp.concatenate([u, jnp.zeros((cap - u.shape[0],), u.dtype)])
-        return out, jnp.asarray(n, jnp.int32), jnp.bool_(False)
+        return TranscodeResult(out, jnp.asarray(n, jnp.int32),
+                               jnp.int32(STATUS_OK))
 
     if not ascii_fastpath:
         return general(u)
@@ -167,27 +270,46 @@ def utf16_to_utf8(u, n_valid=None, validate: bool = True,
 # UTF-32 egress
 
 
-def utf32_to_utf8(cp, n_valid=None, validate: bool = True):
+def _invalid_scalar(cp):
+    """Code points no encoding may represent: surrogates, > U+10FFFF,
+    negatives.  Checked pre-substitution so errors="replace" can swap in
+    U+FFFD while status still reports the original offender."""
+    return ((cp >= 0xD800) & (cp < 0xE000)) | (cp > 0x10FFFF) | (cp < 0)
+
+
+def utf32_to_utf8(cp, n_valid=None, validate: bool = True,
+                  errors: str = "strict"):
+    _check_errors(errors)
     cp = _mask_padding(_as_i32(cp), n_valid)
     n = _n(cp, n_valid)
     cap = 4 * cp.shape[0]
     idx = jnp.arange(cp.shape[0])
     mask = idx < n
-    L, cand, bad = u32mod.encode_utf8_candidates(cp)
+    bad = _invalid_scalar(cp)
+    if errors == "replace":
+        cp = jnp.where(bad, 0xFFFD, cp)
+    L, cand, _bad = u32mod.encode_utf8_candidates(cp)
     out, count = compaction.compact_offsets(cand, L, mask, cap)
-    return out, count, (jnp.any(bad & mask) if validate else jnp.bool_(False))
+    status = _first_error_status(bad, n) if validate else jnp.int32(STATUS_OK)
+    return TranscodeResult(out, count, status)
 
 
-def utf32_to_utf16(cp, n_valid=None, validate: bool = True):
+def utf32_to_utf16(cp, n_valid=None, validate: bool = True,
+                   errors: str = "strict"):
+    _check_errors(errors)
     cp = _mask_padding(_as_i32(cp), n_valid)
     n = _n(cp, n_valid)
     cap = 2 * cp.shape[0]
     idx = jnp.arange(cp.shape[0])
     mask = idx < n
-    units, u0, u1, bad = u16mod.encode_candidates(cp)
+    bad = _invalid_scalar(cp)
+    if errors == "replace":
+        cp = jnp.where(bad, 0xFFFD, cp)
+    units, u0, u1, _bad = u16mod.encode_candidates(cp)
     vals = jnp.stack([u0, u1], -1)
     out, count = compaction.compact_offsets(vals, units, mask, cap)
-    return out, count, (jnp.any(bad & mask) if validate else jnp.bool_(False))
+    status = _first_error_status(bad, n) if validate else jnp.int32(STATUS_OK)
+    return TranscodeResult(out, count, status)
 
 
 # ---------------------------------------------------------------------------
@@ -248,30 +370,40 @@ DEFAULT_STRATEGY = "fused"
 
 
 def transcode_utf8_to_utf16(b, n_valid=None, *, strategy: str = DEFAULT_STRATEGY,
-                            validate: bool = True):
+                            validate: bool = True, errors: str = "strict"):
     """Strategy-dispatched UTF-8 -> UTF-16.  See module docstring."""
     if strategy == "fused":
         from repro.kernels import fused_transcode
         return fused_transcode.utf8_to_utf16_fused(b, n_valid,
-                                                   validate=validate)
+                                                   validate=validate,
+                                                   errors=errors)
     elif strategy == "blockparallel":
-        return utf8_to_utf16(b, n_valid, validate=validate)
+        return utf8_to_utf16(b, n_valid, validate=validate, errors=errors)
     elif strategy == "windowed":
+        if errors != "strict":
+            raise ValueError(
+                "strategy='windowed' supports errors='strict' only "
+                "(the serial baseline has no replacement path)")
         from repro.core import windowed
         return windowed.utf8_to_utf16_windowed(b, n_valid, validate=validate)
     raise ValueError(f"unknown strategy: {strategy}")
 
 
 def transcode_utf16_to_utf8(u, n_valid=None, *, strategy: str = DEFAULT_STRATEGY,
-                            validate: bool = True):
+                            validate: bool = True, errors: str = "strict"):
     """Strategy-dispatched UTF-16 -> UTF-8.  See module docstring."""
     if strategy == "fused":
         from repro.kernels import fused_transcode
         return fused_transcode.utf16_to_utf8_fused(u, n_valid,
-                                                   validate=validate)
+                                                   validate=validate,
+                                                   errors=errors)
     elif strategy == "blockparallel":
-        return utf16_to_utf8(u, n_valid, validate=validate)
+        return utf16_to_utf8(u, n_valid, validate=validate, errors=errors)
     elif strategy == "windowed":
+        if errors != "strict":
+            raise ValueError(
+                "strategy='windowed' supports errors='strict' only "
+                "(the serial baseline has no replacement path)")
         from repro.core import windowed
         return windowed.utf16_to_utf8_windowed(u, n_valid, validate=validate)
     raise ValueError(f"unknown strategy: {strategy}")

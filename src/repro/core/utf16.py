@@ -95,6 +95,67 @@ def encode_candidates(cp: jax.Array):
     return units, u0, u1, bad
 
 
+# ---------------------------------------------------------------------------
+# Unit analysis (error location + replacement semantics).
+#
+# UTF-16's maximal-subpart story is one unit deep: every unpaired
+# surrogate half is its own ill-formed unit and is replaced by a single
+# U+FFFD; everything else is a valid unit (a BMP character or the high
+# half of a pair, which consumes its low half).  Python's utf-16-le
+# decoder reports errors at the byte offset of the unpaired half —
+# ``unit_offset == UnicodeDecodeError.start // 2``.
+
+
+def analyze_units(u, nxt1, prv1):
+    """Classify every position of a UTF-16 unit stream.
+
+    Arguments are int32 arrays of identical shape: the stream plus its
+    one-unit forward and backward shifts (out-of-stream reads 0, which is
+    a BMP character and can never pair).  Returns a dict:
+      ``starts`` -- bool, position begins a unit (not a consumed low half)
+      ``valid``  -- bool, unit is a valid character (BMP or full pair)
+      ``cp``     -- int32 code point (U+FFFD at unpaired halves)
+      ``err``    -- bool map of unpaired surrogate halves at unit starts
+    """
+    is_hi = (u >> 10) == 0x36
+    is_lo = (u >> 10) == 0x37
+    nxt_is_lo = (nxt1 >> 10) == 0x37
+    prv_is_hi = (prv1 >> 10) == 0x36
+
+    paired_hi = is_hi & nxt_is_lo
+    consumed = is_lo & prv_is_hi        # low half claimed by the previous hi
+    starts = ~consumed
+    valid = starts & (~(is_hi | is_lo) | paired_hi)
+
+    pair_cp = 0x10000 + ((u - 0xD800) << 10) + (nxt1 - 0xDC00)
+    cp = jnp.where(paired_hi, pair_cp, u)
+    cp = jnp.where(valid, cp, 0xFFFD)
+    cp = jnp.where(starts, cp, 0)
+    return {
+        "starts": starts,
+        "valid": valid,
+        "cp": cp,
+        "err": starts & ~valid,
+    }
+
+
+def analyze(u: jax.Array):
+    """Whole-array :func:`analyze_units` (zero-filled shifts)."""
+    return analyze_units(u, _shift_left(u, 1), _shift_right(u, 1))
+
+
+def first_error_index(u: jax.Array, n_valid=None) -> jax.Array:
+    """int32 scalar: unit offset of the first unpaired surrogate half
+    (== Python's ``UnicodeDecodeError.start // 2`` for utf-16-le), or -1
+    when the stream is valid UTF-16."""
+    from repro.core import result as R
+    if n_valid is not None:
+        idx = jnp.arange(u.shape[0])
+        u = jnp.where(idx < n_valid, u, 0)
+    n = u.shape[0] if n_valid is None else n_valid
+    return R.first_error_status(analyze(u)["err"], n)
+
+
 def utf8_length(u: jax.Array) -> jax.Array:
     """UTF-8 bytes needed by a UTF-16 stream (paper §5 length classes)."""
     is_hi, is_lo = classify(u)

@@ -194,6 +194,145 @@ def count_chars(b: jax.Array) -> jax.Array:
     return jnp.sum(((b & 0xC0) != 0x80).astype(jnp.int32))
 
 
+# ---------------------------------------------------------------------------
+# Maximal-subpart analysis (error location + replacement semantics).
+#
+# The W3C/Unicode "substitution of maximal subparts" rule — the one
+# CPython's UTF-8 decoder implements — partitions any byte stream into
+# units: each unit is either a complete valid character or a *maximal
+# subpart* of an ill-formed sequence (the lead plus however many
+# continuation bytes are valid for it, or a single invalid byte).  UTF-8
+# is self-synchronizing, so whether a byte STARTS a unit depends only on
+# the three preceding bytes — no serial resync walk is needed and the
+# whole classification is straight-line VPU arithmetic, same as the
+# speculative decode above.  This yields, branch-free:
+#
+#   * the first-error offset with Python ``UnicodeDecodeError.start``
+#     semantics (errors="strict" status reporting), and
+#   * the errors="replace" output: one U+FFFD per invalid unit start.
+
+
+def _lead_len_strict(b):
+    """Sequence length counting only *valid* lead byte values.
+
+    Unlike :func:`classify`'s table (which gives 0xC0/0xC1 length 2 and is
+    the speculative decoder's view), C0/C1 and F5..FF map to 0 here: they
+    can never begin a well-formed sequence, so as units they are
+    single-byte maximal subparts.
+    """
+    return jnp.where(b < 0x80, 1,
+           jnp.where((b >= 0xC2) & (b < 0xE0), 2,
+           jnp.where((b >= 0xE0) & (b < 0xF0), 3,
+           jnp.where((b >= 0xF0) & (b < 0xF5), 4, 0))))
+
+
+def _first_cont_range(lead):
+    """Allowed [lo, hi] for the byte after ``lead`` (RFC 3629 table 3-7):
+    E0 -> A0..BF, ED -> 80..9F, F0 -> 90..BF, F4 -> 80..8F, else 80..BF.
+    The constrained second byte folds the overlong / surrogate / too-large
+    checks into a plain range compare."""
+    lo = jnp.where(lead == 0xE0, 0xA0, jnp.where(lead == 0xF0, 0x90, 0x80))
+    hi = jnp.where(lead == 0xED, 0x9F, jnp.where(lead == 0xF4, 0x8F, 0xBF))
+    return lo, hi
+
+
+def analyze_subparts(b, nxt1, nxt2, nxt3, prv1, prv2, prv3):
+    """Classify every position of a UTF-8 stream into maximal subparts.
+
+    All seven arguments are int32 arrays of identical shape: the stream
+    plus its three forward and three backward shifts (callers supply the
+    shifts so the same body runs on whole arrays and on VMEM tiles with
+    neighbour-tile context; out-of-stream positions must read as 0).
+
+    Returns a dict of same-shape arrays:
+      ``starts`` -- bool, position begins a unit (valid character OR
+                    maximal subpart of an ill-formed sequence)
+      ``valid``  -- bool, the unit beginning here is a complete valid
+                    character
+      ``cp``     -- int32 code point of the unit (U+FFFD at invalid
+                    starts — the errors="replace" payload), 0 elsewhere
+      ``units``  -- int32 UTF-16 code units the unit emits under
+                    errors="replace" (0 at non-starts)
+      ``err``    -- bool, unit start that is NOT a valid character: the
+                    per-position error map whose first set index equals
+                    Python's ``UnicodeDecodeError.start``.
+    """
+    L = _lead_len_strict(b)
+    lo1, hi1 = _first_cont_range(b)
+    c1ok = (nxt1 >= lo1) & (nxt1 <= hi1)
+    c2ok = (nxt2 & 0xC0) == 0x80
+    c3ok = (nxt3 & 0xC0) == 0x80
+    valid = (
+        (L == 1)
+        | ((L == 2) & c1ok)
+        | ((L == 3) & c1ok & c2ok)
+        | ((L == 4) & c1ok & c2ok & c3ok)
+    )
+
+    # A position is CLAIMED (continues the unit of an earlier lead) iff a
+    # valid lead 1..3 bytes back reaches it through valid continuations.
+    # Only the second byte has a constrained range; 3rd/4th are 80..BF.
+    lp1, lp2, lp3 = (_lead_len_strict(prv1), _lead_len_strict(prv2),
+                     _lead_len_strict(prv3))
+    p1lo, p1hi = _first_cont_range(prv1)
+    p2lo, p2hi = _first_cont_range(prv2)
+    p3lo, p3hi = _first_cont_range(prv3)
+    is_cont = (b & 0xC0) == 0x80
+    cont_p1 = (prv1 & 0xC0) == 0x80
+    claimed = (
+        ((lp1 >= 2) & (b >= p1lo) & (b <= p1hi))
+        | ((lp2 >= 3) & (prv1 >= p2lo) & (prv1 <= p2hi) & is_cont)
+        | ((lp3 == 4) & (prv2 >= p3lo) & (prv2 <= p3hi) & cont_p1 & is_cont)
+    )
+    starts = ~claimed
+    valid = starts & valid
+
+    # Decoded value at unit starts (paper Figs. 2-4 bit surgery); invalid
+    # unit starts carry the replacement character.
+    cp2 = ((b & 0x1F) << 6) | (nxt1 & 0x3F)
+    cp3 = ((b & 0x0F) << 12) | ((nxt1 & 0x3F) << 6) | (nxt2 & 0x3F)
+    cp4 = (
+        ((b & 0x07) << 18)
+        | ((nxt1 & 0x3F) << 12)
+        | ((nxt2 & 0x3F) << 6)
+        | (nxt3 & 0x3F)
+    )
+    cp = jnp.where(L <= 1, b, jnp.where(L == 2, cp2,
+                                        jnp.where(L == 3, cp3, cp4)))
+    cp = jnp.where(valid, cp, 0xFFFD)
+    cp = jnp.where(starts, cp, 0)
+    units = jnp.where(starts,
+                      jnp.where(valid & (cp >= 0x10000), 2, 1), 0)
+    return {
+        "starts": starts,
+        "valid": valid,
+        "cp": cp,
+        "units": units,
+        "err": starts & ~valid,
+    }
+
+
+def analyze(b: jax.Array):
+    """Whole-array :func:`analyze_subparts` (zero-filled shifts)."""
+    return analyze_subparts(
+        b,
+        _shift_left(b, 1), _shift_left(b, 2), _shift_left(b, 3),
+        _shift_right(b, 1), _shift_right(b, 2), _shift_right(b, 3),
+    )
+
+
+def first_error_index(b: jax.Array, n_valid=None) -> jax.Array:
+    """int32 scalar: offset of the first invalid maximal subpart with
+    Python ``UnicodeDecodeError.start`` semantics, or -1 when the stream
+    (including a possibly truncated tail) is valid UTF-8."""
+    from repro.core import result as R
+    if n_valid is not None:
+        idx = jnp.arange(b.shape[0])
+        b = jnp.where(idx < n_valid, b, 0)
+    n = b.shape[0] if n_valid is None else n_valid
+    return R.first_error_status(analyze(b)["err"], n)
+
+
 def utf16_length(b: jax.Array) -> jax.Array:
     """UTF-16 code units needed by a UTF-8 stream (1 per char, 2 if 4-byte)."""
     is_lead = ((b & 0xC0) != 0x80).astype(jnp.int32)

@@ -26,7 +26,13 @@ strategy in ``repro.core.transcode`` exists: on TPU-class hardware the
 serial walk is the measured baseline, the speculative whole-array decode is
 the beyond-paper optimization.  See DESIGN.md §3 and EXPERIMENTS.md §Perf.
 
-All functions mirror the public API shape: (buffer, count, err).
+All functions mirror the public API shape:
+``TranscodeResult(buffer, count, status)`` — the global validation pass
+that seeds the walk (the paper fuses Keiser-Lemire per 64-byte block; over
+a device-resident buffer one fused pass is equivalent) doubles as the
+error locator, so ``status`` carries the first-error offset with the same
+Python ``exc.start`` semantics as the other strategies.  The windowed
+baseline supports ``errors="strict"`` only.
 """
 
 from __future__ import annotations
@@ -34,6 +40,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import result as R
 from repro.core import tables as T
 from repro.core import utf8 as u8mod
 from repro.core import utf16 as u16mod
@@ -92,9 +99,12 @@ def utf8_to_utf16_windowed(b, n_valid=None, validate: bool = True):
     lengths_t = jnp.asarray(T.WINDOW_LENGTHS)
     valid_t = jnp.asarray(T.WINDOW_VALID)
 
-    # Global Keiser-Lemire validation (the paper fuses it per 64-byte block;
-    # over a device-resident buffer a single fused pass is equivalent).
-    err0 = (~u8mod.validate_kl(b, n_valid)) if validate else jnp.bool_(False)
+    # Global validation + error location (the paper fuses Keiser-Lemire per
+    # 64-byte block; over a device-resident buffer a single fused pass is
+    # equivalent — and the maximal-subpart locator rides along).
+    status0 = u8mod.first_error_index(b, n_valid) if validate \
+        else jnp.int32(R.STATUS_OK)
+    err0 = (status0 >= 0) if validate else jnp.bool_(False)
 
     def window_body(state):
         p, q, out, err = state
@@ -183,7 +193,13 @@ def utf8_to_utf16_windowed(b, n_valid=None, validate: bool = True):
 
     # Zero the unclaimed lanes so buffers compare deterministically.
     out = jnp.where(jnp.arange(cap_out) < q, out, 0)
-    return out, q, err
+    if not validate:
+        return R.TranscodeResult(out, q, jnp.int32(R.STATUS_OK))
+    # The walk's per-window flags are a subset of the located errors; if
+    # they ever disagree, degrade to offset 0 rather than claiming valid.
+    status = jnp.where(status0 >= 0, status0,
+                       jnp.where(err, jnp.int32(0), jnp.int32(R.STATUS_OK)))
+    return R.TranscodeResult(out, q, status)
 
 
 # ---------------------------------------------------------------------------
@@ -338,9 +354,15 @@ def utf16_to_utf8_windowed(u, n_valid=None, validate: bool = True):
         new_out = jax.lax.dynamic_update_slice(out, temp, (q,))
         return p + jnp.maximum(k, 1), q + nb, new_out, err | lerr
 
-    err0 = (~u16mod.validate(u, n_valid)) if validate else jnp.bool_(False)
+    status0 = u16mod.first_error_index(u, n_valid) if validate \
+        else jnp.int32(R.STATUS_OK)
+    err0 = (status0 >= 0) if validate else jnp.bool_(False)
     p, q, out, err = jax.lax.while_loop(
         lambda s: s[0] < n, body, (jnp.int32(0), jnp.int32(0), out0, err0)
     )
     out = jnp.where(jnp.arange(cap_out) < q, out, 0)
-    return out, q, err
+    if not validate:
+        return R.TranscodeResult(out, q, jnp.int32(R.STATUS_OK))
+    status = jnp.where(status0 >= 0, status0,
+                       jnp.where(err, jnp.int32(0), jnp.int32(R.STATUS_OK)))
+    return R.TranscodeResult(out, q, status)

@@ -42,37 +42,43 @@ from repro.data.tokenizer import BOS_ID, EOS_ID, PAD_ID, ByteTokenizer
 # fused Pallas pipeline, batch cleanly (the Pallas interpreter and Mosaic
 # both carry batching rules).  Inputs are fixed-capacity [B, L] buffers of
 # narrow dtype (uint8 bytes / uint16 units) plus a [B] vector of logical
-# lengths; outputs are ([B, cap], [B] counts, [B] errs).  The jitted
-# callables are cached per (direction, strategy, validate).
+# lengths; outputs are a TranscodeResult of batched arrays
+# ([B, cap] buffers, [B] counts, [B] statuses — per-document first-error
+# offsets, -1 where valid).  The ``errors=`` policy threads through, so a
+# batch of partially-malformed documents can ingest losslessly
+# (errors="replace": U+FFFD per maximal subpart) without a host round
+# trip.  The jitted callables are cached per (direction, strategy,
+# validate, errors).
 
 _BATCH_CACHE: dict = {}
 
 
-def _batched(direction: str, strategy: str, validate: bool):
-    key = (direction, strategy, validate)
+def _batched(direction: str, strategy: str, validate: bool, errors: str):
+    key = (direction, strategy, validate, errors)
     fn = _BATCH_CACHE.get(key)
     if fn is None:
         one = (tc.transcode_utf8_to_utf16 if direction == "8to16"
                else tc.transcode_utf16_to_utf8)
         fn = jax.jit(jax.vmap(
-            lambda x, n: one(x, n, strategy=strategy, validate=validate)))
+            lambda x, n: one(x, n, strategy=strategy, validate=validate,
+                             errors=errors)))
         _BATCH_CACHE[key] = fn
     return fn
 
 
 def batch_utf8_to_utf16(docs, lengths, *,
                         strategy: str = tc.DEFAULT_STRATEGY,
-                        validate: bool = True):
+                        validate: bool = True, errors: str = "strict"):
     """Batched UTF-8 -> UTF-16: [B, L] byte buffers -> ([B, L], [B], [B])."""
-    return _batched("8to16", strategy, validate)(
+    return _batched("8to16", strategy, validate, errors)(
         jnp.asarray(docs), jnp.asarray(lengths))
 
 
 def batch_utf16_to_utf8(units, lengths, *,
                         strategy: str = tc.DEFAULT_STRATEGY,
-                        validate: bool = True):
+                        validate: bool = True, errors: str = "strict"):
     """Batched UTF-16 -> UTF-8: [B, L] unit buffers -> ([B, 3L], [B], [B])."""
-    return _batched("16to8", strategy, validate)(
+    return _batched("16to8", strategy, validate, errors)(
         jnp.asarray(units), jnp.asarray(lengths))
 
 

@@ -11,9 +11,17 @@ int32 ever leaves the kernels:
   Pass 1 (count)   Each grid step speculatively decodes its VMEM tile
                    (re-using :func:`repro.kernels.utf8_decode.decode_tile`
                    / :func:`repro.kernels.utf16_encode.encode_tile`) and
-                   emits ONE scalar — the tile's total output length —
-                   plus a fused validation flag.  HBM egress: 8 bytes per
-                   1024-element tile.
+                   emits THREE scalars — the tile's total output length,
+                   a fused validation flag, and the tile's first-error
+                   offset.  Validation is *folded into this scan*
+                   (DESIGN.md §4): the Keiser-Lemire nibble tables run
+                   against the tile already resident in VMEM, and the
+                   maximal-subpart analysis
+                   (``repro.core.utf8.analyze_subparts``) locates the
+                   first ill-formed sequence with Python
+                   ``UnicodeDecodeError.start`` semantics.  No standalone
+                   validation pass re-reads the input.  HBM egress: 12
+                   bytes per 1024-element tile.
 
   Inter-tile scan  An ``nblk``-element exclusive cumsum over the per-tile
                    totals (``compaction.tile_base_offsets``) yields each
@@ -28,6 +36,20 @@ int32 ever leaves the kernels:
                    compact tile at ``base[tile]``.  Output lane j of the
                    final buffer is written exactly once, at
                    ``base[tile] + local_rank``.
+
+Error semantics (the ``errors=`` policy, DESIGN.md §4):
+
+  * ``errors="strict"``   — historical behavior: the output buffer holds
+    the speculative transcode (bit-identical to ``blockparallel``), and
+    the int32 ``status`` of the returned
+    :class:`repro.core.result.TranscodeResult` carries the offset of the
+    first invalid maximal subpart (-1 when valid).
+  * ``errors="replace"``  — malformed input transcodes at full speed:
+    every maximal subpart of an ill-formed sequence (W3C / CPython
+    semantics) emits one U+FFFD, selected branch-free inside the same
+    count/write kernels (the policy is a static compile-time switch; no
+    data-dependent branch exists in either kernel).  ``status`` still
+    reports where the first substitution happened.
 
 The writer stores a full tile-width window at ``base[tile]``; the slack
 beyond the tile's total is overwritten by the next tile's window (grid
@@ -58,9 +80,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import compaction
+from repro.core import result as R
+from repro.core import tables as T
 from repro.core import utf16 as u16mod
 from repro.kernels import runtime
 from repro.kernels import utf8_decode as kdec
+from repro.kernels import utf8_validate as kval
 from repro.kernels import utf16_encode as kenc
 
 ROWS = 8
@@ -75,8 +100,12 @@ BLOCK = ROWS * LANES
 # low surrogate lives in the next tile (1023 three-byte lanes + one
 # 4-byte lane).  Undersizing these desynchronizes base offsets from
 # blockparallel's global cumsum and overflows the windowed store.
+# errors="replace" stays within the same bounds (a replacement lane is 1
+# unit / 3 bytes, never more than the speculative maximum).
 STAGE16 = 2 * BLOCK      # max UTF-16 units out of one 1024-byte UTF-8 tile
 STAGE8 = 3 * BLOCK + 1   # max UTF-8 bytes out of one 1024-unit UTF-16 tile
+
+_IMAX = R.NO_ERR_SENTINEL
 
 
 def _tile(x):
@@ -90,27 +119,76 @@ def _gidx(shape):
     return i * BLOCK + jnp.arange(BLOCK, dtype=jnp.int32).reshape(shape)
 
 
+_check_errors = R.check_errors_policy
+
+
+# Shared BlockSpecs: one definition of the tile geometry / neighbour-tile
+# offset convention for the count and write passes of both directions —
+# desynchronizing them would compute base offsets on a different tiling
+# than the writer stores with.
+def _tile_spec(off):
+    """Current/prev/next tile of the (nblk+2, ROWS, LANES) padded array."""
+    return pl.BlockSpec((1, ROWS, LANES), lambda i, off=off: (i + off, 0, 0))
+
+
+_SCALAR_SPEC = pl.BlockSpec((1,), lambda i: (0,))     # broadcast scalar
+_TABLE_SPEC = pl.BlockSpec((16,), lambda i: (0,))     # KL nibble table
+_PER_TILE_SPEC = pl.BlockSpec((1,), lambda i: (i,))   # per-tile scalar out
+
+
 # ---------------------------------------------------------------------------
 # UTF-8 -> UTF-16
 
 
-def _count8_kernel(n_ref, bp_ref, b_ref, bn_ref, tot_ref, err_ref):
+def _count8_kernel(t1h_ref, t1l_ref, t2h_ref, n_ref, bp_ref, b_ref, bn_ref,
+                   tot_ref, err_ref, ferr_ref, *, errors, validate):
     b = b_ref[...].astype(jnp.int32)
     bp = bp_ref[...].astype(jnp.int32)
     bn = bn_ref[...].astype(jnp.int32)
-    _cp, is_lead, units, err_map = kdec.decode_tile(b, bp, bn)
-    live = is_lead & (_gidx(b.shape) < n_ref[0])
-    tot_ref[0] = jnp.sum(jnp.where(live, units, 0))
-    err_ref[0] = jnp.max(err_map.astype(jnp.int32))
+    gidx = _gidx(b.shape)
+    live = gidx < n_ref[0]
+
+    need_analysis = validate or errors == "replace"
+    a = kdec.analyze_tile(b, bp, bn) if need_analysis else None
+    if errors == "replace":
+        tot_ref[0] = jnp.sum(jnp.where(a["starts"] & live, a["units"], 0))
+    else:
+        _cp, is_lead, units, _err = kdec.decode_tile(b, bp, bn)
+        tot_ref[0] = jnp.sum(jnp.where(is_lead & live, units, 0))
+
+    if validate:
+        # Fused validation, one scan: the paper-faithful Keiser-Lemire
+        # nibble tables give the structural verdict, the maximal-subpart
+        # map locates the first error at its lead byte (Python exc.start
+        # semantics).  The detectors are equivalent on live bytes (the
+        # fuzz suite pins both to CPython); KL rides along deliberately —
+        # it is the paper's §4 validator, and OR-ing it in means a defect
+        # in either detector degrades to a located (or offset-0) error
+        # rather than a silently accepted invalid stream.
+        kl = kval.kl_error_tile(b, bp, t1h_ref[...], t1l_ref[...],
+                                t2h_ref[...]) & live
+        sub = a["err"] & live
+        err_ref[0] = jnp.max((kl | sub).astype(jnp.int32))
+        ferr_ref[0] = jnp.min(jnp.where(sub, gidx, _IMAX))
+    else:
+        err_ref[0] = 0
+        ferr_ref[0] = _IMAX
 
 
-def _write8_kernel(n_ref, base_ref, bp_ref, b_ref, bn_ref, out_ref):
+def _write8_kernel(n_ref, base_ref, bp_ref, b_ref, bn_ref, out_ref, *,
+                   errors):
     b = b_ref[...].astype(jnp.int32)
     bp = bp_ref[...].astype(jnp.int32)
     bn = bn_ref[...].astype(jnp.int32)
-    cp, is_lead, units, _err = kdec.decode_tile(b, bp, bn)
-    live = (is_lead & (_gidx(b.shape) < n_ref[0])).reshape(-1)
-    eff = jnp.where(live, units.reshape(-1), 0)
+    if errors == "replace":
+        a = kdec.analyze_tile(b, bp, bn)
+        cp = a["cp"]
+        live = (a["starts"] & (_gidx(b.shape) < n_ref[0])).reshape(-1)
+        eff = jnp.where(live, a["units"].reshape(-1), 0)
+    else:
+        cp, is_lead, units, _err = kdec.decode_tile(b, bp, bn)
+        live = (is_lead & (_gidx(b.shape) < n_ref[0])).reshape(-1)
+        eff = jnp.where(live, units.reshape(-1), 0)
     rank, _tot = compaction.tile_exclusive_scan(eff, rows=ROWS)
     _u, u0, u1, _bad = u16mod.encode_candidates(cp)
     # In-register compress-store (vpcompressb analogue): scatter the 1-2
@@ -123,34 +201,57 @@ def _write8_kernel(n_ref, base_ref, bp_ref, b_ref, bn_ref, out_ref):
     out_ref[pl.ds(base_ref[0], STAGE16)] = stage.astype(jnp.uint16)
 
 
+def _count8_call(bm, n, errors, validate, interpret):
+    """One counting/validating scan over the tiled bytes.
+
+    Returns (totals, errs, ferrs): per-tile output totals, fused
+    error flags and first-error offsets.
+    """
+    b3, nblk = _tile(bm)
+    n1 = jnp.asarray(n, jnp.int32).reshape(1)
+    kernel = functools.partial(_count8_kernel, errors=errors,
+                               validate=validate)
+    totals, errs, ferrs = pl.pallas_call(
+        kernel,
+        grid=(nblk,),
+        in_specs=[_TABLE_SPEC, _TABLE_SPEC, _TABLE_SPEC, _SCALAR_SPEC,
+                  _tile_spec(0), _tile_spec(1), _tile_spec(2)],
+        out_specs=[_PER_TILE_SPEC, _PER_TILE_SPEC, _PER_TILE_SPEC],
+        out_shape=[jax.ShapeDtypeStruct((nblk,), jnp.int32),
+                   jax.ShapeDtypeStruct((nblk,), jnp.int32),
+                   jax.ShapeDtypeStruct((nblk,), jnp.int32)],
+        interpret=interpret,
+    )(jnp.asarray(T.BYTE_1_HIGH), jnp.asarray(T.BYTE_1_LOW),
+      jnp.asarray(T.BYTE_2_HIGH), n1, b3, b3, b3)
+    return b3, nblk, totals, errs, ferrs
+
+
+def _status(errs, ferrs, validate):
+    if not validate:
+        return jnp.int32(R.STATUS_OK)
+    first = jnp.min(ferrs, initial=_IMAX)
+    return R.status_from_first(first, jnp.max(errs, initial=0) > 0)
+
+
 @functools.partial(jax.jit, static_argnames=("validate", "interpret",
-                                             "ascii_fastpath", "masked"))
-def _utf8_to_utf16_impl(b, n, validate, interpret, ascii_fastpath, masked):
+                                             "ascii_fastpath", "masked",
+                                             "errors"))
+def _utf8_to_utf16_impl(b, n, validate, interpret, ascii_fastpath, masked,
+                        errors):
     cap = b.shape[0]
     idx = jnp.arange(cap)
     bm = jnp.where(idx < n, b, 0).astype(jnp.uint8) if masked else b
 
     def general(bm):
-        b3, nblk = _tile(bm)
+        b3, nblk, totals, errs, ferrs = _count8_call(
+            bm, n, errors, validate, interpret)
         n1 = jnp.asarray(n, jnp.int32).reshape(1)
-        spec = lambda off: pl.BlockSpec(
-            (1, ROWS, LANES), lambda i, off=off: (i + off, 0, 0))
-        scalar = pl.BlockSpec((1,), lambda i: (0,))
-        per_tile = pl.BlockSpec((1,), lambda i: (i,))
-        totals, errs = pl.pallas_call(
-            _count8_kernel,
-            grid=(nblk,),
-            in_specs=[scalar, spec(0), spec(1), spec(2)],
-            out_specs=[per_tile, per_tile],
-            out_shape=[jax.ShapeDtypeStruct((nblk,), jnp.int32),
-                       jax.ShapeDtypeStruct((nblk,), jnp.int32)],
-            interpret=interpret,
-        )(n1, b3, b3, b3)
         base, total = compaction.tile_base_offsets(totals)
         outp = pl.pallas_call(
-            _write8_kernel,
+            functools.partial(_write8_kernel, errors=errors),
             grid=(nblk,),
-            in_specs=[scalar, per_tile, spec(0), spec(1), spec(2)],
+            in_specs=[_SCALAR_SPEC, _PER_TILE_SPEC,
+                      _tile_spec(0), _tile_spec(1), _tile_spec(2)],
             # The whole compact buffer is one revisited block: each grid
             # step stores its tile at a data-dependent offset inside it.
             # Sized so the window store at the largest possible base
@@ -163,14 +264,13 @@ def _utf8_to_utf16_impl(b, n, validate, interpret, ascii_fastpath, masked):
         # capacity) and clear the write-window slack after the last tile.
         outp = outp[:cap]
         outp = jnp.where(jnp.arange(cap) < total, outp, 0)
-        err = ((jnp.max(errs) > 0) | kdec.tail_lead_err(bm, n)) if validate \
-            else jnp.bool_(False)
-        return outp, total, err
+        return R.TranscodeResult(outp, total, _status(errs, ferrs, validate))
 
     def ascii(bm):
         # Paper Algorithm 3 fast path: widening copy (uint8 -> uint16).
-        return bm.astype(jnp.uint16), jnp.asarray(n, jnp.int32), \
-            jnp.bool_(False)
+        return R.TranscodeResult(bm.astype(jnp.uint16),
+                                 jnp.asarray(n, jnp.int32),
+                                 jnp.int32(R.STATUS_OK))
 
     if not ascii_fastpath:
         return general(bm)
@@ -178,14 +278,20 @@ def _utf8_to_utf16_impl(b, n, validate, interpret, ascii_fastpath, masked):
 
 
 def utf8_to_utf16_fused(b, n_valid=None, *, validate: bool = True,
-                        interpret=None, ascii_fastpath: bool = True):
+                        errors: str = "strict", interpret=None,
+                        ascii_fastpath: bool = True):
     """Fused two-pass UTF-8 -> UTF-16 transcode.
 
-    Returns ``(u16_buffer[uint16, capacity=len(b)], count, err)`` —
-    bit-identical in ``buffer[:count]``/``count``/``err`` to the
-    block-parallel strategy, with narrow I/O and no full-capacity int32
-    intermediates.
+    Returns ``TranscodeResult(u16_buffer[uint16, capacity=len(b)], count,
+    status)`` — under ``errors="strict"``, ``buffer[:count]`` and
+    ``count`` are bit-identical to the block-parallel strategy and
+    ``status`` carries the first invalid byte offset (-1 = valid); under
+    ``errors="replace"`` every maximal subpart of an ill-formed sequence
+    becomes U+FFFD (CPython ``errors="replace"`` semantics) at full
+    speed.  Validation is fused into the counting scan: the input bytes
+    are never read by a standalone validation pass.
     """
+    _check_errors(errors)
     b = jnp.asarray(b)
     if b.dtype != jnp.uint8:
         b = b.astype(jnp.uint8)
@@ -193,29 +299,81 @@ def utf8_to_utf16_fused(b, n_valid=None, *, validate: bool = True,
     return _utf8_to_utf16_impl(
         b, jnp.asarray(n, jnp.int32), validate,
         runtime.resolve_interpret(interpret), ascii_fastpath,
-        n_valid is not None)
+        n_valid is not None, errors)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "masked"))
+def _utf8_scan_impl(b, n, interpret, masked):
+    cap = b.shape[0]
+    idx = jnp.arange(cap)
+    bm = jnp.where(idx < n, b, 0).astype(jnp.uint8) if masked else b
+    _b3, _nblk, totals, errs, ferrs = _count8_call(
+        bm, n, "strict", True, interpret)
+    return jnp.sum(totals), _status(errs, ferrs, True)
+
+
+def utf8_scan_fused(b, n_valid=None, *, interpret=None):
+    """Single-scan UTF-8 validation + UTF-16 length: (count, status).
+
+    Runs ONLY the fused pipeline's counting pass — one read of the input
+    bytes yields the simdutf-style verdict: ``status`` is -1 for valid
+    streams, else the byte offset of the first invalid maximal subpart
+    (Python ``UnicodeDecodeError.start``), and ``count`` is the UTF-16
+    code units a transcode would produce.  This is the ingestion-boundary
+    API (serve ingress): validation with error location at the cost of a
+    capacity query.
+    """
+    b = jnp.asarray(b)
+    if b.dtype != jnp.uint8:
+        b = b.astype(jnp.uint8)
+    n = b.shape[0] if n_valid is None else n_valid
+    return _utf8_scan_impl(b, jnp.asarray(n, jnp.int32),
+                           runtime.resolve_interpret(interpret),
+                           n_valid is not None)
 
 
 # ---------------------------------------------------------------------------
 # UTF-16 -> UTF-8
 
 
-def _count16_kernel(n_ref, up_ref, u_ref, un_ref, tot_ref, err_ref):
+def _count16_kernel(n_ref, up_ref, u_ref, un_ref,
+                    tot_ref, err_ref, ferr_ref, *, errors, validate):
     u = u_ref[...].astype(jnp.int32)
     up = up_ref[...].astype(jnp.int32)
     un = un_ref[...].astype(jnp.int32)
-    _b0, _b1, _b2, _b3, L, err_map = kenc.encode_tile(u, up, un)
-    live = (L > 0) & (_gidx(u.shape) < n_ref[0])
-    tot_ref[0] = jnp.sum(jnp.where(live, L, 0))
-    err_ref[0] = jnp.max(err_map.astype(jnp.int32))
+    gidx = _gidx(u.shape)
+    live = gidx < n_ref[0]
+
+    need_analysis = validate or errors == "replace"
+    a = kenc.analyze_tile(u, up, un) if need_analysis else None
+    if errors == "replace":
+        _b0, _b1, _b2, _b3, L = kenc.utf8_candidates(a["cp"])
+        tot_ref[0] = jnp.sum(jnp.where(a["starts"] & live, L, 0))
+    else:
+        _b0, _b1, _b2, _b3, L, _err_map = kenc.encode_tile(u, up, un)
+        tot_ref[0] = jnp.sum(jnp.where((L > 0) & live, L, 0))
+
+    if validate:
+        sub = a["err"] & live
+        err_ref[0] = jnp.max(sub.astype(jnp.int32))
+        ferr_ref[0] = jnp.min(jnp.where(sub, gidx, _IMAX))
+    else:
+        err_ref[0] = 0
+        ferr_ref[0] = _IMAX
 
 
-def _write16_kernel(n_ref, base_ref, up_ref, u_ref, un_ref, out_ref):
+def _write16_kernel(n_ref, base_ref, up_ref, u_ref, un_ref, out_ref, *,
+                    errors):
     u = u_ref[...].astype(jnp.int32)
     up = up_ref[...].astype(jnp.int32)
     un = un_ref[...].astype(jnp.int32)
-    b0, b1, b2, b3, L, _err = kenc.encode_tile(u, up, un)
-    live = ((L > 0) & (_gidx(u.shape) < n_ref[0])).reshape(-1)
+    if errors == "replace":
+        a = kenc.analyze_tile(u, up, un)
+        b0, b1, b2, b3, L = kenc.utf8_candidates(a["cp"])
+        live = (a["starts"] & (_gidx(u.shape) < n_ref[0])).reshape(-1)
+    else:
+        b0, b1, b2, b3, L, _err = kenc.encode_tile(u, up, un)
+        live = ((L > 0) & (_gidx(u.shape) < n_ref[0])).reshape(-1)
     eff = jnp.where(live, L.reshape(-1), 0)
     rank, _tot = compaction.tile_exclusive_scan(eff, rows=ROWS)
     # Variable 1-4 byte egress: ``compact_offsets`` semantics, in-tile.
@@ -231,48 +389,57 @@ def _write16_kernel(n_ref, base_ref, up_ref, u_ref, un_ref, out_ref):
     out_ref[pl.ds(base_ref[0], STAGE8)] = stage.astype(jnp.uint8)
 
 
+def _count16_call(um, n, errors, validate, interpret):
+    u3, nblk = _tile(um)
+    n1 = jnp.asarray(n, jnp.int32).reshape(1)
+    kernel = functools.partial(_count16_kernel, errors=errors,
+                               validate=validate)
+    totals, errs, ferrs = pl.pallas_call(
+        kernel,
+        grid=(nblk,),
+        in_specs=[_SCALAR_SPEC, _tile_spec(0), _tile_spec(1), _tile_spec(2)],
+        out_specs=[_PER_TILE_SPEC, _PER_TILE_SPEC, _PER_TILE_SPEC],
+        out_shape=[jax.ShapeDtypeStruct((nblk,), jnp.int32),
+                   jax.ShapeDtypeStruct((nblk,), jnp.int32),
+                   jax.ShapeDtypeStruct((nblk,), jnp.int32)],
+        interpret=interpret,
+    )(n1, u3, u3, u3)
+    return u3, nblk, totals, errs, ferrs
+
+
 @functools.partial(jax.jit, static_argnames=("validate", "interpret",
-                                             "ascii_fastpath", "masked"))
-def _utf16_to_utf8_impl(u, n, validate, interpret, ascii_fastpath, masked):
+                                             "ascii_fastpath", "masked",
+                                             "errors"))
+def _utf16_to_utf8_impl(u, n, validate, interpret, ascii_fastpath, masked,
+                        errors):
     cap_in = u.shape[0]
     cap = 3 * cap_in
     idx = jnp.arange(cap_in)
     um = jnp.where(idx < n, u, 0).astype(jnp.uint16) if masked else u
 
     def general(um):
-        u3, nblk = _tile(um)
+        u3, nblk, totals, errs, ferrs = _count16_call(
+            um, n, errors, validate, interpret)
         n1 = jnp.asarray(n, jnp.int32).reshape(1)
-        spec = lambda off: pl.BlockSpec(
-            (1, ROWS, LANES), lambda i, off=off: (i + off, 0, 0))
-        scalar = pl.BlockSpec((1,), lambda i: (0,))
-        per_tile = pl.BlockSpec((1,), lambda i: (i,))
-        totals, errs = pl.pallas_call(
-            _count16_kernel,
-            grid=(nblk,),
-            in_specs=[scalar, spec(0), spec(1), spec(2)],
-            out_specs=[per_tile, per_tile],
-            out_shape=[jax.ShapeDtypeStruct((nblk,), jnp.int32),
-                       jax.ShapeDtypeStruct((nblk,), jnp.int32)],
-            interpret=interpret,
-        )(n1, u3, u3, u3)
         base, total = compaction.tile_base_offsets(totals)
         outp = pl.pallas_call(
-            _write16_kernel,
+            functools.partial(_write16_kernel, errors=errors),
             grid=(nblk,),
-            in_specs=[scalar, per_tile, spec(0), spec(1), spec(2)],
+            in_specs=[_SCALAR_SPEC, _PER_TILE_SPEC,
+                      _tile_spec(0), _tile_spec(1), _tile_spec(2)],
             out_specs=pl.BlockSpec((nblk * STAGE8,), lambda i: (0,)),
             out_shape=jax.ShapeDtypeStruct((nblk * STAGE8,), jnp.uint8),
             interpret=interpret,
         )(n1, base, u3, u3, u3)
         outp = outp[:cap]
         outp = jnp.where(jnp.arange(cap) < total, outp, 0)
-        err = (jnp.max(errs) > 0) if validate else jnp.bool_(False)
-        return outp, total, err
+        return R.TranscodeResult(outp, total, _status(errs, ferrs, validate))
 
     def ascii(um):
         out = jnp.concatenate(
             [um.astype(jnp.uint8), jnp.zeros((cap - cap_in,), jnp.uint8)])
-        return out, jnp.asarray(n, jnp.int32), jnp.bool_(False)
+        return R.TranscodeResult(out, jnp.asarray(n, jnp.int32),
+                                 jnp.int32(R.STATUS_OK))
 
     if not ascii_fastpath:
         return general(um)
@@ -280,14 +447,18 @@ def _utf16_to_utf8_impl(u, n, validate, interpret, ascii_fastpath, masked):
 
 
 def utf16_to_utf8_fused(u, n_valid=None, *, validate: bool = True,
-                        interpret=None, ascii_fastpath: bool = True):
+                        errors: str = "strict", interpret=None,
+                        ascii_fastpath: bool = True):
     """Fused two-pass UTF-16 -> UTF-8 transcode.
 
-    Returns ``(byte_buffer[uint8, capacity=3*len(u)], count, err)`` —
-    bit-identical in ``buffer[:count]``/``count``/``err`` to the
-    block-parallel strategy, with narrow I/O and no full-capacity int32
-    intermediates.
+    Returns ``TranscodeResult(byte_buffer[uint8, capacity=3*len(u)],
+    count, status)`` — under ``errors="strict"`` bit-identical in
+    ``buffer[:count]``/``count`` to the block-parallel strategy, with
+    ``status`` carrying the unit offset of the first unpaired surrogate
+    (-1 = valid); under ``errors="replace"`` every unpaired half encodes
+    as U+FFFD (EF BF BD), CPython ``errors="replace"`` semantics.
     """
+    _check_errors(errors)
     u = jnp.asarray(u)
     if u.dtype != jnp.uint16:
         u = u.astype(jnp.uint16)
@@ -295,4 +466,30 @@ def utf16_to_utf8_fused(u, n_valid=None, *, validate: bool = True,
     return _utf16_to_utf8_impl(
         u, jnp.asarray(n, jnp.int32), validate,
         runtime.resolve_interpret(interpret), ascii_fastpath,
-        n_valid is not None)
+        n_valid is not None, errors)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "masked"))
+def _utf16_scan_impl(u, n, interpret, masked):
+    cap_in = u.shape[0]
+    idx = jnp.arange(cap_in)
+    um = jnp.where(idx < n, u, 0).astype(jnp.uint16) if masked else u
+    _u3, _nblk, totals, errs, ferrs = _count16_call(
+        um, n, "strict", True, interpret)
+    return jnp.sum(totals), _status(errs, ferrs, True)
+
+
+def utf16_scan_fused(u, n_valid=None, *, interpret=None):
+    """Single-scan UTF-16 validation + UTF-8 length: (count, status).
+
+    One counting-pass read of the units yields the UTF-8 byte length a
+    transcode would produce and a status that is -1 for valid streams,
+    else the unit offset of the first unpaired surrogate half.
+    """
+    u = jnp.asarray(u)
+    if u.dtype != jnp.uint16:
+        u = u.astype(jnp.uint16)
+    n = u.shape[0] if n_valid is None else n_valid
+    return _utf16_scan_impl(u, jnp.asarray(n, jnp.int32),
+                            runtime.resolve_interpret(interpret),
+                            n_valid is not None)

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import utf16 as u16core
 from repro.kernels import runtime
 
 ROWS = 8
@@ -47,6 +48,50 @@ def _shift_right_flat(cur, prev, n):
     c = cur.reshape(-1)
     p = prev.reshape(-1)
     return jnp.concatenate([p[-n:], c[:-n]]).reshape(cur.shape)
+
+
+def utf8_candidates(cp):
+    """Candidate UTF-8 bytes + length for per-lane code points.
+
+    Pure function of ``cp`` (paper Fig. 1 bit layout): returns
+    ``(b0, b1, b2, b3, L)`` where ``L`` in 1..4 is the encoded length.
+    Shared by the strict speculative path and the errors="replace" path
+    (where U+FFFD lanes encode as EF BF BD).
+    """
+    c0 = cp & 0x3F
+    c1 = (cp >> 6) & 0x3F
+    c2 = (cp >> 12) & 0x3F
+    c3 = (cp >> 18) & 0x07
+    L = (
+        1
+        + (cp >= 0x80).astype(jnp.int32)
+        + (cp >= 0x800).astype(jnp.int32)
+        + (cp >= 0x10000).astype(jnp.int32)
+    )
+    z = jnp.zeros_like(cp)
+    b0 = jnp.where(L == 1, cp,
+         jnp.where(L == 2, 0xC0 | (cp >> 6),
+         jnp.where(L == 3, 0xE0 | (cp >> 12), 0xF0 | c3)))
+    b1 = jnp.where(L == 2, 0x80 | c0,
+         jnp.where(L == 3, 0x80 | c1,
+         jnp.where(L == 4, 0x80 | c2, z)))
+    b2 = jnp.where(L == 3, 0x80 | c0,
+         jnp.where(L == 4, 0x80 | c1, z))
+    b3 = jnp.where(L == 4, 0x80 | c0, z)
+    return b0, b1, b2, b3, L
+
+
+def analyze_tile(u, up, un):
+    """Unit analysis of one tile given its neighbour tiles.
+
+    The body is the shared :func:`repro.core.utf16.analyze_units` (one
+    unit of context each way), so the fused pipeline's unpaired-surrogate
+    location and errors="replace" semantics match the pure-jnp reference
+    bit for bit.  Returns the analysis dict (``starts`` / ``valid`` /
+    ``cp`` / ``err``).
+    """
+    return u16core.analyze_units(
+        u, _shift_left_flat(u, un, 1), _shift_right_flat(u, up, 1))
 
 
 def encode_tile(u, up, un):
@@ -73,28 +118,7 @@ def encode_tile(u, up, un):
     cp = jnp.where(is_hi, pair_cp, u)
     is_lead = ~(is_lo & prv_is_hi)
 
-    # Candidate UTF-8 bytes for lengths 1..4 (paper Fig. 1 bit layout).
-    c0 = cp & 0x3F
-    c1 = (cp >> 6) & 0x3F
-    c2 = (cp >> 12) & 0x3F
-    c3 = (cp >> 18) & 0x07
-    L = (
-        1
-        + (cp >= 0x80).astype(jnp.int32)
-        + (cp >= 0x800).astype(jnp.int32)
-        + (cp >= 0x10000).astype(jnp.int32)
-    )
-    z = jnp.zeros_like(cp)
-    b0 = jnp.where(L == 1, cp,
-         jnp.where(L == 2, 0xC0 | (cp >> 6),
-         jnp.where(L == 3, 0xE0 | (cp >> 12), 0xF0 | c3)))
-    b1 = jnp.where(L == 2, 0x80 | c0,
-         jnp.where(L == 3, 0x80 | c1,
-         jnp.where(L == 4, 0x80 | c2, z)))
-    b2 = jnp.where(L == 3, 0x80 | c0,
-         jnp.where(L == 4, 0x80 | c1, z))
-    b3 = jnp.where(L == 4, 0x80 | c0, z)
-
+    b0, b1, b2, b3, L = utf8_candidates(cp)
     L = jnp.where(is_lead, L, 0)
 
     # Fused UTF-16 validation: unpaired surrogate halves.

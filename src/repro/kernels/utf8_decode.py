@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import utf8 as u8mod
 from repro.kernels import runtime
 
 ROWS = 8
@@ -123,6 +124,26 @@ def decode_tile(b, bp, bn):
 
     units = jnp.where(is_lead, 1 + (cp >= 0x10000).astype(jnp.int32), 0)
     return cp, is_lead, units, struct_err | range_err
+
+
+def analyze_tile(b, bp, bn):
+    """Maximal-subpart analysis of one tile given its neighbour tiles.
+
+    Same shift convention as :func:`decode_tile`; the body is the shared
+    :func:`repro.core.utf8.analyze_subparts`, so the fused pipeline's
+    error location and errors="replace" semantics are bit-identical to
+    the pure-jnp block-parallel reference.  Returns the analysis dict
+    (``starts`` / ``valid`` / ``cp`` / ``units`` / ``err``).
+    """
+    return u8mod.analyze_subparts(
+        b,
+        _shift_left_flat(b, bn, 1),
+        _shift_left_flat(b, bn, 2),
+        _shift_left_flat(b, bn, 3),
+        _shift_right_flat(b, bp, 1),
+        _shift_right_flat(b, bp, 2),
+        _shift_right_flat(b, bp, 3),
+    )
 
 
 def tail_lead_err(b, n):

@@ -42,6 +42,40 @@ def _shift_right_flat(cur, prev, n):
     return jnp.concatenate([flat_prev[-n:], flat_cur[:-n]]).reshape(cur.shape)
 
 
+def kl_error_tile(b, bp, byte_1_high, byte_1_low, byte_2_high):
+    """Keiser-Lemire nibble-table error map for one VMEM tile.
+
+    ``b``/``bp`` are the current and previous tiles (int32, identical
+    shape); the three 16-entry nibble tables arrive as VMEM-resident
+    values (Pallas kernels cannot capture traced constants — callers map
+    ``repro.core.tables.BYTE_*`` in with a broadcast BlockSpec, exactly
+    like :func:`utf8_validate_kernel` below).  Returns a bool error map:
+    positions where the three ANDed nibble lookups disagree with the
+    expected-continuation bit (paper §4).  Errors surface at the *second
+    byte* of each bad pair — use
+    :func:`repro.core.utf8.analyze_subparts` when the lead-relative
+    (Python ``exc.start``) position is needed.
+
+    This is the body the fused pipeline's count pass folds in
+    (``repro.kernels.fused_transcode``): since PR 2 the standalone
+    validation kernel below is no longer on the ``strategy="fused"`` hot
+    path — validation rides along with the counting scan, so the input
+    bytes are read exactly once more than the write pass needs.
+    """
+    prev1 = _shift_right_flat(b, bp, 1)
+    prev2 = _shift_right_flat(b, bp, 2)
+    prev3 = _shift_right_flat(b, bp, 3)
+    sc = (
+        jnp.take(byte_1_high, prev1 >> 4)
+        & jnp.take(byte_1_low, prev1 & 0xF)
+        & jnp.take(byte_2_high, b >> 4)
+    )
+    is_third = prev2 >= 0xE0
+    is_fourth = prev3 >= 0xF0
+    must_be_cont = (is_third | is_fourth).astype(jnp.int32) * T.TWO_CONTS
+    return (sc ^ must_be_cont) != 0
+
+
 def utf8_validate_kernel(t1h_ref, t1l_ref, t2h_ref,
                          b_prev_ref, b_cur_ref, err_ref):
     b = b_cur_ref[...].astype(jnp.int32)

@@ -1,10 +1,20 @@
 """Batched serving engine with transcode ingress/egress.
 
-Requests arrive as raw UTF-8 (or UTF-16LE) byte strings.  The engine:
+Requests arrive as raw UTF-8 or UTF-16LE byte strings.  The engine:
 
-  1. **ingress** — validates + tokenizes the prompt bytes through
-     ``repro.core`` (the paper's validation running at the API boundary,
-     exactly its motivating deployment);
+  1. **ingress** — one *single-scan* pass over the prompt through the
+     fused pipeline (the paper's validation running at the API boundary,
+     exactly its motivating deployment).  UTF-8 prompts run the fused
+     counting scan (``scan_utf8``: validation + error location, no write
+     pass, no standalone validate re-read); UTF-16LE prompts run the full
+     fused transcode to UTF-8 whose counting pass carries the same fused
+     validation.  Under ``errors="strict"`` invalid prompts are rejected
+     with the offset of the first bad byte/unit surfaced in
+     ``Result.error_offset``; under ``errors="replace"`` malformed
+     prompts are sanitized (U+FFFD per maximal subpart, CPython
+     semantics) and served at full speed, with the first substitution
+     offset still reported.  Prompts are padded to the engine's static
+     ``max_prompt`` capacity so every request shares one compilation.
   2. batches admitted requests into fixed decode slots (padded prefill,
      per-row cursors), runs the jitted prefill + decode loop;
   3. **egress** — detokenizes to UTF-8 or UTF-16 through the vectorized
@@ -37,6 +47,8 @@ class Request:
     prompt_bytes: bytes
     max_new: int = 32
     out_encoding: str = "utf-8"     # "utf-8" | "utf-16-le"
+    in_encoding: str = "utf-8"      # "utf-8" | "utf-16-le"
+    errors: str = "strict"          # "strict" | "replace"
 
 
 @dataclasses.dataclass
@@ -44,6 +56,14 @@ class Result:
     ok: bool
     text_bytes: bytes = b""
     error: str = ""
+    # Offset of the first invalid element in the prompt (bytes for utf-8,
+    # code units for utf-16-le; Python ``UnicodeDecodeError.start``
+    # semantics), -1 when the prompt was well-formed.  Populated for
+    # strict rejections AND for replace-mode substitutions.
+    error_offset: int = -1
+    # Under errors="replace": the prompt actually served, as UTF-8, with
+    # U+FFFD substituted per maximal subpart (empty otherwise).
+    sanitized_prompt: bytes = b""
 
 
 class Engine:
@@ -62,15 +82,72 @@ class Engine:
 
     # ------------------------------------------------------------------
     def _ingress(self, req: Request):
+        """Single-scan ingress: returns (ids, error, error_offset,
+        sanitized_prompt).  ``ids is None`` means rejection."""
+        if req.errors not in ("strict", "replace"):
+            # Reject per-request rather than raising mid-batch: one bad
+            # field must not take down every other request in the wave.
+            return None, f"unknown errors policy: {req.errors}", -1, b""
         raw = np.frombuffer(req.prompt_bytes, np.uint8)
+        if req.in_encoding == "utf-16-le":
+            return self._ingress_utf16(req, raw)
+        if req.in_encoding != "utf-8":
+            return None, f"unknown in_encoding: {req.in_encoding}", -1, b""
         if len(raw) == 0 or len(raw) > self.max_prompt - 1:
-            return None, "empty or oversize prompt"
-        ok = bool(tc.validate_utf8(jnp.asarray(raw.astype(np.int32)),
-                                   len(raw)))
-        if not ok:
-            return None, "invalid UTF-8 prompt"
-        ids = np.concatenate([[BOS_ID], raw.astype(np.int32) + N_SPECIAL])
-        return ids, ""
+            return None, "empty or oversize prompt", -1, b""
+        # Fixed-capacity buffer: every request shares one compilation.
+        buf = np.zeros(self.max_prompt, np.uint8)
+        buf[: len(raw)] = raw
+        # Both policies start from the fused counting scan alone —
+        # validation + first-error location, no write pass, no separate
+        # validate_utf8 read; clean prompts (the common case) never pay
+        # more than this single scan.
+        _count, status = tc.scan_utf8(jnp.asarray(buf), len(raw))
+        off = int(status)
+        if off < 0:
+            ids = np.concatenate(
+                [[BOS_ID], raw.astype(np.int32) + N_SPECIAL])
+            return ids, "", -1, b""
+        if req.errors != "replace":
+            return None, f"invalid UTF-8 prompt at byte {off}", off, b""
+        # Dirty prompt under replace: sanitize via a fused
+        # replace-transcode to UTF-16, then encode the now-valid units
+        # back to UTF-8 for the byte tokenizer.
+        u16, cu, _status = tc.transcode_utf8_to_utf16(
+            jnp.asarray(buf), len(raw), errors="replace")
+        # The units are valid by construction — skip the re-validation
+        # scan on the way back to bytes.
+        b8, cb, _ = tc.transcode_utf16_to_utf8(u16, cu, validate=False)
+        clean = np.asarray(b8)[: int(cb)].astype(np.uint8)
+        if len(clean) == 0 or len(clean) > self.max_prompt - 1:
+            return None, "empty or oversize prompt after replacement", \
+                off, b""
+        ids = np.concatenate([[BOS_ID], clean.astype(np.int32) + N_SPECIAL])
+        return ids, "", off, bytes(clean)
+
+    def _ingress_utf16(self, req: Request, raw: np.ndarray):
+        if len(raw) % 2:
+            return None, "odd utf-16-le prompt byte length", -1, b""
+        units = raw.view(np.uint16) if raw.size else np.zeros(0, np.uint16)
+        cap_u = self.max_prompt  # unit capacity; output cap is 3x bytes
+        if len(units) == 0 or len(units) > cap_u:
+            return None, "empty or oversize prompt", -1, b""
+        ubuf = np.zeros(cap_u, np.uint16)
+        ubuf[: len(units)] = units
+        # One fused transcode: the counting pass validates + locates, the
+        # write pass produces the UTF-8 the byte tokenizer consumes.
+        out, cnt, status = tc.transcode_utf16_to_utf8(
+            jnp.asarray(ubuf), len(units), errors=req.errors)
+        off = int(status)
+        if req.errors != "replace" and off >= 0:
+            return None, f"invalid UTF-16 prompt at unit {off}", off, b""
+        b8 = np.asarray(out)[: int(cnt)].astype(np.uint8)
+        if len(b8) == 0 or len(b8) > self.max_prompt - 1:
+            return None, "empty or oversize prompt", -1, b""
+        ids = np.concatenate([[BOS_ID], b8.astype(np.int32) + N_SPECIAL])
+        sanitized = bytes(b8) if (req.errors == "replace" and off >= 0) \
+            else b""
+        return ids, "", off, sanitized
 
     def _egress(self, token_ids: np.ndarray, encoding: str) -> bytes:
         byte_vals = token_ids - N_SPECIAL
@@ -82,7 +159,7 @@ class Engine:
             # Pinned to the eager pure-jnp strategy: egress buffers have a
             # new length per response, and the fused Pallas pipeline would
             # recompile per distinct shape.
-            out, count, err = tc.transcode_utf8_to_utf16(
+            out, count, _status = tc.transcode_utf8_to_utf16(
                 b, len(byte_vals), strategy="blockparallel")
             units = np.asarray(out)[: int(count)].astype(np.uint16)
             return units.tobytes()
@@ -93,11 +170,11 @@ class Engine:
         results: List[Optional[Result]] = [None] * len(requests)
         wave: List[tuple] = []
         for i, r in enumerate(requests):
-            ids, err = self._ingress(r)
+            ids, err, off, sanitized = self._ingress(r)
             if ids is None:
-                results[i] = Result(ok=False, error=err)
+                results[i] = Result(ok=False, error=err, error_offset=off)
             else:
-                wave.append((i, r, ids))
+                wave.append((i, r, ids, off, sanitized))
 
         for w0 in range(0, len(wave), self.max_batch):
             chunk = wave[w0: w0 + self.max_batch]
@@ -108,10 +185,10 @@ class Engine:
         b = len(chunk)
         if b == 0:
             return
-        lens = np.array([len(ids) for _, _, ids in chunk], np.int32)
+        lens = np.array([len(ids) for _, _, ids, _, _ in chunk], np.int32)
         s = int(lens.max())
         toks = np.zeros((b, s), np.int32)
-        for j, (_, _, ids) in enumerate(chunk):
+        for j, (_, _, ids, _, _) in enumerate(chunk):
             toks[j, : len(ids)] = ids
 
         state = kvcache.init_state(self.model, self.cfg, b, self._ctx)
@@ -133,8 +210,9 @@ class Engine:
                 self.params, cur[:, None], pos, state, sub)
             pos = pos + 1
 
-        for j, (i, req, ids) in enumerate(chunk):
+        for j, (i, req, ids, off, sanitized) in enumerate(chunk):
             gen = out[j]
             gen = gen[(gen >= 0) & (gen != EOS_ID)]
             results[i] = Result(
-                ok=True, text_bytes=self._egress(gen, req.out_encoding))
+                ok=True, text_bytes=self._egress(gen, req.out_encoding),
+                error_offset=off, sanitized_prompt=sanitized)

@@ -27,8 +27,26 @@ def _utf16(lang, n_chars, seed=0):
 
 
 def _unpack(res):
-    out, cnt, err = res
-    return np.asarray(out)[: int(cnt)], int(cnt), bool(err)
+    out, cnt, status = res
+    return np.asarray(out)[: int(cnt)], int(cnt), int(status)
+
+
+def _py_err_start(raw: bytes):
+    """Python's exc.start for a UTF-8 stream, -1 when valid."""
+    try:
+        raw.decode("utf-8")
+        return -1
+    except UnicodeDecodeError as e:
+        return e.start
+
+
+def _py_err_start16(units: np.ndarray):
+    """Python's exc.start // 2 for a UTF-16LE stream, -1 when valid."""
+    try:
+        units.astype(np.uint16).tobytes().decode("utf-16-le")
+        return -1
+    except UnicodeDecodeError as e:
+        return e.start // 2
 
 
 # ---------------------------------------------------------------------------
@@ -48,7 +66,7 @@ def test_fused_equals_blockparallel_and_windowed_utf8_to_utf16(lang):
     assert got_f[1] == got_b[1] == got_w[1]
     assert np.array_equal(got_f[0], got_b[0])
     assert np.array_equal(got_f[0], got_w[0])
-    assert got_f[2] == got_b[2] == got_w[2] is False
+    assert got_f[2] == got_b[2] == got_w[2] == -1
     # python oracle
     want = np.frombuffer(bytes(b).decode("utf-8").encode("utf-16-le"),
                          np.uint16)
@@ -68,7 +86,7 @@ def test_fused_equals_blockparallel_and_windowed_utf16_to_utf8(lang):
     assert got_f[1] == got_b[1] == got_w[1]
     assert np.array_equal(got_f[0], got_b[0])
     assert np.array_equal(got_f[0], got_w[0])
-    assert got_f[2] == got_b[2] == got_w[2] is False
+    assert got_f[2] == got_b[2] == got_w[2] == -1
     want = np.frombuffer(
         u.tobytes().decode("utf-16-le").encode("utf-8"), np.uint8)
     assert np.array_equal(got_f[0], want)
@@ -90,17 +108,14 @@ def test_fused_equals_blockparallel_on_mutated_streams():
         if trial % 3:  # two thirds of cases: corrupt 1-3 random bytes
             k = rng.integers(1, 4)
             buf[rng.integers(0, max(n, 1), k)] = rng.integers(0, 256, k)
-        try:
-            bytes(buf[:n]).decode("utf-8")
-            valid = True
-        except UnicodeDecodeError:
-            valid = False
+        want_pos = _py_err_start(bytes(buf[:n]))
         got_f = _unpack(ft.utf8_to_utf16_fused(jnp.asarray(buf), n))
         got_b = _unpack(tc.utf8_to_utf16(
             jnp.asarray(buf.astype(np.int32)), n))
         assert got_f[1] == got_b[1], trial
         assert np.array_equal(got_f[0], got_b[0]), trial
-        assert got_f[2] == got_b[2] == (not valid), trial
+        # single-scan status: fused == blockparallel == Python exc.start
+        assert got_f[2] == got_b[2] == want_pos, trial
 
 
 def test_fused_equals_blockparallel_on_mutated_utf16_streams():
@@ -116,17 +131,13 @@ def test_fused_equals_blockparallel_on_mutated_utf16_streams():
             k = rng.integers(1, 3)
             buf[rng.integers(0, max(n, 1), k)] = \
                 rng.integers(0, 1 << 16, k)
-        try:
-            buf[:n].tobytes().decode("utf-16-le")
-            valid = True
-        except UnicodeDecodeError:
-            valid = False
+        want_pos = _py_err_start16(buf[:n])
         got_f = _unpack(ft.utf16_to_utf8_fused(jnp.asarray(buf), n))
         got_b = _unpack(tc.utf16_to_utf8(
             jnp.asarray(buf.astype(np.int32)), n))
         assert got_f[1] == got_b[1], trial
         assert np.array_equal(got_f[0], got_b[0]), trial
-        assert got_f[2] == got_b[2] == (not valid), trial
+        assert got_f[2] == got_b[2] == want_pos, trial
 
 
 # ---------------------------------------------------------------------------
@@ -144,7 +155,7 @@ def test_fused_speculative_worst_case_stage_width():
                                      len(b)))
     assert got_f[1] == got_b[1]
     assert np.array_equal(got_f[0], got_b[0])
-    assert got_f[2] and got_b[2]
+    assert got_f[2] == got_b[2] == 0  # invalid from the first byte
     # UTF-16 side: every unit a speculative 3-byte lane (valid stream of
     # U+E000) exactly fills the 3*BLOCK stage.
     u = np.full(2048, 0xE000, np.uint16)
@@ -167,7 +178,7 @@ def test_fused_speculative_worst_case_stage_width():
     assert got_f[1] == got_b[1] == len(want)
     assert np.array_equal(got_f[0], want)
     assert np.array_equal(got_b[0], want)
-    assert not got_f[2] and not got_b[2]
+    assert got_f[2] == got_b[2] == -1
     # and the unpaired-high-surrogate flood (mixed 3-byte/4-byte lanes)
     u = np.full(2048, 0xD800, np.uint16)
     got_f = _unpack(ft.utf16_to_utf8_fused(jnp.asarray(u), len(u)))
@@ -175,48 +186,48 @@ def test_fused_speculative_worst_case_stage_width():
                                      len(u)))
     assert got_f[1] == got_b[1]
     assert np.array_equal(got_f[0], got_b[0])
-    assert got_f[2] and got_b[2]
+    assert got_f[2] == got_b[2] == 0
 
 
 def test_fused_zero_length():
-    out, cnt, err = ft.utf8_to_utf16_fused(jnp.zeros((0,), jnp.uint8), 0)
-    assert out.shape == (0,) and int(cnt) == 0 and not bool(err)
-    out, cnt, err = ft.utf16_to_utf8_fused(jnp.zeros((0,), jnp.uint16), 0)
-    assert out.shape == (0,) and int(cnt) == 0 and not bool(err)
+    out, cnt, status = ft.utf8_to_utf16_fused(jnp.zeros((0,), jnp.uint8), 0)
+    assert out.shape == (0,) and int(cnt) == 0 and int(status) == -1
+    out, cnt, status = ft.utf16_to_utf8_fused(jnp.zeros((0,), jnp.uint16), 0)
+    assert out.shape == (0,) and int(cnt) == 0 and int(status) == -1
 
 
 def test_fused_n_valid_zero():
     b = jnp.asarray(np.full(64, 0xFF, np.uint8))  # garbage beyond n
-    out, cnt, err = ft.utf8_to_utf16_fused(b, 0)
-    assert int(cnt) == 0 and not bool(err)
+    out, cnt, status = ft.utf8_to_utf16_fused(b, 0)
+    assert int(cnt) == 0 and int(status) == -1
 
 
 def test_fused_tile_aligned_trailing_truncation():
     b = np.full(2048, 0x41, np.uint8)
     b[-1] = 0xC3  # lead byte truncated exactly at a tile boundary
-    _, _, err = ft.utf8_to_utf16_fused(jnp.asarray(b), 2048)
-    assert bool(err)
+    _, _, status = ft.utf8_to_utf16_fused(jnp.asarray(b), 2048)
+    assert int(status) == 2047  # located at the truncated lead
     u = np.full(1024, 0x41, np.uint16)
     u[-1] = 0xD800  # lone high surrogate at the tile boundary
-    _, _, err = ft.utf16_to_utf8_fused(jnp.asarray(u), 1024)
-    assert bool(err)
+    _, _, status = ft.utf16_to_utf8_fused(jnp.asarray(u), 1024)
+    assert int(status) == 1023
 
 
 def test_fused_cross_tile_characters():
     s = "A" * 1022 + "🎉" + "B" * 100  # 4-byte char straddles the boundary
     b = np.frombuffer(s.encode("utf-8"), np.uint8)
-    out, cnt, err = ft.utf8_to_utf16_fused(jnp.asarray(b), len(b))
+    out, cnt, status = ft.utf8_to_utf16_fused(jnp.asarray(b), len(b))
     want = np.frombuffer(s.encode("utf-16-le"), np.uint16)
-    assert not bool(err)
+    assert int(status) == -1
     assert np.array_equal(np.asarray(out)[: int(cnt)], want)
 
     u = np.full(2048, 0x41, np.int32)
     u[1023], u[1024] = 0xD83C, 0xDF89  # pair straddles the boundary
-    out, cnt, err = ft.utf16_to_utf8_fused(jnp.asarray(u), 2048)
+    out, cnt, status = ft.utf16_to_utf8_fused(jnp.asarray(u), 2048)
     want = np.frombuffer(
         u.astype(np.uint16).tobytes().decode("utf-16-le").encode("utf-8"),
         np.uint8)
-    assert not bool(err)
+    assert int(status) == -1
     assert np.array_equal(np.asarray(out)[: int(cnt)], want)
 
 
@@ -319,6 +330,202 @@ def test_blockparallel_kernel_path_is_the_contrast():
 
 
 # ---------------------------------------------------------------------------
+# Validation fusion (acceptance): strategy="fused" with validation makes
+# exactly ONE scan over the input bytes per pass — no standalone validate
+# read — and the first_error_index matches Python's bytes.decode position.
+
+
+def test_fused_validation_is_single_scan_jaxpr():
+    """Validation must ride along with the count pass: turning validate on
+    adds NO kernel launch and NO out-of-kernel read of the input bytes
+    (the old standalone validate_kl pass showed up as full-capacity
+    gathers outside pallas)."""
+    cap = 4096
+    b = jnp.zeros((cap,), jnp.uint8)
+    jaxprs = {}
+    for validate in (True, False):
+        jaxprs[validate] = jax.make_jaxpr(
+            lambda x, v=validate: ft.utf8_to_utf16_fused(
+                x, cap - 5, validate=v, ascii_fastpath=False))(b).jaxpr
+    for validate, jaxpr in jaxprs.items():
+        kernels = _pallas_eqns(jaxpr)
+        # count pass + write pass, nothing else — validation adds no scan.
+        assert len(kernels) == 2, (validate, len(kernels))
+        # No out-of-kernel gather touches a capacity-sized operand (the
+        # nibble tables are 16-entry VMEM-resident kernel inputs).
+        for eqn in _iter_eqns(jaxpr):
+            if "gather" in eqn.primitive.name:
+                assert all(v.aval.size < cap for v in eqn.invars), \
+                    (validate, eqn)
+
+
+def test_fused_scan_is_count_pass_only():
+    """scan_utf8/scan_utf16: validation + capacity in ONE pallas call."""
+    cap = 2048
+    jaxpr = jax.make_jaxpr(
+        lambda x: ft.utf8_scan_fused(x, cap - 3))(
+            jnp.zeros((cap,), jnp.uint8)).jaxpr
+    assert len(_pallas_eqns(jaxpr)) == 1
+    jaxpr16 = jax.make_jaxpr(
+        lambda x: ft.utf16_scan_fused(x, cap - 3))(
+            jnp.zeros((cap,), jnp.uint16)).jaxpr
+    assert len(_pallas_eqns(jaxpr16)) == 1
+
+
+def test_first_error_index_matches_python_on_fuzzed_corpus():
+    """Acceptance: status == Python UnicodeDecodeError.start across a
+    fuzzed corpus (valid, mutated, and adversarial-alphabet streams)."""
+    rng = np.random.default_rng(42)
+    fixed = 1536
+    adversarial = np.array([0x41, 0x80, 0x9F, 0xA0, 0xBF, 0xC0, 0xC2,
+                            0xE0, 0xED, 0xEE, 0xF0, 0xF4, 0xF5, 0xFF,
+                            0x90, 0x8F], np.uint8)
+    for trial in range(30):
+        buf = np.zeros(fixed, np.uint8)
+        if trial % 3 == 0:
+            b = _utf8(["emoji", "chinese", "hebrew"][(trial // 3) % 3], 400,
+                      seed=trial)[:fixed]
+            buf[: len(b)] = b
+            n = len(b)
+            k = rng.integers(0, 4)
+            if k:
+                buf[rng.integers(0, n, k)] = rng.integers(0, 256, k)
+        elif trial % 3 == 1:
+            n = int(rng.integers(1, fixed))
+            buf[:n] = rng.integers(0, 256, n)
+        else:
+            n = int(rng.integers(1, 64))
+            buf[:n] = rng.choice(adversarial, n)
+        want = _py_err_start(bytes(buf[:n]))
+        _, _, status = ft.utf8_to_utf16_fused(jnp.asarray(buf), n)
+        assert int(status) == want, (trial, bytes(buf[:n])[:20])
+        count, sstatus = ft.utf8_scan_fused(jnp.asarray(buf), n)
+        assert int(sstatus) == want, trial
+        bcount, bstatus = tc.scan_utf8(jnp.asarray(buf), n,
+                                       strategy="blockparallel")
+        assert int(sstatus) == int(bstatus) and int(count) == int(bcount)
+
+
+def test_utf16_scan_status_matches_python():
+    rng = np.random.default_rng(17)
+    fixed = 1024
+    for trial in range(12):
+        buf = np.zeros(fixed, np.uint16)
+        n = int(rng.integers(1, fixed))
+        buf[:n] = rng.integers(0, 1 << 16, n)
+        try:
+            buf[:n].tobytes().decode("utf-16-le")
+            want = -1
+        except UnicodeDecodeError as e:
+            want = e.start // 2
+        count, status = ft.utf16_scan_fused(jnp.asarray(buf), n)
+        assert int(status) == want, trial
+        bcount, bstatus = tc.scan_utf16(jnp.asarray(buf), n,
+                                        strategy="blockparallel")
+        assert int(status) == int(bstatus) and int(count) == int(bcount)
+
+
+# ---------------------------------------------------------------------------
+# errors="replace": U+FFFD per maximal subpart, CPython semantics
+
+
+def test_fused_replace_matches_python_utf8():
+    rng = np.random.default_rng(5)
+    fixed = 1536
+    for trial in range(20):
+        buf = np.zeros(fixed, np.uint8)
+        if trial % 2:
+            b = _utf8(["latin", "emoji", "arabic", "korean"][trial % 4],
+                      400, seed=trial)[:fixed]
+            buf[: len(b)] = b
+            n = len(b)
+            k = rng.integers(1, 5)
+            buf[rng.integers(0, n, k)] = rng.integers(0, 256, k)
+        else:
+            n = int(rng.integers(1, fixed))
+            buf[:n] = rng.integers(0, 256, n)
+        want = np.frombuffer(
+            bytes(buf[:n]).decode("utf-8", "replace").encode("utf-16-le"),
+            np.uint16)
+        got_f = _unpack(ft.utf8_to_utf16_fused(jnp.asarray(buf), n,
+                                               errors="replace"))
+        got_b = _unpack(tc.utf8_to_utf16(jnp.asarray(buf.astype(np.int32)),
+                                         n, errors="replace"))
+        assert np.array_equal(got_f[0], want), trial
+        assert got_f[1] == got_b[1] == len(want), trial
+        assert np.array_equal(got_b[0], want), trial
+        assert got_f[2] == got_b[2] == _py_err_start(bytes(buf[:n])), trial
+
+
+def test_fused_replace_matches_python_utf16():
+    rng = np.random.default_rng(23)
+    fixed = 1280
+    for trial in range(16):
+        buf = np.zeros(fixed, np.uint16)
+        if trial % 2:
+            u = _utf16(["latin", "emoji"][trial % 2], 400, seed=trial)[:fixed]
+            buf[: len(u)] = u
+            n = len(u)
+            k = rng.integers(1, 4)
+            # surrogate-heavy corruption: the interesting class here
+            buf[rng.integers(0, n, k)] = rng.integers(0xD800, 0xE000, k)
+        else:
+            n = int(rng.integers(1, fixed))
+            buf[:n] = rng.integers(0, 1 << 16, n)
+        want = np.frombuffer(
+            buf[:n].tobytes().decode("utf-16-le", "replace").encode("utf-8"),
+            np.uint8)
+        got_f = _unpack(ft.utf16_to_utf8_fused(jnp.asarray(buf), n,
+                                               errors="replace"))
+        got_b = _unpack(tc.utf16_to_utf8(jnp.asarray(buf.astype(np.int32)),
+                                         n, errors="replace"))
+        assert np.array_equal(got_f[0], want), trial
+        assert got_f[1] == got_b[1] == len(want), trial
+        assert np.array_equal(got_b[0], want), trial
+        assert got_f[2] == got_b[2] == _py_err_start16(buf[:n]), trial
+
+
+def test_error_location_and_replace_across_tile_boundary():
+    """Maximal subparts straddling the 1024-byte tile boundary: the
+    claimed-byte chain reads the previous tile, the continuation checks
+    read the next — both must agree with Python at every offset."""
+    probes = [b"\xf0\x9f\x92", b"\xe4\xb8", b"\xc3", b"\x80\x80",
+              b"\xed\xa0\x80", b"\xf4\x90\x80\x80"]
+    for probe in probes:
+        for pos in (1019, 1021, 1022, 1023, 1024, 1025):
+            buf = np.full(2048, 0x41, np.uint8)
+            buf[pos: pos + len(probe)] = np.frombuffer(probe, np.uint8)
+            raw = bytes(buf)
+            _, _, status = ft.utf8_to_utf16_fused(jnp.asarray(buf), 2048)
+            assert int(status) == _py_err_start(raw), (probe, pos)
+            got = _unpack(ft.utf8_to_utf16_fused(jnp.asarray(buf), 2048,
+                                                 errors="replace"))
+            want = np.frombuffer(
+                raw.decode("utf-8", "replace").encode("utf-16-le"),
+                np.uint16)
+            assert np.array_equal(got[0], want), (probe, pos)
+
+
+def test_replace_on_valid_input_equals_strict():
+    b = _utf8("japanese", 800, seed=9)
+    n = len(b)
+    strict = _unpack(ft.utf8_to_utf16_fused(jnp.asarray(b), n))
+    rep = _unpack(ft.utf8_to_utf16_fused(jnp.asarray(b), n,
+                                         errors="replace"))
+    assert strict[1] == rep[1] and strict[2] == rep[2] == -1
+    assert np.array_equal(strict[0], rep[0])
+
+
+def test_unknown_errors_policy_rejected():
+    b = jnp.zeros((8,), jnp.uint8)
+    with pytest.raises(ValueError):
+        ft.utf8_to_utf16_fused(b, 8, errors="ignore")
+    with pytest.raises(ValueError):
+        tc.transcode_utf8_to_utf16(b, 8, strategy="windowed",
+                                   errors="replace")
+
+
+# ---------------------------------------------------------------------------
 # Batched entry + interpret auto-detection
 
 
@@ -332,11 +539,11 @@ def test_batched_entry_matches_per_doc():
         docs[i, : len(d)] = d
         lens.append(len(d))
     lens = np.asarray(lens, np.int32)
-    out, cnt, err = pipeline.batch_utf8_to_utf16(docs, lens)
+    out, cnt, status = pipeline.batch_utf8_to_utf16(docs, lens)
     assert out.shape == (3, L)
     for i in range(3):
-        o, c, e = ft.utf8_to_utf16_fused(jnp.asarray(docs[i]), int(lens[i]))
-        assert int(cnt[i]) == int(c) and bool(err[i]) == bool(e)
+        o, c, s = ft.utf8_to_utf16_fused(jnp.asarray(docs[i]), int(lens[i]))
+        assert int(cnt[i]) == int(c) and int(status[i]) == int(s)
         assert np.array_equal(np.asarray(out[i])[: int(c)],
                               np.asarray(o)[: int(c)])
 
@@ -346,11 +553,11 @@ def test_batched_entry_matches_per_doc():
         d = _utf16(lang, 300, seed=i)[:1024]
         units[i, : len(d)] = d
         ulens.append(len(d))
-    out, cnt, err = pipeline.batch_utf16_to_utf8(units, np.asarray(ulens))
+    out, cnt, status = pipeline.batch_utf16_to_utf8(units, np.asarray(ulens))
     assert out.shape == (2, 3 * 1024)
     for i in range(2):
-        o, c, e = ft.utf16_to_utf8_fused(jnp.asarray(units[i]), ulens[i])
-        assert int(cnt[i]) == int(c) and bool(err[i]) == bool(e)
+        o, c, s = ft.utf16_to_utf8_fused(jnp.asarray(units[i]), ulens[i])
+        assert int(cnt[i]) == int(c) and int(status[i]) == int(s)
         assert np.array_equal(np.asarray(out[i])[: int(c)],
                               np.asarray(o)[: int(c)])
 

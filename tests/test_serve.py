@@ -27,6 +27,76 @@ def test_valid_prompts_served(engine):
 def test_invalid_utf8_rejected(engine):
     res = engine.serve([Request(b"\xff\xfe bad \x80")])
     assert not res[0].ok and "invalid" in res[0].error
+    assert res[0].error_offset == 0  # 0xFF is the first bad byte
+
+
+def test_truncated_multibyte_strict_reports_offset(engine):
+    """errors='strict' (default): truncated sequences reject with the
+    first-error offset, matching Python's UnicodeDecodeError.start."""
+    for prompt in [b"hi \xe4\xb8", b"abc\xc3", b"xy\xf0\x9f\x98"]:
+        try:
+            prompt.decode("utf-8")
+            raise AssertionError("expected invalid prompt")
+        except UnicodeDecodeError as e:
+            want = e.start
+        res = engine.serve([Request(prompt)])[0]
+        assert not res.ok and "invalid" in res.error
+        assert res.error_offset == want, (prompt, res.error_offset, want)
+
+
+def test_truncated_multibyte_replace_served(engine):
+    """errors='replace': malformed prompts are sanitized (U+FFFD per
+    maximal subpart) and served, with the substitution offset surfaced."""
+    prompt = b"hi \xe4\xb8 there"
+    res = engine.serve([Request(prompt, errors="replace")])[0]
+    assert res.ok
+    assert res.error_offset == 3
+    assert res.sanitized_prompt == prompt.decode(
+        "utf-8", "replace").encode("utf-8")
+    assert b"\xef\xbf\xbd" in res.sanitized_prompt  # U+FFFD in output
+    # A clean prompt under replace carries no substitution report.
+    res = engine.serve([Request(b"clean", errors="replace")])[0]
+    assert res.ok and res.error_offset == -1 and res.sanitized_prompt == b""
+
+
+def test_lone_surrogate_utf16_strict_reports_offset(engine):
+    units = np.array([0x41, 0xD800, 0x42], np.uint16)  # A, lone hi, B
+    res = engine.serve([Request(units.tobytes(),
+                                in_encoding="utf-16-le")])[0]
+    assert not res.ok and "invalid" in res.error
+    assert res.error_offset == 1  # unit offset, exc.start // 2
+    # trailing lone surrogate (truncated pair)
+    units = np.array([0x41, 0xD83C], np.uint16)
+    res = engine.serve([Request(units.tobytes(),
+                                in_encoding="utf-16-le")])[0]
+    assert not res.ok and res.error_offset == 1
+
+
+def test_lone_surrogate_utf16_replace_served(engine):
+    units = np.array([0x41, 0xDC00, 0x42], np.uint16)  # lone low half
+    res = engine.serve([Request(units.tobytes(), in_encoding="utf-16-le",
+                                errors="replace")])[0]
+    assert res.ok
+    assert res.error_offset == 1
+    want = units.tobytes().decode("utf-16-le", "replace").encode("utf-8")
+    assert res.sanitized_prompt == want
+    assert b"\xef\xbf\xbd" in res.sanitized_prompt
+
+
+def test_valid_utf16_prompt_equals_utf8_prompt(engine):
+    """A valid UTF-16LE prompt tokenizes identically to its UTF-8 twin
+    (the fused transcode is the ingress tokenizer's source)."""
+    s = "hé🎉"
+    r8 = engine.serve([Request(s.encode("utf-8"))])[0]
+    r16 = engine.serve([Request(s.encode("utf-16-le"),
+                                in_encoding="utf-16-le")])[0]
+    assert r8.ok and r16.ok
+    assert r8.text_bytes == r16.text_bytes
+
+
+def test_odd_utf16_byte_length_rejected(engine):
+    res = engine.serve([Request(b"\x41\x00\x42", in_encoding="utf-16-le")])[0]
+    assert not res.ok and "odd" in res.error
 
 
 def test_oversize_rejected(engine):

@@ -41,9 +41,9 @@ def _pad(a, n=8):
 @given(text, st.sampled_from(["blockparallel", "windowed"]))
 def test_utf8_to_utf16_matches_python(s, strategy):
     b, u = _u8(s), _u16(s)
-    out, cnt, err = tc.transcode_utf8_to_utf16(
+    out, cnt, status = tc.transcode_utf8_to_utf16(
         jnp.asarray(_pad(b)), len(b), strategy=strategy)
-    assert not bool(err), s
+    assert int(status) == -1, s
     got = np.asarray(out)[: int(cnt)]
     assert np.array_equal(got, u), (s, got[:10], u[:10])
 
@@ -52,9 +52,9 @@ def test_utf8_to_utf16_matches_python(s, strategy):
 @given(text, st.sampled_from(["blockparallel", "windowed"]))
 def test_utf16_to_utf8_matches_python(s, strategy):
     b, u = _u8(s), _u16(s)
-    out, cnt, err = tc.transcode_utf16_to_utf8(
+    out, cnt, status = tc.transcode_utf16_to_utf8(
         jnp.asarray(_pad(u)), len(u), strategy=strategy)
-    assert not bool(err), s
+    assert int(status) == -1, s
     got = np.asarray(out)[: int(cnt)]
     assert np.array_equal(got, b), s
 
@@ -64,12 +64,12 @@ def test_utf16_to_utf8_matches_python(s, strategy):
 def test_utf8_to_utf32_roundtrip(s):
     b = _u8(s)
     cps = np.array([ord(c) for c in s], np.int32)
-    out, cnt, err = tc.utf8_to_utf32(jnp.asarray(_pad(b)), len(b))
-    assert not bool(err)
+    out, cnt, status = tc.utf8_to_utf32(jnp.asarray(_pad(b)), len(b))
+    assert int(status) == -1
     assert np.array_equal(np.asarray(out)[: int(cnt)], cps)
     # egress back to utf-8
-    out8, cnt8, err8 = tc.utf32_to_utf8(jnp.asarray(_pad(cps)), len(cps))
-    assert not bool(err8)
+    out8, cnt8, status8 = tc.utf32_to_utf8(jnp.asarray(_pad(cps)), len(cps))
+    assert int(status8) == -1
     assert np.array_equal(np.asarray(out8)[: int(cnt8)], b)
 
 
@@ -90,14 +90,55 @@ def test_validation_agrees_with_python(raw):
 @settings(**SETTINGS)
 @given(st.binary(max_size=48))
 def test_invalid_bytes_flagged_by_transcoder(raw):
+    """Arbitrary bytes: status == Python's UnicodeDecodeError.start."""
     try:
         raw.decode("utf-8")
-        valid = True
-    except UnicodeDecodeError:
-        valid = False
+        want = -1
+    except UnicodeDecodeError as e:
+        want = e.start
     b = _pad(np.frombuffer(raw, np.uint8).astype(np.int32))
-    _, _, err = tc.utf8_to_utf16(jnp.asarray(b), len(raw))
-    assert bool(err) == (not valid), raw
+    _, _, status = tc.utf8_to_utf16(jnp.asarray(b), len(raw))
+    assert int(status) == want, raw
+
+
+@settings(**SETTINGS)
+@given(st.binary(max_size=48))
+def test_replace_matches_python_utf8(raw):
+    """Arbitrary bytes: errors='replace' output == Python's, byte-exact,
+    and the fused single-scan status equals the blockparallel one."""
+    want = np.frombuffer(
+        raw.decode("utf-8", "replace").encode("utf-16-le"), np.uint16)
+    cap = 128  # fixed capacity: all examples share one compilation
+    buf = np.zeros(cap, np.uint8)
+    buf[: len(raw)] = np.frombuffer(raw, np.uint8)
+    out, cnt, status = tc.utf8_to_utf16(
+        jnp.asarray(buf.astype(np.int32)), len(raw), errors="replace")
+    got = np.asarray(out)[: int(cnt)].astype(np.uint16)
+    assert np.array_equal(got, want), raw
+    fout, fcnt, fstatus = tc.transcode_utf8_to_utf16(
+        jnp.asarray(buf), len(raw), strategy="fused", errors="replace")
+    assert int(fcnt) == int(cnt) and int(fstatus) == int(status), raw
+    assert np.array_equal(np.asarray(fout)[: int(fcnt)], got), raw
+
+
+@settings(**SETTINGS)
+@given(st.lists(st.integers(0, 0xFFFF), max_size=40))
+def test_replace_matches_python_utf16(units):
+    raw = np.array(units, np.uint16)
+    want = np.frombuffer(
+        raw.tobytes().decode("utf-16-le", "replace").encode("utf-8"),
+        np.uint8)
+    cap = 64
+    buf = np.zeros(cap, np.uint16)
+    buf[: len(units)] = raw
+    out, cnt, status = tc.utf16_to_utf8(
+        jnp.asarray(buf.astype(np.int32)), len(units), errors="replace")
+    got = np.asarray(out)[: int(cnt)].astype(np.uint8)
+    assert np.array_equal(got, want), units
+    fout, fcnt, fstatus = tc.transcode_utf16_to_utf8(
+        jnp.asarray(buf), len(units), strategy="fused", errors="replace")
+    assert int(fcnt) == int(cnt) and int(fstatus) == int(status), units
+    assert np.array_equal(np.asarray(fout)[: int(fcnt)], got), units
 
 
 @settings(**SETTINGS)

@@ -12,8 +12,14 @@ def _check_invalid(raw: bytes):
     b = np.zeros(max(len(raw), 8), np.int32)
     b[: len(raw)] = np.frombuffer(raw, np.uint8)
     assert not bool(tc.validate_utf8(jnp.asarray(b), len(raw))), raw
-    _, _, err = tc.utf8_to_utf16(jnp.asarray(b), len(raw))
-    assert bool(err), raw
+    _, _, status = tc.utf8_to_utf16(jnp.asarray(b), len(raw))
+    assert int(status) >= 0, raw
+    # The located offset must agree with Python's exc.start.
+    try:
+        raw.decode("utf-8")
+        raise AssertionError(f"python accepted {raw!r}")
+    except UnicodeDecodeError as e:
+        assert int(status) == e.start, (raw, int(status), e.start)
 
 
 def _check_valid(raw: bytes):
@@ -82,10 +88,12 @@ def test_surrogate_pair_transcoding():
     b = np.frombuffer(s.encode("utf-8"), np.uint8).astype(np.int32)
     u = np.frombuffer(s.encode("utf-16-le"), np.uint16).astype(np.int32)
     assert list(u) == [0xD83C, 0xDF89]
-    out, cnt, err = tc.utf8_to_utf16(jnp.asarray(b), len(b))
-    assert not bool(err) and np.array_equal(np.asarray(out)[: int(cnt)], u)
-    out, cnt, err = tc.utf16_to_utf8(jnp.asarray(u), len(u))
-    assert not bool(err) and np.array_equal(np.asarray(out)[: int(cnt)], b)
+    out, cnt, status = tc.utf8_to_utf16(jnp.asarray(b), len(b))
+    assert int(status) == -1
+    assert np.array_equal(np.asarray(out)[: int(cnt)], u)
+    out, cnt, status = tc.utf16_to_utf8(jnp.asarray(u), len(u))
+    assert int(status) == -1
+    assert np.array_equal(np.asarray(out)[: int(cnt)], b)
 
 
 def test_unpaired_surrogates_utf16():
@@ -94,18 +102,62 @@ def test_unpaired_surrogates_utf16():
         u = np.zeros(8, np.int32)
         u[: len(units)] = units
         assert not bool(tc.validate_utf16(jnp.asarray(u), len(units))), units
-        _, _, err = tc.utf16_to_utf8(jnp.asarray(u), len(units))
-        assert bool(err), units
+        _, _, status = tc.utf16_to_utf8(jnp.asarray(u), len(units))
+        try:
+            np.array(units, np.uint16).tobytes().decode("utf-16-le")
+            raise AssertionError(f"python accepted {units}")
+        except UnicodeDecodeError as e:
+            assert int(status) == e.start // 2, (units, int(status))
 
 
 def test_ascii_fast_path_equivalence():
     s = ("the quick brown fox " * 20).encode()
     b = jnp.asarray(np.frombuffer(s, np.uint8).astype(np.int32))
     for fast in (True, False):
-        out, cnt, err = tc.utf8_to_utf16(b, len(s), ascii_fastpath=fast)
-        assert int(cnt) == len(s) and not bool(err)
+        out, cnt, status = tc.utf8_to_utf16(b, len(s), ascii_fastpath=fast)
+        assert int(cnt) == len(s) and int(status) == -1
         assert np.array_equal(np.asarray(out)[: len(s)],
                               np.frombuffer(s, np.uint8))
+
+
+def test_utf32_egress_status_and_replace():
+    cps = np.array([0x41, 0xD800, 0x1F389, 0x110000, 0x42], np.int32)
+    out, cnt, status = tc.utf32_to_utf8(jnp.asarray(cps), len(cps))
+    assert int(status) == 1  # first bad code point (surrogate)
+    out, cnt, status = tc.utf32_to_utf8(jnp.asarray(cps), len(cps),
+                                        errors="replace")
+    assert int(status) == 1
+    want = "A�🎉�B".encode("utf-8")
+    assert bytes(np.asarray(out)[: int(cnt)].astype(np.uint8)) == want
+    out, cnt, status = tc.utf32_to_utf16(jnp.asarray(cps), len(cps),
+                                         errors="replace")
+    assert int(status) == 1
+    want16 = np.frombuffer("A�🎉�B".encode("utf-16-le"), np.uint16)
+    assert np.array_equal(np.asarray(out)[: int(cnt)].astype(np.uint16),
+                          want16)
+    clean = np.array([0x41, 0x1F389], np.int32)
+    _, _, status = tc.utf32_to_utf16(jnp.asarray(clean), len(clean))
+    assert int(status) == -1
+
+
+def test_utf8_to_utf32_replace():
+    raw = b"A\xc3A\xf0\x9f\x92\x96"
+    b = np.frombuffer(raw, np.uint8).astype(np.int32)
+    out, cnt, status = tc.utf8_to_utf32(jnp.asarray(b), len(b),
+                                        errors="replace")
+    want = [ord(c) for c in raw.decode("utf-8", "replace")]
+    assert list(np.asarray(out)[: int(cnt)]) == want
+    assert int(status) == 1
+
+
+def test_utf16_to_utf32_replace():
+    units = np.array([0x41, 0xDC00, 0xD83C, 0xDF89], np.int32)
+    out, cnt, status = tc.utf16_to_utf32(jnp.asarray(units), len(units),
+                                         errors="replace")
+    want = [ord(c) for c in np.asarray(units, np.uint16).tobytes().decode(
+        "utf-16-le", "replace")]
+    assert list(np.asarray(out)[: int(cnt)]) == want
+    assert int(status) == 1
 
 
 def test_utf16le_byte_helpers():
