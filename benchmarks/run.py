@@ -74,6 +74,12 @@ def main(argv=None) -> None:
                       "(Gchars/s)", tr)
         report["records"] += _records("table_replace", tr)
 
+        trg = tb.table_ragged(batch_sizes=(8, 64),
+                              n_chars=1 << 10 if quick else 1 << 11)
+        tb.print_rows("Ragged batch: packed vs padded-vmap UTF-8 -> UTF-16 "
+                      "(Gchars/s, batch x skew)", trg)
+        report["records"] += _records("table_ragged", trg)
+
         tb.print_rows("Table 8 proxy: ops per input byte", tb.table8_proxy())
         fig7 = tb.fig7(sizes=(64, 1024, 16384) if quick
                        else (64, 256, 1024, 4096, 16384, 65536))

@@ -180,6 +180,64 @@ def table_replace(langs=("latin", "arabic", "emoji"), n_chars=N_CHARS,
     return rows
 
 
+def table_ragged(batch_sizes=(8, 64), n_chars=2048, reps=6):
+    """Beyond-paper: ragged packed batches vs padded vmap.
+
+    A batch of B documents transcodes either as ONE Pallas launch over a
+    tile-aligned packed stream (``strategy="packed"``: per-document
+    bookkeeping is per-tile scalars, no padding tiles scanned) or as a
+    ``vmap`` of the single-document fused pipeline over a padded [B, L]
+    buffer (the reference): every document pays all of L.  Two length
+    mixes per batch size: ``uniform`` (every document the same length —
+    vmap's best case) and ``skewed`` (one long document per 8, the rest
+    1/8th of its length — the serving-traffic shape, where padding
+    dominates the vmap cost).  Speeds are total gigacharacters of the
+    batch per second.
+    """
+    from repro.core import packing
+    from repro.data import pipeline
+
+    langs = ["latin", "arabic", "chinese", "emoji"]
+    rows = []
+    for b in batch_sizes:
+        for skew, length_of in (
+                ("uniform", lambda i: n_chars),
+                ("skewed", lambda i: n_chars if i % 8 == 0
+                 else max(n_chars // 8, 64))):
+            docs = [synthetic.utf8_array(langs[i % 4], length_of(i), seed=i)
+                    for i in range(b)]
+            nch = sum(length_of(i) for i in range(b))
+
+            pk = packing.pack_documents(docs)
+            pdata, poffs, plens = (jnp.asarray(pk.data),
+                                   jnp.asarray(pk.offsets),
+                                   jnp.asarray(pk.lengths))
+            packed_fn = jax.jit(
+                lambda d, o, l: tc.ragged_utf8_to_utf16(d, o, l))
+
+            cap = -(-max(len(d) for d in docs) // packing.TILE) \
+                * packing.TILE
+            padded = np.zeros((b, cap), np.uint8)
+            for i, d in enumerate(docs):
+                padded[i, : len(d)] = d
+            vdocs = jnp.asarray(padded)
+            vlens = jnp.asarray(np.asarray([len(d) for d in docs],
+                                           np.int32))
+
+            row = {"lang": f"b{b}/{skew}"}
+            jax.block_until_ready(packed_fn(pdata, poffs, plens))
+            row["packed"] = _gcps(nch, _time_min(
+                lambda: jax.block_until_ready(
+                    packed_fn(pdata, poffs, plens)), reps=reps))
+            vmap_fn = lambda: jax.block_until_ready(
+                pipeline.batch_utf8_to_utf16(vdocs, vlens,
+                                             strategy="vmap"))
+            vmap_fn()  # warmup/compile
+            row["vmap"] = _gcps(nch, _time_min(vmap_fn, reps=reps))
+            rows.append(row)
+    return rows
+
+
 def table8_proxy(langs=("arabic", "latin", "chinese")):
     """Instructions-per-byte proxy (paper Table 8): jaxpr FLOPs/bytes per
     input byte for each strategy — the HLO-op analogue of instruction

@@ -23,6 +23,10 @@ noise, tight enough to catch a real perf cliff).  Two modes:
 
 Cells present in the baseline but missing from the fresh run fail the
 gate outright (a silently dropped strategy is a regression, not a skip).
+
+Exit codes: 0 = gate passed, 1 = regression / missing cells, 2 = a JSON
+file is unreadable or malformed (never a traceback: a corrupt committed
+baseline must fail CI with a diagnosable message).
 """
 
 from __future__ import annotations
@@ -34,12 +38,32 @@ import sys
 GATED_STRATEGY = "fused"
 REFERENCE_STRATEGY = "blockparallel"
 
+EXIT_MALFORMED = 2
 
-def _cells(report: dict, mode: str) -> dict:
+
+class MalformedReport(ValueError):
+    """A bench JSON that cannot be interpreted as (table, lang, strategy,
+    gchars_per_s) records."""
+
+
+def _cells(report, mode: str) -> dict:
+    if not isinstance(report, dict) or \
+            not isinstance(report.get("records"), list):
+        raise MalformedReport("no 'records' list")
     raw = {}
     for rec in report["records"]:
-        key = (rec["table"], rec["lang"])
-        raw.setdefault(key, {})[rec["strategy"]] = rec["gchars_per_s"]
+        if not isinstance(rec, dict):
+            raise MalformedReport(f"record is not an object: {rec!r}")
+        try:
+            key = (rec["table"], rec["lang"])
+            strategy = rec["strategy"]
+            speed = rec["gchars_per_s"]
+        except KeyError as e:
+            raise MalformedReport(f"record missing key {e}: {rec!r}")
+        if not isinstance(speed, (int, float)) or isinstance(speed, bool):
+            raise MalformedReport(
+                f"gchars_per_s is not a number: {rec!r}")
+        raw.setdefault(key, {})[strategy] = speed
     out = {}
     for key, by_strategy in raw.items():
         if GATED_STRATEGY not in by_strategy:
@@ -68,10 +92,21 @@ def main(argv=None) -> int:
                          "fused/blockparallel ratio (machine-portable)")
     args = ap.parse_args(argv)
 
-    with open(args.baseline) as f:
-        base = _cells(json.load(f), args.mode)
-    with open(args.fresh) as f:
-        fresh = _cells(json.load(f), args.mode)
+    def load(path):
+        try:
+            with open(path) as f:
+                return _cells(json.load(f), args.mode)
+        # ValueError covers json.JSONDecodeError, UnicodeDecodeError
+        # (binary baseline) and MalformedReport alike.
+        except (OSError, ValueError) as e:
+            print(f"bench gate: malformed or unreadable bench JSON "
+                  f"{path}: {e}", file=sys.stderr)
+            return None
+
+    base = load(args.baseline)
+    fresh = load(args.fresh)
+    if base is None or fresh is None:
+        return EXIT_MALFORMED
 
     if not base:
         print(f"bench gate: no '{GATED_STRATEGY}' records in baseline "

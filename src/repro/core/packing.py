@@ -1,0 +1,171 @@
+"""Ragged document packing for single-launch batched transcoding.
+
+The padded-vmap batch path maps the single-document transcoder over a
+fixed-capacity ``[B, L]`` buffer: every document pays for ``L`` elements
+of grid dispatch no matter how short it is, and a batch of skewed
+lengths burns most of its tiles on padding.  The packed layout removes
+that tax: documents are concatenated into ONE flat narrow-dtype buffer
+and the fused count/write kernels run as a single grid launch over the
+whole batch (``repro.kernels.ragged_transcode``), with per-tile scalars
+segment-reduced per document afterwards.
+
+Layout (the ``PackedDocs`` triple):
+
+  * ``data``     -- flat narrow buffer (uint8 bytes / uint16 units).
+    Document ``d`` occupies ``[offsets[d], offsets[d] + lengths[d])``;
+    the slack up to ``offsets[d+1]`` is zero-filled.
+  * ``offsets``  -- int32 ``[B+1]`` row-offset vector.  Every offset is
+    **tile-aligned** (a multiple of the 1024-lane VMEM tile), so each
+    grid tile belongs to exactly one document — the property that lets
+    one kernel launch serve the whole batch with only per-tile scalar
+    bookkeeping (no per-lane document ids).
+  * ``lengths``  -- int32 ``[B]`` logical element counts.
+
+A zero-length document occupies zero tiles (``offsets[d+1] ==
+offsets[d]``) unless a fixed per-document tile span is requested
+(``doc_tiles=``, used by the serving engine so every ingress wave shares
+one compilation).
+
+``tile_ownership`` computes the tile -> document map **on device**: a
+``searchsorted`` over the offset vector, the per-tile document end, and
+the same-document neighbour flags the kernels use to zero cross-document
+byte inflow (a character must never claim bytes from the next document).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+# One VMEM tile of the fused/ragged kernels: 8 sublanes x 128 lanes.
+TILE = 1024
+
+
+class PackedDocs(NamedTuple):
+    """Host-side packed batch: (data, offsets, lengths) — see module doc."""
+
+    data: np.ndarray      # flat narrow buffer, zero-filled slack
+    offsets: np.ndarray   # int32 [B+1], tile-aligned starts
+    lengths: np.ndarray   # int32 [B], logical element counts
+
+    @property
+    def n_docs(self) -> int:
+        return self.offsets.shape[0] - 1
+
+
+def _round_up(n: int, block: int) -> int:
+    return -(-n // block) * block
+
+
+def pack_documents(docs: Sequence, *, dtype=None, block: int = TILE,
+                   doc_tiles: int | None = None,
+                   pad_to_docs: int | None = None) -> PackedDocs:
+    """Pack a list of documents into one tile-aligned flat buffer.
+
+    Args:
+      docs: sequence of 1-D arrays / ``bytes`` (UTF-8) — each becomes one
+        packed document.  ``bytes`` are viewed as uint8.
+      dtype: element dtype (default: inferred, uint8 for bytes).
+      block: tile width each document start is aligned to.
+      doc_tiles: if given, every document occupies exactly this many
+        tiles (error if one is longer) — a fixed geometry, so batches of
+        the same ``(B, doc_tiles)`` share one compilation.
+      pad_to_docs: if given, append zero-length documents until the batch
+        has this many rows (again for compilation reuse).
+
+    Returns a :class:`PackedDocs`; zero-filled slack between documents.
+    """
+    arrs = []
+    for d in docs:
+        if isinstance(d, (bytes, bytearray, memoryview)):
+            d = np.frombuffer(bytes(d), np.uint8)
+        arrs.append(np.asarray(d).reshape(-1))
+    if dtype is None:
+        dtype = arrs[0].dtype if arrs else np.uint8
+    if pad_to_docs is not None:
+        if pad_to_docs < len(arrs):
+            raise ValueError(
+                f"pad_to_docs={pad_to_docs} < {len(arrs)} documents")
+        arrs += [np.zeros(0, dtype)] * (pad_to_docs - len(arrs))
+
+    lengths = np.asarray([a.shape[0] for a in arrs], np.int32)
+    if doc_tiles is not None:
+        if lengths.size and int(lengths.max()) > doc_tiles * block:
+            raise ValueError(
+                f"document of {int(lengths.max())} elements exceeds "
+                f"doc_tiles={doc_tiles} ({doc_tiles * block} elements)")
+        spans = np.full(len(arrs), doc_tiles * block, np.int64)
+    else:
+        spans = np.asarray([_round_up(int(n), block) for n in lengths],
+                           np.int64)
+    offsets = np.zeros(len(arrs) + 1, np.int32)
+    np.cumsum(spans, out=offsets[1:])
+
+    data = np.zeros(int(offsets[-1]), dtype)
+    for a, off, n in zip(arrs, offsets[:-1], lengths):
+        data[off: off + n] = a.astype(dtype, copy=False)
+    return PackedDocs(data, offsets, lengths)
+
+
+def unpack_results(buffer, out_offsets, counts) -> list:
+    """Split a dense ragged output back into per-document numpy arrays.
+
+    ``buffer`` holds the documents' outputs back to back:
+    document ``d`` occupies ``[out_offsets[d], out_offsets[d] +
+    counts[d])``.  Slices are clamped to the buffer capacity (a
+    speculative count on garbage input under ``errors="strict"`` can
+    exceed it, exactly as the single-document transcoder's ``count`` can
+    exceed its fixed capacity).
+    """
+    buffer = np.asarray(buffer)
+    out_offsets = np.asarray(out_offsets)
+    counts = np.asarray(counts)
+    docs = []
+    for d in range(counts.shape[0]):
+        lo = int(out_offsets[d])
+        hi = min(lo + int(counts[d]), buffer.shape[0])
+        docs.append(buffer[lo: max(hi, lo)])
+    return docs
+
+
+def tile_ownership(offsets: jax.Array, lengths: jax.Array, nblk: int,
+                   block: int = TILE):
+    """Device-side tile -> document ownership map of a packed batch.
+
+    Args:
+      offsets: int32 [B+1] tile-aligned document starts.
+      lengths: int32 [B] logical lengths.
+      nblk: static tile count of the (padded) packed buffer.
+      block: tile width.
+
+    Returns ``(tile_doc, tile_end, same_prev, same_next)``:
+      tile_doc  -- int32 [nblk], owning document of each tile (tiles past
+                   the last document clamp to B-1; their ``tile_end``
+                   precedes them, so no lane in them is ever live).
+      tile_end  -- int32 [nblk], global end offset of the tile's document
+                   (``offsets[doc] + lengths[doc]``): the live mask is
+                   ``global_index < tile_end``.
+      same_prev / same_next -- int32 [nblk] 0/1 flags: the neighbouring
+                   tile belongs to the same document.  The kernels
+                   multiply neighbour-tile inflow by these, so a
+                   character can never claim bytes across a document
+                   boundary (the packed analogue of the zero boundary
+                   tiles of the single-document pipeline).
+    """
+    offsets = jnp.asarray(offsets, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    n_docs = offsets.shape[0] - 1
+    tile_start = jnp.arange(nblk, dtype=jnp.int32) * block
+    tile_doc = jnp.clip(
+        jnp.searchsorted(offsets[1:], tile_start, side="right"),
+        0, n_docs - 1).astype(jnp.int32)
+    tile_end = (offsets[:-1] + lengths)[tile_doc]
+    same = (tile_doc[1:] == tile_doc[:-1]).astype(jnp.int32)
+    zero = jnp.zeros((1,), jnp.int32)
+    same_prev = jnp.concatenate([zero, same])
+    same_next = jnp.concatenate([same, zero])
+    return tile_doc, tile_end, same_prev, same_next

@@ -65,6 +65,28 @@ class TranscodeResult(NamedTuple):
         return self.status < 0
 
 
+class RaggedTranscodeResult(NamedTuple):
+    """Per-batch result of a ragged packed transcode (one kernel launch).
+
+    The per-document fields carry exactly the :class:`TranscodeResult`
+    semantics, element-wise: document ``d``'s output occupies
+    ``buffer[offsets[d] : offsets[d] + counts[d]]`` (a *dense* packed
+    stream — no inter-document padding), ``counts[d]`` is its output
+    element count and ``statuses[d]`` its int32 status (``STATUS_OK`` or
+    the first-error offset *relative to the document's own start*, with
+    Python ``UnicodeDecodeError.start`` semantics).
+    """
+
+    buffer: jax.Array    # dense packed output stream (uint16 / uint8)
+    offsets: jax.Array   # int32 [B+1]: per-document output row offsets
+    counts: jax.Array    # int32 [B]: per-document output element counts
+    statuses: jax.Array  # int32 [B]: STATUS_OK or doc-relative offset
+
+    @property
+    def ok(self) -> jax.Array:
+        return self.statuses < 0
+
+
 def first_error_status(err_map, n):
     """Min-reduce a per-position error map into an int32 status.
 

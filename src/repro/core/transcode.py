@@ -389,6 +389,51 @@ def transcode_utf8_to_utf16(b, n_valid=None, *, strategy: str = DEFAULT_STRATEGY
     raise ValueError(f"unknown strategy: {strategy}")
 
 
+def ragged_utf8_to_utf16(data, offsets, lengths, *, validate: bool = True,
+                         errors: str = "strict"):
+    """Ragged packed-batch UTF-8 -> UTF-16: one Pallas launch per batch.
+
+    ``(data, offsets, lengths)`` is the tile-aligned packed layout of
+    :func:`repro.core.packing.pack_documents` (``offsets`` is the
+    ``[B+1]`` row-offset vector).  Returns a
+    :class:`repro.core.result.RaggedTranscodeResult` whose per-document
+    slices are bit-identical to the single-document fused transcoder;
+    ``errors=`` carries the usual strict/replace policy per document.
+    This is the padding-tax-free batch path (DESIGN.md §7) — the padded
+    ``vmap`` form survives in ``repro.data.pipeline`` as the reference.
+    """
+    from repro.kernels import ragged_transcode
+    return ragged_transcode.utf8_to_utf16_ragged(
+        data, offsets, lengths, validate=validate, errors=errors)
+
+
+def ragged_utf16_to_utf8(data, offsets, lengths, *, validate: bool = True,
+                         errors: str = "strict"):
+    """Ragged packed-batch UTF-16 -> UTF-8 (see ``ragged_utf8_to_utf16``)."""
+    from repro.kernels import ragged_transcode
+    return ragged_transcode.utf16_to_utf8_ragged(
+        data, offsets, lengths, validate=validate, errors=errors)
+
+
+def ragged_scan_utf8(data, offsets, lengths):
+    """Per-document single-scan validation + capacity: (counts, statuses).
+
+    The ragged analogue of :func:`scan_utf8`: ONE counting-pass launch
+    over a packed batch yields every document's UTF-16 capacity and
+    first-error status (document-relative, Python
+    ``UnicodeDecodeError.start`` semantics).  Serve ingress validates a
+    whole wave of prompts with this single read.
+    """
+    from repro.kernels import ragged_transcode
+    return ragged_transcode.utf8_scan_ragged(data, offsets, lengths)
+
+
+def ragged_scan_utf16(data, offsets, lengths):
+    """Per-document single-scan UTF-16 validation + UTF-8 capacity."""
+    from repro.kernels import ragged_transcode
+    return ragged_transcode.utf16_scan_ragged(data, offsets, lengths)
+
+
 def transcode_utf16_to_utf8(u, n_valid=None, *, strategy: str = DEFAULT_STRATEGY,
                             validate: bool = True, errors: str = "strict"):
     """Strategy-dispatched UTF-16 -> UTF-8.  See module docstring."""

@@ -23,12 +23,14 @@ restart):
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import packing
 from repro.core import transcode as tc
 from repro.data import synthetic
 from repro.data.tokenizer import BOS_ID, EOS_ID, PAD_ID, ByteTokenizer
@@ -37,24 +39,43 @@ from repro.data.tokenizer import BOS_ID, EOS_ID, PAD_ID, ByteTokenizer
 # ---------------------------------------------------------------------------
 # Batched transcoding entry points.
 #
-# Each maps the strategy-dispatched single-document transcoder over the
-# leading (document) axis with ``jax.vmap`` — all strategies, including the
-# fused Pallas pipeline, batch cleanly (the Pallas interpreter and Mosaic
-# both carry batching rules).  Inputs are fixed-capacity [B, L] buffers of
-# narrow dtype (uint8 bytes / uint16 units) plus a [B] vector of logical
-# lengths; outputs are a TranscodeResult of batched arrays
-# ([B, cap] buffers, [B] counts, [B] statuses — per-document first-error
-# offsets, -1 where valid).  The ``errors=`` policy threads through, so a
-# batch of partially-malformed documents can ingest losslessly
-# (errors="replace": U+FFFD per maximal subpart) without a host round
-# trip.  The jitted callables are cached per (direction, strategy,
-# validate, errors).
+# Two batch geometries share one API (inputs: fixed-capacity [B, L]
+# buffers of narrow dtype plus a [B] vector of logical lengths; outputs:
+# a TranscodeResult of batched arrays — [B, cap] buffers, [B] counts,
+# [B] statuses, per-document first-error offsets, -1 where valid):
+#
+#   * ``strategy="packed"`` (default) — the ragged packed path: the
+#     [B, L] buffer is reinterpreted as ONE tile-aligned packed stream
+#     (row-major flattening IS the packed layout once L is padded to a
+#     tile multiple) and the fused count/write kernels run as a single
+#     grid launch for the whole batch (DESIGN.md §7); the dense ragged
+#     output is re-padded to the [B, cap] contract with one gather.
+#     Callers that can consume the dense layout directly should use
+#     ``tc.ragged_utf8_to_utf16`` on a ``packing.pack_documents`` batch
+#     and skip both the padding and the re-pad gather.
+#   * ``strategy="vmap"`` — the padded reference: ``jax.vmap`` of the
+#     single-document fused transcoder over the document axis (B grid
+#     dispatches, every document scans all of L).  A per-document
+#     strategy name ("fused" / "blockparallel" / "windowed") selects
+#     that transcoder under vmap, as before.
+#
+# The ``errors=`` policy threads through both, so a batch of partially-
+# malformed documents can ingest losslessly (errors="replace": U+FFFD
+# per maximal subpart) without a host round trip.
 
-_BATCH_CACHE: dict = {}
+# Jitted vmap callables, keyed per (direction, strategy, validate,
+# errors, capacity).  Capacity is part of the key: a [B, L] batch
+# compiles per distinct L anyway (shapes are static), so an unkeyed
+# entry would silently accumulate one trace per capacity inside a
+# single cache slot with nothing bounding the set.  Keying + the LRU
+# bound below make the retrace budget explicit and bounded.
+_BATCH_CACHE: "dict" = {}
+_BATCH_CACHE_MAX = 16
 
 
-def _batched(direction: str, strategy: str, validate: bool, errors: str):
-    key = (direction, strategy, validate, errors)
+def _batched(direction: str, strategy: str, validate: bool, errors: str,
+             capacity: int):
+    key = (direction, strategy, validate, errors, capacity)
     fn = _BATCH_CACHE.get(key)
     if fn is None:
         one = (tc.transcode_utf8_to_utf16 if direction == "8to16"
@@ -62,24 +83,87 @@ def _batched(direction: str, strategy: str, validate: bool, errors: str):
         fn = jax.jit(jax.vmap(
             lambda x, n: one(x, n, strategy=strategy, validate=validate,
                              errors=errors)))
+        while len(_BATCH_CACHE) >= _BATCH_CACHE_MAX:
+            _BATCH_CACHE.pop(next(iter(_BATCH_CACHE)))
+        _BATCH_CACHE[key] = fn
+    else:
+        # LRU refresh: dicts iterate in insertion order, so re-inserting
+        # on hit keeps hot entries at the back and evicts the coldest.
+        _BATCH_CACHE.pop(key)
         _BATCH_CACHE[key] = fn
     return fn
 
 
-def batch_utf8_to_utf16(docs, lengths, *,
-                        strategy: str = tc.DEFAULT_STRATEGY,
+_TILE = packing.TILE
+
+
+def _rows_as_packed(docs):
+    """[B, L] row buffers -> tile-aligned packed stream (zero repack).
+
+    Pads the capacity axis to a tile multiple; row-major flattening then
+    satisfies the packed-layout invariant (tile-aligned starts), so the
+    offsets vector is just ``arange(B+1) * Lp``.
+    """
+    b, cap = docs.shape
+    cap_p = -(-cap // _TILE) * _TILE
+    if cap_p != cap:
+        docs = jnp.pad(docs, ((0, 0), (0, cap_p - cap)))
+    offsets = jnp.arange(b + 1, dtype=jnp.int32) * cap_p
+    return docs.reshape(-1), offsets
+
+
+def _repad(res, out_cap: int):
+    """Dense ragged output -> the padded [B, cap] batch contract."""
+    j = jnp.arange(out_cap, dtype=jnp.int32)[None, :]
+    src = res.offsets[:-1, None] + j
+    valid = j < res.counts[:, None]
+    src = jnp.clip(src, 0, res.buffer.shape[0] - 1)
+    out = jnp.where(valid, res.buffer[src], 0)
+    return tc.TranscodeResult(out, res.counts, res.statuses)
+
+
+@functools.partial(jax.jit, static_argnames=("validate", "errors",
+                                             "out_cap"))
+def _packed8_batch(docs, lengths, validate, errors, out_cap):
+    data, offsets = _rows_as_packed(docs)
+    res = tc.ragged_utf8_to_utf16(data, offsets, lengths,
+                                  validate=validate, errors=errors)
+    return _repad(res, out_cap)
+
+
+@functools.partial(jax.jit, static_argnames=("validate", "errors",
+                                             "out_cap"))
+def _packed16_batch(units, lengths, validate, errors, out_cap):
+    data, offsets = _rows_as_packed(units)
+    res = tc.ragged_utf16_to_utf8(data, offsets, lengths,
+                                  validate=validate, errors=errors)
+    return _repad(res, out_cap)
+
+
+def batch_utf8_to_utf16(docs, lengths, *, strategy: str = "packed",
                         validate: bool = True, errors: str = "strict"):
     """Batched UTF-8 -> UTF-16: [B, L] byte buffers -> ([B, L], [B], [B])."""
-    return _batched("8to16", strategy, validate, errors)(
-        jnp.asarray(docs), jnp.asarray(lengths))
+    docs = jnp.asarray(docs)
+    lengths = jnp.asarray(lengths)
+    if strategy == "packed":
+        return _packed8_batch(docs.astype(jnp.uint8), lengths, validate,
+                              errors, docs.shape[1])
+    per_doc = tc.DEFAULT_STRATEGY if strategy == "vmap" else strategy
+    return _batched("8to16", per_doc, validate, errors,
+                    docs.shape[1])(docs, lengths)
 
 
-def batch_utf16_to_utf8(units, lengths, *,
-                        strategy: str = tc.DEFAULT_STRATEGY,
+def batch_utf16_to_utf8(units, lengths, *, strategy: str = "packed",
                         validate: bool = True, errors: str = "strict"):
     """Batched UTF-16 -> UTF-8: [B, L] unit buffers -> ([B, 3L], [B], [B])."""
-    return _batched("16to8", strategy, validate, errors)(
-        jnp.asarray(units), jnp.asarray(lengths))
+    units = jnp.asarray(units)
+    lengths = jnp.asarray(lengths)
+    if strategy == "packed":
+        return _packed16_batch(units.astype(jnp.uint16), lengths, validate,
+                               errors, 3 * units.shape[1])
+    per_doc = tc.DEFAULT_STRATEGY if strategy == "vmap" else strategy
+    return _batched("16to8", per_doc, validate, errors,
+                    units.shape[1])(units, lengths)
 
 
 @dataclasses.dataclass

@@ -138,23 +138,29 @@ _PER_TILE_SPEC = pl.BlockSpec((1,), lambda i: (i,))   # per-tile scalar out
 
 # ---------------------------------------------------------------------------
 # UTF-8 -> UTF-16
+#
+# The per-tile count/write bodies are free functions of VMEM-resident
+# arrays so the ragged packed-batch kernels
+# (``repro.kernels.ragged_transcode``) can run EXACTLY the same scan with
+# a per-document live mask — one definition of the transcode per
+# direction, two launch geometries (single stream / packed batch).
 
 
-def _count8_kernel(t1h_ref, t1l_ref, t2h_ref, n_ref, bp_ref, b_ref, bn_ref,
-                   tot_ref, err_ref, ferr_ref, *, errors, validate):
-    b = b_ref[...].astype(jnp.int32)
-    bp = bp_ref[...].astype(jnp.int32)
-    bn = bn_ref[...].astype(jnp.int32)
-    gidx = _gidx(b.shape)
-    live = gidx < n_ref[0]
+def count8_tile(b, bp, bn, live, gidx, t1h, t1l, t2h, *, errors, validate):
+    """One counting/validating scan of a VMEM tile.
 
+    ``live`` is the caller's in-stream mask (single stream: ``gidx < n``;
+    ragged: ``gidx < doc_end``).  Returns the three per-tile scalars
+    ``(total, err_flag, first_err_gidx)`` — first-error offsets are in
+    *global* stream coordinates (callers subtract the document start).
+    """
     need_analysis = validate or errors == "replace"
     a = kdec.analyze_tile(b, bp, bn) if need_analysis else None
     if errors == "replace":
-        tot_ref[0] = jnp.sum(jnp.where(a["starts"] & live, a["units"], 0))
+        tot = jnp.sum(jnp.where(a["starts"] & live, a["units"], 0))
     else:
         _cp, is_lead, units, _err = kdec.decode_tile(b, bp, bn)
-        tot_ref[0] = jnp.sum(jnp.where(is_lead & live, units, 0))
+        tot = jnp.sum(jnp.where(is_lead & live, units, 0))
 
     if validate:
         # Fused validation, one scan: the paper-faithful Keiser-Lemire
@@ -165,29 +171,31 @@ def _count8_kernel(t1h_ref, t1l_ref, t2h_ref, n_ref, bp_ref, b_ref, bn_ref,
         # it is the paper's §4 validator, and OR-ing it in means a defect
         # in either detector degrades to a located (or offset-0) error
         # rather than a silently accepted invalid stream.
-        kl = kval.kl_error_tile(b, bp, t1h_ref[...], t1l_ref[...],
-                                t2h_ref[...]) & live
+        kl = kval.kl_error_tile(b, bp, t1h, t1l, t2h) & live
         sub = a["err"] & live
-        err_ref[0] = jnp.max((kl | sub).astype(jnp.int32))
-        ferr_ref[0] = jnp.min(jnp.where(sub, gidx, _IMAX))
+        err = jnp.max((kl | sub).astype(jnp.int32))
+        ferr = jnp.min(jnp.where(sub, gidx, _IMAX))
     else:
-        err_ref[0] = 0
-        ferr_ref[0] = _IMAX
+        err = jnp.int32(0)
+        ferr = jnp.int32(_IMAX)
+    return tot, err, ferr
 
 
-def _write8_kernel(n_ref, base_ref, bp_ref, b_ref, bn_ref, out_ref, *,
-                   errors):
-    b = b_ref[...].astype(jnp.int32)
-    bp = bp_ref[...].astype(jnp.int32)
-    bn = bn_ref[...].astype(jnp.int32)
+def write8_stage(b, bp, bn, instream, *, errors):
+    """Decode + in-tile compaction of one tile: the write-pass body.
+
+    ``instream`` is the caller's in-stream mask of ``b``'s shape.
+    Returns the compact int32 stage window (STAGE16 lanes); the caller
+    stores it at the tile's base offset.
+    """
     if errors == "replace":
         a = kdec.analyze_tile(b, bp, bn)
         cp = a["cp"]
-        live = (a["starts"] & (_gidx(b.shape) < n_ref[0])).reshape(-1)
+        live = (a["starts"] & instream).reshape(-1)
         eff = jnp.where(live, a["units"].reshape(-1), 0)
     else:
         cp, is_lead, units, _err = kdec.decode_tile(b, bp, bn)
-        live = (is_lead & (_gidx(b.shape) < n_ref[0])).reshape(-1)
+        live = (is_lead & instream).reshape(-1)
         eff = jnp.where(live, units.reshape(-1), 0)
     rank, _tot = compaction.tile_exclusive_scan(eff, rows=ROWS)
     _u, u0, u1, _bad = u16mod.encode_candidates(cp)
@@ -198,6 +206,27 @@ def _write8_kernel(n_ref, base_ref, bp_ref, b_ref, bn_ref, out_ref, *,
         u0.reshape(-1), mode="drop")
     stage = stage.at[jnp.where(live & (eff == 2), rank + 1, STAGE16)].set(
         u1.reshape(-1), mode="drop")
+    return stage
+
+
+def _count8_kernel(t1h_ref, t1l_ref, t2h_ref, n_ref, bp_ref, b_ref, bn_ref,
+                   tot_ref, err_ref, ferr_ref, *, errors, validate):
+    b = b_ref[...].astype(jnp.int32)
+    bp = bp_ref[...].astype(jnp.int32)
+    bn = bn_ref[...].astype(jnp.int32)
+    gidx = _gidx(b.shape)
+    tot_ref[0], err_ref[0], ferr_ref[0] = count8_tile(
+        b, bp, bn, gidx < n_ref[0], gidx,
+        t1h_ref[...], t1l_ref[...], t2h_ref[...],
+        errors=errors, validate=validate)
+
+
+def _write8_kernel(n_ref, base_ref, bp_ref, b_ref, bn_ref, out_ref, *,
+                   errors):
+    b = b_ref[...].astype(jnp.int32)
+    bp = bp_ref[...].astype(jnp.int32)
+    bn = bn_ref[...].astype(jnp.int32)
+    stage = write8_stage(b, bp, bn, _gidx(b.shape) < n_ref[0], errors=errors)
     out_ref[pl.ds(base_ref[0], STAGE16)] = stage.astype(jnp.uint16)
 
 
@@ -336,44 +365,41 @@ def utf8_scan_fused(b, n_valid=None, *, interpret=None):
 # UTF-16 -> UTF-8
 
 
-def _count16_kernel(n_ref, up_ref, u_ref, un_ref,
-                    tot_ref, err_ref, ferr_ref, *, errors, validate):
-    u = u_ref[...].astype(jnp.int32)
-    up = up_ref[...].astype(jnp.int32)
-    un = un_ref[...].astype(jnp.int32)
-    gidx = _gidx(u.shape)
-    live = gidx < n_ref[0]
+def count16_tile(u, up, un, live, gidx, *, errors, validate):
+    """One counting/validating scan of a UTF-16 VMEM tile.
 
+    Same contract as :func:`count8_tile` (shared with the ragged packed
+    kernels): returns ``(total, err_flag, first_err_gidx)`` with the
+    first-error offset in global stream coordinates.
+    """
     need_analysis = validate or errors == "replace"
     a = kenc.analyze_tile(u, up, un) if need_analysis else None
     if errors == "replace":
         _b0, _b1, _b2, _b3, L = kenc.utf8_candidates(a["cp"])
-        tot_ref[0] = jnp.sum(jnp.where(a["starts"] & live, L, 0))
+        tot = jnp.sum(jnp.where(a["starts"] & live, L, 0))
     else:
         _b0, _b1, _b2, _b3, L, _err_map = kenc.encode_tile(u, up, un)
-        tot_ref[0] = jnp.sum(jnp.where((L > 0) & live, L, 0))
+        tot = jnp.sum(jnp.where((L > 0) & live, L, 0))
 
     if validate:
         sub = a["err"] & live
-        err_ref[0] = jnp.max(sub.astype(jnp.int32))
-        ferr_ref[0] = jnp.min(jnp.where(sub, gidx, _IMAX))
+        err = jnp.max(sub.astype(jnp.int32))
+        ferr = jnp.min(jnp.where(sub, gidx, _IMAX))
     else:
-        err_ref[0] = 0
-        ferr_ref[0] = _IMAX
+        err = jnp.int32(0)
+        ferr = jnp.int32(_IMAX)
+    return tot, err, ferr
 
 
-def _write16_kernel(n_ref, base_ref, up_ref, u_ref, un_ref, out_ref, *,
-                    errors):
-    u = u_ref[...].astype(jnp.int32)
-    up = up_ref[...].astype(jnp.int32)
-    un = un_ref[...].astype(jnp.int32)
+def write16_stage(u, up, un, instream, *, errors):
+    """Encode + in-tile compaction of one UTF-16 tile (write-pass body)."""
     if errors == "replace":
         a = kenc.analyze_tile(u, up, un)
         b0, b1, b2, b3, L = kenc.utf8_candidates(a["cp"])
-        live = (a["starts"] & (_gidx(u.shape) < n_ref[0])).reshape(-1)
+        live = (a["starts"] & instream).reshape(-1)
     else:
         b0, b1, b2, b3, L, _err = kenc.encode_tile(u, up, un)
-        live = ((L > 0) & (_gidx(u.shape) < n_ref[0])).reshape(-1)
+        live = ((L > 0) & instream).reshape(-1)
     eff = jnp.where(live, L.reshape(-1), 0)
     rank, _tot = compaction.tile_exclusive_scan(eff, rows=ROWS)
     # Variable 1-4 byte egress: ``compact_offsets`` semantics, in-tile.
@@ -386,6 +412,26 @@ def _write16_kernel(n_ref, base_ref, up_ref, u_ref, un_ref, out_ref, *,
         b2.reshape(-1), mode="drop")
     stage = stage.at[jnp.where(live & (eff == 4), rank + 3, STAGE8)].set(
         b3.reshape(-1), mode="drop")
+    return stage
+
+
+def _count16_kernel(n_ref, up_ref, u_ref, un_ref,
+                    tot_ref, err_ref, ferr_ref, *, errors, validate):
+    u = u_ref[...].astype(jnp.int32)
+    up = up_ref[...].astype(jnp.int32)
+    un = un_ref[...].astype(jnp.int32)
+    gidx = _gidx(u.shape)
+    tot_ref[0], err_ref[0], ferr_ref[0] = count16_tile(
+        u, up, un, gidx < n_ref[0], gidx, errors=errors, validate=validate)
+
+
+def _write16_kernel(n_ref, base_ref, up_ref, u_ref, un_ref, out_ref, *,
+                    errors):
+    u = u_ref[...].astype(jnp.int32)
+    up = up_ref[...].astype(jnp.int32)
+    un = un_ref[...].astype(jnp.int32)
+    stage = write16_stage(u, up, un, _gidx(u.shape) < n_ref[0],
+                          errors=errors)
     out_ref[pl.ds(base_ref[0], STAGE8)] = stage.astype(jnp.uint8)
 
 

@@ -2,19 +2,23 @@
 
 Requests arrive as raw UTF-8 or UTF-16LE byte strings.  The engine:
 
-  1. **ingress** — one *single-scan* pass over the prompt through the
-     fused pipeline (the paper's validation running at the API boundary,
-     exactly its motivating deployment).  UTF-8 prompts run the fused
-     counting scan (``scan_utf8``: validation + error location, no write
-     pass, no standalone validate re-read); UTF-16LE prompts run the full
-     fused transcode to UTF-8 whose counting pass carries the same fused
-     validation.  Under ``errors="strict"`` invalid prompts are rejected
-     with the offset of the first bad byte/unit surfaced in
-     ``Result.error_offset``; under ``errors="replace"`` malformed
-     prompts are sanitized (U+FFFD per maximal subpart, CPython
-     semantics) and served at full speed, with the first substitution
-     offset still reported.  Prompts are padded to the engine's static
-     ``max_prompt`` capacity so every request shares one compilation.
+  1. **ingress** — *packed multi-request* validation through the ragged
+     pipeline (the paper's validation running at the API boundary,
+     exactly its motivating deployment).  All UTF-8 prompts of a wave
+     are packed into ONE tile-aligned stream
+     (``repro.core.packing.pack_documents`` with a fixed per-request
+     tile span, so every wave shares one compilation) and a single
+     ragged counting-scan launch (``ragged_scan_utf8``: fused
+     validation + per-document error location, no write pass) yields
+     every prompt's verdict at once — one kernel dispatch per wave
+     instead of one per request.  UTF-16LE prompts group per ``errors=``
+     policy and run one ragged transcode to UTF-8 per group, whose
+     counting pass carries the same fused validation.  Under
+     ``errors="strict"`` invalid prompts are rejected with the offset of
+     the first bad byte/unit surfaced in ``Result.error_offset``; under
+     ``errors="replace"`` malformed prompts are sanitized (U+FFFD per
+     maximal subpart, CPython semantics) and served at full speed, with
+     the first substitution offset still reported.
   2. batches admitted requests into fixed decode slots (padded prefill,
      per-row cursors), runs the jitted prefill + decode loop;
   3. **egress** — detokenizes to UTF-8 or UTF-16 through the vectorized
@@ -37,6 +41,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import packing
 from repro.core import transcode as tc
 from repro.data.tokenizer import BOS_ID, EOS_ID, N_SPECIAL, ByteTokenizer
 from repro.serve import kvcache, serve_step
@@ -81,38 +86,97 @@ class Engine:
         self._ctx = max_prompt + max_new
 
     # ------------------------------------------------------------------
-    def _ingress(self, req: Request):
-        """Single-scan ingress: returns (ids, error, error_offset,
-        sanitized_prompt).  ``ids is None`` means rejection."""
-        if req.errors not in ("strict", "replace"):
-            # Reject per-request rather than raising mid-batch: one bad
-            # field must not take down every other request in the wave.
-            return None, f"unknown errors policy: {req.errors}", -1, b""
-        raw = np.frombuffer(req.prompt_bytes, np.uint8)
-        if req.in_encoding == "utf-16-le":
-            return self._ingress_utf16(req, raw)
-        if req.in_encoding != "utf-8":
-            return None, f"unknown in_encoding: {req.in_encoding}", -1, b""
-        if len(raw) == 0 or len(raw) > self.max_prompt - 1:
-            return None, "empty or oversize prompt", -1, b""
-        # Fixed-capacity buffer: every request shares one compilation.
+    # Packed multi-request ingress: per-request field checks stay on the
+    # host; every prompt-byte scan goes through the ragged packed
+    # pipeline in fixed-geometry groups (``max_batch`` slots x
+    # ``_doc_tiles`` tiles each, short groups padded with zero-length
+    # documents), so every wave shares one compilation.
+
+    @property
+    def _doc_tiles(self) -> int:
+        """Tiles per packed ingress slot (covers ``max_prompt``)."""
+        return max(1, -(-self.max_prompt // packing.TILE))
+
+    def _ingress_batch(self, requests: List[Request], results):
+        """Validate/transcode every prompt; rejections are written into
+        ``results`` and admitted entries return in request order."""
+        utf8_members = []           # (idx, req, raw bytes)
+        utf16_members: dict = {}    # errors policy -> [(idx, req, units)]
+        for i, req in enumerate(requests):
+            if req.errors not in ("strict", "replace"):
+                # Reject per-request rather than raising mid-batch: one
+                # bad field must not take down the rest of the wave.
+                results[i] = Result(
+                    ok=False, error=f"unknown errors policy: {req.errors}")
+                continue
+            raw = np.frombuffer(req.prompt_bytes, np.uint8)
+            if req.in_encoding == "utf-16-le":
+                if len(raw) % 2:
+                    results[i] = Result(
+                        ok=False, error="odd utf-16-le prompt byte length")
+                    continue
+                units = raw.view(np.uint16) if raw.size \
+                    else np.zeros(0, np.uint16)
+                if len(units) == 0 or len(units) > self.max_prompt:
+                    results[i] = Result(
+                        ok=False, error="empty or oversize prompt")
+                    continue
+                utf16_members.setdefault(req.errors, []).append(
+                    (i, req, units))
+            elif req.in_encoding == "utf-8":
+                if len(raw) == 0 or len(raw) > self.max_prompt - 1:
+                    results[i] = Result(
+                        ok=False, error="empty or oversize prompt")
+                    continue
+                utf8_members.append((i, req, raw))
+            else:
+                results[i] = Result(
+                    ok=False,
+                    error=f"unknown in_encoding: {req.in_encoding}")
+        admitted: dict = {}
+        self._ingress_utf8_group(utf8_members, results, admitted)
+        for policy, members in utf16_members.items():
+            self._ingress_utf16_group(policy, members, results, admitted)
+        return [admitted[i] for i in sorted(admitted)]
+
+    def _ingress_utf8_group(self, members, results, admitted):
+        """One ragged counting-scan launch per ``max_batch`` prompts:
+        fused validation + per-document error location, no write pass —
+        clean prompts (the common case) pay one packed read per group
+        instead of one kernel dispatch per request."""
+        for g0 in range(0, len(members), self.max_batch):
+            chunk = members[g0: g0 + self.max_batch]
+            pk = packing.pack_documents(
+                [raw for _, _, raw in chunk], dtype=np.uint8,
+                doc_tiles=self._doc_tiles, pad_to_docs=self.max_batch)
+            _counts, statuses = tc.ragged_scan_utf8(
+                pk.data, pk.offsets, pk.lengths)
+            statuses = np.asarray(statuses)
+            for k, (i, req, raw) in enumerate(chunk):
+                off = int(statuses[k])
+                if off < 0:
+                    ids = np.concatenate(
+                        [[BOS_ID], raw.astype(np.int32) + N_SPECIAL])
+                    admitted[i] = (i, req, ids, -1, b"")
+                elif req.errors != "replace":
+                    results[i] = Result(
+                        ok=False,
+                        error=f"invalid UTF-8 prompt at byte {off}",
+                        error_offset=off)
+                else:
+                    entry = self._sanitize_utf8(i, req, raw, off)
+                    if isinstance(entry, Result):
+                        results[i] = entry
+                    else:
+                        admitted[i] = entry
+
+    def _sanitize_utf8(self, i, req, raw, off):
+        """Dirty prompt under replace: sanitize via a fused
+        replace-transcode to UTF-16, then encode the now-valid units
+        back to UTF-8 for the byte tokenizer (dirty prompts are the rare
+        case, so this stays per-request)."""
         buf = np.zeros(self.max_prompt, np.uint8)
         buf[: len(raw)] = raw
-        # Both policies start from the fused counting scan alone —
-        # validation + first-error location, no write pass, no separate
-        # validate_utf8 read; clean prompts (the common case) never pay
-        # more than this single scan.
-        _count, status = tc.scan_utf8(jnp.asarray(buf), len(raw))
-        off = int(status)
-        if off < 0:
-            ids = np.concatenate(
-                [[BOS_ID], raw.astype(np.int32) + N_SPECIAL])
-            return ids, "", -1, b""
-        if req.errors != "replace":
-            return None, f"invalid UTF-8 prompt at byte {off}", off, b""
-        # Dirty prompt under replace: sanitize via a fused
-        # replace-transcode to UTF-16, then encode the now-valid units
-        # back to UTF-8 for the byte tokenizer.
         u16, cu, _status = tc.transcode_utf8_to_utf16(
             jnp.asarray(buf), len(raw), errors="replace")
         # The units are valid by construction — skip the re-validation
@@ -120,34 +184,45 @@ class Engine:
         b8, cb, _ = tc.transcode_utf16_to_utf8(u16, cu, validate=False)
         clean = np.asarray(b8)[: int(cb)].astype(np.uint8)
         if len(clean) == 0 or len(clean) > self.max_prompt - 1:
-            return None, "empty or oversize prompt after replacement", \
-                off, b""
+            return Result(
+                ok=False, error="empty or oversize prompt after replacement",
+                error_offset=off)
         ids = np.concatenate([[BOS_ID], clean.astype(np.int32) + N_SPECIAL])
-        return ids, "", off, bytes(clean)
+        return (i, req, ids, off, bytes(clean))
 
-    def _ingress_utf16(self, req: Request, raw: np.ndarray):
-        if len(raw) % 2:
-            return None, "odd utf-16-le prompt byte length", -1, b""
-        units = raw.view(np.uint16) if raw.size else np.zeros(0, np.uint16)
-        cap_u = self.max_prompt  # unit capacity; output cap is 3x bytes
-        if len(units) == 0 or len(units) > cap_u:
-            return None, "empty or oversize prompt", -1, b""
-        ubuf = np.zeros(cap_u, np.uint16)
-        ubuf[: len(units)] = units
-        # One fused transcode: the counting pass validates + locates, the
-        # write pass produces the UTF-8 the byte tokenizer consumes.
-        out, cnt, status = tc.transcode_utf16_to_utf8(
-            jnp.asarray(ubuf), len(units), errors=req.errors)
-        off = int(status)
-        if req.errors != "replace" and off >= 0:
-            return None, f"invalid UTF-16 prompt at unit {off}", off, b""
-        b8 = np.asarray(out)[: int(cnt)].astype(np.uint8)
-        if len(b8) == 0 or len(b8) > self.max_prompt - 1:
-            return None, "empty or oversize prompt", -1, b""
-        ids = np.concatenate([[BOS_ID], b8.astype(np.int32) + N_SPECIAL])
-        sanitized = bytes(b8) if (req.errors == "replace" and off >= 0) \
-            else b""
-        return ids, "", off, sanitized
+    def _ingress_utf16_group(self, policy, members, results, admitted):
+        """One ragged transcode launch per ``max_batch`` UTF-16 prompts
+        (grouped per ``errors=`` policy — the policy is a static kernel
+        switch): the counting pass validates + locates per document, the
+        write pass produces the UTF-8 the byte tokenizer consumes."""
+        for g0 in range(0, len(members), self.max_batch):
+            chunk = members[g0: g0 + self.max_batch]
+            pk = packing.pack_documents(
+                [u for _, _, u in chunk], dtype=np.uint16,
+                doc_tiles=self._doc_tiles, pad_to_docs=self.max_batch)
+            res = tc.ragged_utf16_to_utf8(pk.data, pk.offsets, pk.lengths,
+                                          errors=policy)
+            outs = packing.unpack_results(res.buffer, res.offsets,
+                                          res.counts)
+            statuses = np.asarray(res.statuses)
+            for k, (i, req, units) in enumerate(chunk):
+                off = int(statuses[k])
+                if policy != "replace" and off >= 0:
+                    results[i] = Result(
+                        ok=False,
+                        error=f"invalid UTF-16 prompt at unit {off}",
+                        error_offset=off)
+                    continue
+                b8 = np.asarray(outs[k]).astype(np.uint8)
+                if len(b8) == 0 or len(b8) > self.max_prompt - 1:
+                    results[i] = Result(
+                        ok=False, error="empty or oversize prompt")
+                    continue
+                ids = np.concatenate(
+                    [[BOS_ID], b8.astype(np.int32) + N_SPECIAL])
+                sanitized = bytes(b8) if (policy == "replace" and off >= 0) \
+                    else b""
+                admitted[i] = (i, req, ids, off, sanitized)
 
     def _egress(self, token_ids: np.ndarray, encoding: str) -> bytes:
         byte_vals = token_ids - N_SPECIAL
@@ -168,13 +243,9 @@ class Engine:
     # ------------------------------------------------------------------
     def serve(self, requests: List[Request]) -> List[Result]:
         results: List[Optional[Result]] = [None] * len(requests)
-        wave: List[tuple] = []
-        for i, r in enumerate(requests):
-            ids, err, off, sanitized = self._ingress(r)
-            if ids is None:
-                results[i] = Result(ok=False, error=err, error_offset=off)
-            else:
-                wave.append((i, r, ids, off, sanitized))
+        # Packed multi-request ingress: one ragged launch per group of
+        # ``max_batch`` prompts (rejections land in ``results`` here).
+        wave = self._ingress_batch(requests, results)
 
         for w0 in range(0, len(wave), self.max_batch):
             chunk = wave[w0: w0 + self.max_batch]

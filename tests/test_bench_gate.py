@@ -1,0 +1,133 @@
+"""Unit tests for scripts/bench_gate.py (it shipped untested in PR 2).
+
+Covers regression detection (absolute mode), the machine-portable
+relative (fused/blockparallel ratio) mode, missing-cell failures, and
+malformed-baseline handling — a corrupt committed baseline must fail
+with a diagnosable message and exit code 2, never a traceback.
+"""
+
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+_SCRIPT = (pathlib.Path(__file__).resolve().parents[1]
+           / "scripts" / "bench_gate.py")
+_spec = importlib.util.spec_from_file_location("bench_gate", _SCRIPT)
+bench_gate = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(bench_gate)
+
+
+def _report(cells):
+    """cells: {(table, lang): {strategy: gchars_per_s}} -> bench JSON."""
+    records = [
+        {"table": t, "lang": lang, "strategy": s, "gchars_per_s": v}
+        for (t, lang), by_s in cells.items() for s, v in by_s.items()
+    ]
+    return {"langs": [], "n_chars": 0, "mode": "smoke", "records": records}
+
+
+def _write(tmp_path, name, obj):
+    p = tmp_path / name
+    p.write_text(obj if isinstance(obj, str) else json.dumps(obj))
+    return str(p)
+
+
+def _run(tmp_path, base, fresh, *extra):
+    bp = _write(tmp_path, "base.json", base)
+    fp = _write(tmp_path, "fresh.json", fresh)
+    return bench_gate.main(["--fresh", fp, "--baseline", bp, *extra])
+
+
+BASE = {("table5", "latin"): {"fused": 1.0, "blockparallel": 0.5},
+        ("table6", "arabic"): {"fused": 2.0, "blockparallel": 1.0}}
+
+
+def test_identical_runs_pass(tmp_path):
+    r = _report(BASE)
+    assert _run(tmp_path, r, r) == 0
+
+
+def test_within_threshold_passes(tmp_path):
+    fresh = {k: {s: v * 0.8 for s, v in d.items()} for k, d in BASE.items()}
+    assert _run(tmp_path, _report(BASE), _report(fresh)) == 0
+
+
+def test_regression_detected(tmp_path):
+    fresh = {k: dict(d) for k, d in BASE.items()}
+    fresh[("table5", "latin")]["fused"] = 0.5   # 2x slowdown > 30%
+    assert _run(tmp_path, _report(BASE), _report(fresh)) == 1
+
+
+def test_missing_cell_fails(tmp_path):
+    fresh = {k: d for k, d in BASE.items() if k[0] != "table6"}
+    assert _run(tmp_path, _report(BASE), _report(fresh)) == 1
+
+
+def test_improvement_passes(tmp_path):
+    fresh = {k: {s: v * 3.0 for s, v in d.items()} for k, d in BASE.items()}
+    assert _run(tmp_path, _report(BASE), _report(fresh)) == 0
+
+
+def test_relative_mode_ignores_uniform_machine_speed(tmp_path):
+    """A uniformly 4x slower machine fails absolute mode but passes
+    relative mode (the fused/blockparallel ratio is unchanged)."""
+    fresh = {k: {s: v / 4 for s, v in d.items()} for k, d in BASE.items()}
+    assert _run(tmp_path, _report(BASE), _report(fresh)) == 1
+    assert _run(tmp_path, _report(BASE), _report(fresh),
+                "--mode", "relative") == 0
+
+
+def test_relative_mode_catches_eroded_ratio(tmp_path):
+    """Relative mode goes red when only the fused advantage erodes."""
+    fresh = {k: dict(d) for k, d in BASE.items()}
+    fresh[("table6", "arabic")]["fused"] = 0.9   # ratio 2.0 -> 0.9
+    assert _run(tmp_path, _report(BASE), _report(fresh),
+                "--mode", "relative") == 1
+
+
+def test_threshold_flag_respected(tmp_path):
+    fresh = {k: {s: v * 0.55 for s, v in d.items()} for k, d in BASE.items()}
+    assert _run(tmp_path, _report(BASE), _report(fresh)) == 1
+    assert _run(tmp_path, _report(BASE), _report(fresh),
+                "--threshold", "0.5") == 0
+
+
+def test_baseline_without_gated_strategy_fails(tmp_path):
+    base = {("table5", "latin"): {"blockparallel": 1.0}}
+    assert _run(tmp_path, _report(base), _report(base)) == 1
+
+
+@pytest.mark.parametrize("bad", [
+    "not json at all{",
+    {"no_records": True},
+    {"records": {"not": "a list"}},
+    {"records": ["not-an-object"]},
+    {"records": [{"table": "t5", "lang": "latin"}]},          # missing keys
+    {"records": [{"table": "t5", "lang": "latin",
+                  "strategy": "fused", "gchars_per_s": "fast"}]},
+])
+def test_malformed_baseline_is_diagnosed(tmp_path, bad, capsys):
+    fresh = _report(BASE)
+    assert _run(tmp_path, bad, fresh) == bench_gate.EXIT_MALFORMED
+    assert "malformed or unreadable" in capsys.readouterr().err
+
+
+def test_malformed_fresh_is_diagnosed(tmp_path):
+    assert _run(tmp_path, _report(BASE), "{]") == bench_gate.EXIT_MALFORMED
+
+
+def test_binary_baseline_is_diagnosed(tmp_path):
+    bp = tmp_path / "base.json"
+    bp.write_bytes(b"\x80\x81\xfe\xff")   # non-UTF-8: UnicodeDecodeError
+    fp = _write(tmp_path, "fresh.json", _report(BASE))
+    rc = bench_gate.main(["--fresh", fp, "--baseline", str(bp)])
+    assert rc == bench_gate.EXIT_MALFORMED
+
+
+def test_unreadable_file_is_diagnosed(tmp_path):
+    fp = _write(tmp_path, "fresh.json", _report(BASE))
+    rc = bench_gate.main(
+        ["--fresh", fp, "--baseline", str(tmp_path / "missing.json")])
+    assert rc == bench_gate.EXIT_MALFORMED

@@ -1,0 +1,487 @@
+"""Differential fuzz harness: every transcoder cell vs CPython codecs.
+
+Seeded random + mutated corpora are checked **byte-exactly** against
+CPython's ``codecs`` machinery across every
+(direction x strategy x errors) cell, including the ragged packed-batch
+path with per-document statuses:
+
+  * valid streams: ``buffer[:count]`` must equal the CPython transcode
+    bit for bit, ``status`` must be -1;
+  * invalid streams under ``errors="strict"``: ``status`` must equal
+    Python's ``UnicodeDecodeError.start`` (unit-relative for UTF-16),
+    and every strategy must agree with the blockparallel reference on
+    (buffer, count) — the speculative output is defined cross-strategy,
+    not by CPython;
+  * invalid streams under ``errors="replace"``: the output must equal
+    CPython's ``errors="replace"`` transcode bit for bit (U+FFFD per
+    maximal subpart) and ``status`` the first substitution offset.
+
+The seed is fixed (override with ``REPRO_FUZZ_SEED``) so CI runs are
+reproducible; the boundary-adversarial generators place truncated leads
+and surrogate pairs so they straddle VMEM-tile boundaries AND packed
+document boundaries, with empty and all-ASCII documents mixed into the
+same ragged batch.
+
+The ``parity`` tests are the interpret-vs-compiled gate: on CPU they pin
+the Pallas interpreter kernels to the XLA-compiled blockparallel
+reference; on a TPU backend the same tests additionally run the
+Mosaic-compiled kernels against the interpreter.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core import transcode as tc
+from repro.data import synthetic
+from repro.kernels import fused_transcode as ft
+from repro.kernels import runtime
+
+SEED = int(os.environ.get("REPRO_FUZZ_SEED", "20260801"))
+
+CAP8 = 1536    # fixed single-doc capacities: one compilation per cell
+CAP16 = 1280
+
+LANGS = ["latin", "arabic", "chinese", "emoji", "korean", "hebrew"]
+
+# Bytes that exercise every UTF-8 error class: continuations, C0/C1
+# (never valid leads), constrained-second-byte leads (E0/ED/F0/F4), F5+.
+ADVERSARIAL8 = np.array([0x41, 0x7F, 0x80, 0x9F, 0xA0, 0xBF, 0xC0, 0xC1,
+                         0xC2, 0xDF, 0xE0, 0xED, 0xEE, 0xF0, 0xF4, 0xF5,
+                         0xFF, 0x90, 0x8F, 0x20], np.uint8)
+
+
+# ---------------------------------------------------------------------------
+# CPython oracles
+
+
+def _py8(raw: bytes):
+    """(utf16_units, exc.start) for a UTF-8 stream (-1 when valid)."""
+    try:
+        return (np.frombuffer(raw.decode("utf-8").encode("utf-16-le"),
+                              np.uint16), -1)
+    except UnicodeDecodeError as e:
+        return None, e.start
+
+
+def _py8_replace(raw: bytes):
+    return np.frombuffer(
+        raw.decode("utf-8", "replace").encode("utf-16-le"), np.uint16)
+
+
+def _py16(units: np.ndarray):
+    """(utf8_bytes, exc.start // 2) for a UTF-16LE stream."""
+    try:
+        return (np.frombuffer(
+            units.astype(np.uint16).tobytes().decode("utf-16-le")
+            .encode("utf-8"), np.uint8), -1)
+    except UnicodeDecodeError as e:
+        return None, e.start // 2
+
+
+def _py16_replace(units: np.ndarray):
+    return np.frombuffer(
+        units.astype(np.uint16).tobytes().decode("utf-16-le", "replace")
+        .encode("utf-8"), np.uint8)
+
+
+# ---------------------------------------------------------------------------
+# Corpus generators
+
+
+def _utf8_case(rng, trial, cap=CAP8):
+    """One seeded UTF-8 stream: valid, mutated-valid, pure-random or
+    adversarial-alphabet, in rotation."""
+    buf = np.zeros(cap, np.uint8)
+    kind = trial % 4
+    if kind in (0, 1):
+        b = synthetic.utf8_array(LANGS[trial % len(LANGS)], 400,
+                                 seed=SEED + trial)[:cap]
+        buf[: len(b)] = b
+        n = len(b)
+        if kind == 1:       # mutate 1-4 bytes of a valid stream
+            k = int(rng.integers(1, 5))
+            buf[rng.integers(0, max(n, 1), k)] = rng.integers(0, 256, k)
+    elif kind == 2:
+        n = int(rng.integers(1, cap))
+        buf[:n] = rng.integers(0, 256, n)
+    else:
+        n = int(rng.integers(1, 96))
+        buf[:n] = rng.choice(ADVERSARIAL8, n)
+    return buf, n
+
+
+def _utf16_case(rng, trial, cap=CAP16):
+    buf = np.zeros(cap, np.uint16)
+    kind = trial % 3
+    if kind == 0:
+        u = synthetic.utf16_units(LANGS[trial % len(LANGS)], 400,
+                                  seed=SEED + trial)[:cap]
+        buf[: len(u)] = u
+        n = len(u)
+    elif kind == 1:
+        u = synthetic.utf16_units("emoji", 300, seed=SEED + trial)[:cap]
+        buf[: len(u)] = u
+        n = len(u)
+        k = int(rng.integers(1, 4))   # surrogate-heavy corruption
+        buf[rng.integers(0, max(n, 1), k)] = rng.integers(0xD800, 0xE000, k)
+    else:
+        n = int(rng.integers(1, cap))
+        buf[:n] = rng.integers(0, 1 << 16, n)
+    return buf, n
+
+
+def boundary_documents8():
+    """UTF-8 documents engineered so multi-byte characters and truncated
+    leads straddle (a) the 1024-byte VMEM tile boundary inside one
+    document and (b) the packed document boundary — plus empty and
+    all-ASCII documents mixed in, per the ragged batch contract."""
+    docs = []
+    probes = [b"\xf0\x9f\x92\xa9", b"\xe4\xb8\xad", b"\xc3\xa9",
+              b"\xf0\x9f\x92", b"\xe4\xb8", b"\xc3", b"\xed\xa0\x80"]
+    tile = packing.TILE
+    for k, probe in enumerate(probes):
+        # (a) straddle this doc's own internal tile boundary
+        pos = tile - 2 + (k % 4)
+        doc = np.full(tile + 64, 0x41, np.uint8)
+        doc[pos: pos + len(probe)] = np.frombuffer(probe, np.uint8)
+        docs.append(doc)
+        # (b) end the document EXACTLY at its tile boundary with the
+        # probe's tail truncated by the document end: the next packed
+        # document starts in the adjacent tile, and its leading bytes
+        # must never complete this document's sequence.
+        doc = np.full(tile, 0x41, np.uint8)
+        doc[tile - len(probe):] = np.frombuffer(probe, np.uint8)
+        docs.append(doc)
+        # ...followed by a document that BEGINS with continuation bytes
+        # (the exact bytes that would complete the truncated lead).
+        docs.append(np.frombuffer(b"\xa9\x80\x80 tail", np.uint8))
+    docs.append(np.zeros(0, np.uint8))                       # empty
+    docs.append(np.full(200, 0x2E, np.uint8))                # all-ASCII
+    docs.append(np.zeros(0, np.uint8))                       # empty again
+    return docs
+
+
+def boundary_documents16():
+    """UTF-16 analogue: surrogate pairs straddling tile boundaries and
+    lone high surrogates truncated at a document end whose packed
+    neighbour starts with a low surrogate."""
+    tile = packing.TILE
+    docs = []
+    # pair straddles the doc's internal tile boundary
+    doc = np.full(tile + 32, 0x41, np.uint16)
+    doc[tile - 1: tile + 1] = [0xD83C, 0xDF89]
+    docs.append(doc)
+    # doc ends at its tile boundary on a lone high surrogate...
+    doc = np.full(tile, 0x41, np.uint16)
+    doc[-1] = 0xD800
+    docs.append(doc)
+    # ...next doc starts with the low half that must NOT pair with it.
+    docs.append(np.frombuffer(
+        np.array([0xDC00, 0x42, 0x43], np.uint16).tobytes(),
+        np.uint16))
+    docs.append(np.zeros(0, np.uint16))                      # empty
+    docs.append(np.full(100, 0x41, np.uint16))               # all-ASCII
+    return docs
+
+
+# ---------------------------------------------------------------------------
+# Single-document cells: (strategy x errors) vs CPython
+
+
+def _check8_strict(buf, n, strategy):
+    want, want_pos = _py8(bytes(buf[:n]))
+    x = jnp.asarray(buf if strategy == "fused" else buf.astype(np.int32))
+    out, cnt, status = tc.transcode_utf8_to_utf16(x, n, strategy=strategy)
+    assert int(status) == want_pos
+    got = np.asarray(out)[: min(int(cnt), out.shape[0])]
+    if want_pos < 0:
+        assert int(cnt) == len(want)
+        assert np.array_equal(got, want)
+    elif strategy != "windowed":
+        # The speculative output on an invalid stream is defined
+        # cross-strategy for the block-parallel family; the serial
+        # windowed walker resynchronizes differently and only pins
+        # ``status`` there.
+        ref = tc.utf8_to_utf16(jnp.asarray(buf.astype(np.int32)), n)
+        assert int(cnt) == int(ref.count)
+        assert np.array_equal(got, np.asarray(ref.buffer)[: len(got)])
+
+
+def _check8_replace(buf, n, strategy):
+    want = _py8_replace(bytes(buf[:n]))
+    _, want_pos = _py8(bytes(buf[:n]))
+    x = jnp.asarray(buf if strategy == "fused" else buf.astype(np.int32))
+    out, cnt, status = tc.transcode_utf8_to_utf16(x, n, strategy=strategy,
+                                                  errors="replace")
+    assert int(status) == want_pos
+    assert int(cnt) == len(want)
+    assert np.array_equal(np.asarray(out)[: int(cnt)], want)
+
+
+@pytest.mark.parametrize("strategy", ["fused", "blockparallel"])
+def test_differential_utf8_to_utf16(strategy):
+    rng = np.random.default_rng(SEED)
+    for trial in range(20):
+        buf, n = _utf8_case(rng, trial)
+        _check8_strict(buf, n, strategy)
+        _check8_replace(buf, n, strategy)
+
+
+def test_differential_utf8_to_utf16_windowed():
+    """The serial paper baseline: strict-only cell of the matrix."""
+    rng = np.random.default_rng(SEED + 1)
+    for trial in range(8):
+        buf, n = _utf8_case(rng, trial)
+        _check8_strict(buf, n, "windowed")
+
+
+def _check16_strict(buf, n, strategy):
+    want, want_pos = _py16(buf[:n])
+    x = jnp.asarray(buf if strategy == "fused" else buf.astype(np.int32))
+    out, cnt, status = tc.transcode_utf16_to_utf8(x, n, strategy=strategy)
+    assert int(status) == want_pos
+    got = np.asarray(out)[: min(int(cnt), out.shape[0])]
+    if want_pos < 0:
+        assert int(cnt) == len(want)
+        assert np.array_equal(got, want)
+    elif strategy != "windowed":
+        ref = tc.utf16_to_utf8(jnp.asarray(buf.astype(np.int32)), n)
+        assert int(cnt) == int(ref.count)
+        assert np.array_equal(got, np.asarray(ref.buffer)[: len(got)])
+
+
+def _check16_replace(buf, n, strategy):
+    want = _py16_replace(buf[:n])
+    _, want_pos = _py16(buf[:n])
+    x = jnp.asarray(buf if strategy == "fused" else buf.astype(np.int32))
+    out, cnt, status = tc.transcode_utf16_to_utf8(x, n, strategy=strategy,
+                                                  errors="replace")
+    assert int(status) == want_pos
+    assert int(cnt) == len(want)
+    assert np.array_equal(np.asarray(out)[: int(cnt)], want)
+
+
+@pytest.mark.parametrize("strategy", ["fused", "blockparallel"])
+def test_differential_utf16_to_utf8(strategy):
+    rng = np.random.default_rng(SEED + 2)
+    for trial in range(16):
+        buf, n = _utf16_case(rng, trial)
+        _check16_strict(buf, n, strategy)
+        _check16_replace(buf, n, strategy)
+
+
+def test_differential_utf16_to_utf8_windowed():
+    rng = np.random.default_rng(SEED + 3)
+    for trial in range(6):
+        buf, n = _utf16_case(rng, trial)
+        _check16_strict(buf, n, "windowed")
+
+
+# ---------------------------------------------------------------------------
+# Ragged packed-batch cells: per-document statuses vs CPython
+
+
+def _check_ragged8(docs, errors):
+    pk = packing.pack_documents(docs, dtype=np.uint8)
+    res = tc.ragged_utf8_to_utf16(pk.data, pk.offsets, pk.lengths,
+                                  errors=errors)
+    for d, doc in enumerate(docs):
+        raw = bytes(np.asarray(doc, np.uint8))
+        _, want_pos = _py8(raw)
+        assert int(res.statuses[d]) == want_pos, d
+        lo = int(res.offsets[d])
+        got = np.asarray(res.buffer)[lo: lo + int(res.counts[d])]
+        if errors == "replace":
+            want = _py8_replace(raw)
+            assert int(res.counts[d]) == len(want), d
+            assert np.array_equal(got, want), d
+        elif want_pos < 0:
+            want, _ = _py8(raw)
+            assert int(res.counts[d]) == len(want), d
+            assert np.array_equal(got, want), d
+        # Acceptance: bit-identical to the per-document fused transcoder
+        # (buffer, count, status) on the fuzz corpus.  Capacity = the
+        # doc's tile span, so single-doc compilations are shared.
+        span = max(int(pk.offsets[d + 1] - pk.offsets[d]), 1)
+        buf = np.zeros(span, np.uint8)
+        buf[: len(raw)] = np.frombuffer(raw, np.uint8)
+        single = ft.utf8_to_utf16_fused(jnp.asarray(buf), len(raw),
+                                        errors=errors)
+        assert int(res.counts[d]) == int(single.count), d
+        assert int(res.statuses[d]) == int(single.status), d
+        k = min(int(single.count), span)
+        assert np.array_equal(got[:k], np.asarray(single.buffer)[:k]), d
+
+
+def _check_ragged16(docs, errors):
+    pk = packing.pack_documents(docs, dtype=np.uint16)
+    res = tc.ragged_utf16_to_utf8(pk.data, pk.offsets, pk.lengths,
+                                  errors=errors)
+    for d, doc in enumerate(docs):
+        u = np.asarray(doc, np.uint16)
+        _, want_pos = _py16(u)
+        assert int(res.statuses[d]) == want_pos, d
+        lo = int(res.offsets[d])
+        got = np.asarray(res.buffer)[lo: lo + int(res.counts[d])]
+        if errors == "replace":
+            want = _py16_replace(u)
+            assert int(res.counts[d]) == len(want), d
+            assert np.array_equal(got, want), d
+        elif want_pos < 0:
+            want, _ = _py16(u)
+            assert int(res.counts[d]) == len(want), d
+            assert np.array_equal(got, want), d
+        span = max(int(pk.offsets[d + 1] - pk.offsets[d]), 1)
+        buf = np.zeros(span, np.uint16)
+        buf[: len(u)] = u
+        single = ft.utf16_to_utf8_fused(jnp.asarray(buf), len(u),
+                                        errors=errors)
+        assert int(res.counts[d]) == int(single.count), d
+        assert int(res.statuses[d]) == int(single.status), d
+        k = min(int(single.count), 3 * span)
+        assert np.array_equal(got[:k], np.asarray(single.buffer)[:k]), d
+
+
+@pytest.mark.parametrize("errors", ["strict", "replace"])
+def test_differential_ragged_utf8_fuzz(errors):
+    rng = np.random.default_rng(SEED + 4)
+    for batch in range(4):
+        docs = []
+        for t in range(6):
+            buf, n = _utf8_case(rng, batch * 6 + t, cap=1400)
+            docs.append(buf[:n])
+        docs.insert(2, np.zeros(0, np.uint8))            # empty mixed in
+        docs.insert(4, np.full(77, 0x41, np.uint8))      # all-ASCII
+        _check_ragged8(docs, errors)
+
+
+@pytest.mark.parametrize("errors", ["strict", "replace"])
+def test_differential_ragged_utf16_fuzz(errors):
+    rng = np.random.default_rng(SEED + 5)
+    for batch in range(3):
+        docs = []
+        for t in range(5):
+            buf, n = _utf16_case(rng, batch * 5 + t, cap=1200)
+            docs.append(buf[:n])
+        docs.insert(1, np.zeros(0, np.uint16))
+        _check_ragged16(docs, errors)
+
+
+@pytest.mark.parametrize("errors", ["strict", "replace"])
+def test_differential_ragged_boundary_adversarial_utf8(errors):
+    _check_ragged8(boundary_documents8(), errors)
+
+
+@pytest.mark.parametrize("errors", ["strict", "replace"])
+def test_differential_ragged_boundary_adversarial_utf16(errors):
+    _check_ragged16(boundary_documents16(), errors)
+
+
+def test_boundary_probes_also_hit_single_doc_strategies():
+    """The tile-straddling probes, replayed through every single-doc
+    strategy (padding each doc to the shared fixed capacity)."""
+    for doc in boundary_documents8():
+        n = len(doc)
+        if n == 0 or n > CAP8:
+            continue
+        buf = np.zeros(CAP8, np.uint8)
+        buf[:n] = doc
+        for strategy in ("fused", "blockparallel"):
+            _check8_strict(buf, n, strategy)
+            _check8_replace(buf, n, strategy)
+
+
+# ---------------------------------------------------------------------------
+# Interpret-vs-compiled parity (the CI parity job runs `-k parity`).
+#
+# On CPU there is no Mosaic: parity means the Pallas INTERPRETER kernels
+# against the XLA-COMPILED blockparallel reference (both jitted).  On a
+# TPU backend the same tests additionally pin the Mosaic-compiled
+# kernels (interpret=False) to the interpreter (interpret=True).
+
+
+def _on_tpu():
+    return jax.default_backend() == "tpu"
+
+
+def test_parity_resolution_matches_backend():
+    assert runtime.resolve_interpret(None) == (not _on_tpu())
+
+
+@pytest.mark.parametrize("errors", ["strict", "replace"])
+def test_parity_utf8_interpret_vs_compiled(errors):
+    rng = np.random.default_rng(SEED + 6)
+    for trial in range(8):
+        buf, n = _utf8_case(rng, trial)
+        interp = ft.utf8_to_utf16_fused(jnp.asarray(buf), n, errors=errors,
+                                        interpret=True)
+        # Compiled reference: the pure-jnp strategy under jit.
+        ref = tc.utf8_to_utf16(jnp.asarray(buf.astype(np.int32)), n,
+                               errors=errors)
+        assert int(interp.count) == int(ref.count), trial
+        assert int(interp.status) == int(ref.status), trial
+        k = min(int(interp.count), CAP8)
+        assert np.array_equal(np.asarray(interp.buffer)[:k],
+                              np.asarray(ref.buffer)[:k]), trial
+        if _on_tpu():   # pragma: no cover - TPU-only branch
+            comp = ft.utf8_to_utf16_fused(jnp.asarray(buf), n,
+                                          errors=errors, interpret=False)
+            assert int(comp.count) == int(interp.count)
+            assert int(comp.status) == int(interp.status)
+            assert np.array_equal(np.asarray(comp.buffer),
+                                  np.asarray(interp.buffer))
+
+
+@pytest.mark.parametrize("errors", ["strict", "replace"])
+def test_parity_utf16_interpret_vs_compiled(errors):
+    rng = np.random.default_rng(SEED + 7)
+    for trial in range(6):
+        buf, n = _utf16_case(rng, trial)
+        interp = ft.utf16_to_utf8_fused(jnp.asarray(buf), n, errors=errors,
+                                        interpret=True)
+        ref = tc.utf16_to_utf8(jnp.asarray(buf.astype(np.int32)), n,
+                               errors=errors)
+        assert int(interp.count) == int(ref.count), trial
+        assert int(interp.status) == int(ref.status), trial
+        k = min(int(interp.count), 3 * CAP16)
+        assert np.array_equal(np.asarray(interp.buffer)[:k],
+                              np.asarray(ref.buffer)[:k]), trial
+        if _on_tpu():   # pragma: no cover - TPU-only branch
+            comp = ft.utf16_to_utf8_fused(jnp.asarray(buf), n,
+                                          errors=errors, interpret=False)
+            assert int(comp.count) == int(interp.count)
+            assert int(comp.status) == int(interp.status)
+            assert np.array_equal(np.asarray(comp.buffer),
+                                  np.asarray(interp.buffer))
+
+
+def test_parity_ragged_interpret_vs_compiled():
+    """Ragged packed path: interpreter kernels vs the per-document
+    compiled reference, per document (and Mosaic vs interpreter on TPU)."""
+    from repro.kernels import ragged_transcode as rt
+    docs = boundary_documents8()
+    pk = packing.pack_documents(docs, dtype=np.uint8)
+    interp = rt.utf8_to_utf16_ragged(pk.data, pk.offsets, pk.lengths,
+                                     interpret=True)
+    for d, doc in enumerate(docs):
+        n = len(doc)
+        buf = np.zeros(max(n, 1), np.uint8)
+        buf[:n] = doc
+        ref = tc.utf8_to_utf16(jnp.asarray(buf.astype(np.int32)), n)
+        assert int(interp.counts[d]) == int(ref.count), d
+        assert int(interp.statuses[d]) == int(ref.status), d
+    if _on_tpu():   # pragma: no cover - TPU-only branch
+        comp = rt.utf8_to_utf16_ragged(pk.data, pk.offsets, pk.lengths,
+                                       interpret=False)
+        assert np.array_equal(np.asarray(comp.buffer),
+                              np.asarray(interp.buffer))
+        assert np.array_equal(np.asarray(comp.counts),
+                              np.asarray(interp.counts))
+        assert np.array_equal(np.asarray(comp.statuses),
+                              np.asarray(interp.statuses))

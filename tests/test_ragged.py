@@ -1,0 +1,313 @@
+"""Ragged packed-batch transcode: packing layout, device ownership map,
+bit-identity with the per-document fused transcoder, batch entry points
+and the bounded per-capacity vmap cache."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core import transcode as tc
+from repro.data import pipeline, synthetic
+from repro.kernels import fused_transcode as ft
+
+TILE = packing.TILE
+
+
+def _docs_mixed():
+    """The adversarial batch shape: empty, all-ASCII, sub-tile,
+    multi-tile and malformed documents in one ragged batch."""
+    return [
+        synthetic.utf8_array("latin", 200, seed=1),          # all-ASCII
+        np.zeros(0, np.uint8),                               # empty
+        synthetic.utf8_array("emoji", 700, seed=2),          # multi-tile
+        synthetic.utf8_array("chinese", 1500, seed=3),       # multi-tile
+        np.frombuffer(b"hi \xe4\xb8 there", np.uint8),       # malformed
+        synthetic.utf8_array("arabic", 40, seed=4),          # sub-tile
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Packing layout
+
+
+def test_pack_documents_layout():
+    docs = _docs_mixed()
+    pk = packing.pack_documents(docs)
+    assert pk.n_docs == len(docs)
+    assert pk.offsets[0] == 0
+    assert np.all(pk.offsets % TILE == 0)          # tile-aligned starts
+    assert np.all(np.diff(pk.offsets) >= 0)
+    for d, doc in enumerate(docs):
+        n = len(doc)
+        assert pk.lengths[d] == n
+        lo, hi = pk.offsets[d], pk.offsets[d + 1]
+        assert hi - lo == -(-n // TILE) * TILE     # exact tile span
+        assert np.array_equal(pk.data[lo: lo + n], np.asarray(doc))
+        assert not pk.data[lo + n: hi].any()       # zero-filled slack
+
+
+def test_pack_documents_fixed_geometry():
+    docs = [b"ab", b""]
+    pk = packing.pack_documents(docs, doc_tiles=2, pad_to_docs=4)
+    assert pk.n_docs == 4
+    assert np.array_equal(pk.offsets, np.arange(5) * 2 * TILE)
+    assert np.array_equal(pk.lengths, [2, 0, 0, 0])
+    with pytest.raises(ValueError):
+        packing.pack_documents([np.zeros(TILE + 1, np.uint8)], doc_tiles=1)
+    with pytest.raises(ValueError):
+        packing.pack_documents(docs, pad_to_docs=1)
+
+
+def test_pack_documents_bytes_and_dtype():
+    pk = packing.pack_documents([b"abc"], dtype=np.uint8)
+    assert pk.data.dtype == np.uint8 and pk.lengths[0] == 3
+    pk16 = packing.pack_documents([np.array([0x41], np.uint16)])
+    assert pk16.data.dtype == np.uint16
+
+
+def test_unpack_results_clamps_to_capacity():
+    buf = np.arange(8, dtype=np.uint16)
+    docs = packing.unpack_results(buf, np.array([0, 4, 8]),
+                                  np.array([4, 100]))
+    assert np.array_equal(docs[0], [0, 1, 2, 3])
+    assert np.array_equal(docs[1], [4, 5, 6, 7])   # clamped, no IndexError
+
+
+# ---------------------------------------------------------------------------
+# Device ownership map
+
+
+def test_tile_ownership_map():
+    # docs: 1 tile, EMPTY, 2 tiles, 1 tile  ->  offsets in tiles: 0,1,1,3,4
+    offsets = np.array([0, 1, 1, 3, 4]) * TILE
+    lengths = np.array([TILE, 0, TILE + 5, 7], np.int32)
+    tile_doc, tile_end, same_prev, same_next = packing.tile_ownership(
+        jnp.asarray(offsets), jnp.asarray(lengths), nblk=4, block=TILE)
+    assert np.array_equal(tile_doc, [0, 2, 2, 3])  # empty doc owns no tile
+    assert np.array_equal(tile_end,
+                          [TILE, 2 * TILE + 5, 2 * TILE + 5, 3 * TILE + 7])
+    # Neighbour flags: only the two tiles of doc 2 see each other.
+    assert np.array_equal(same_prev, [0, 0, 1, 0])
+    assert np.array_equal(same_next, [0, 1, 0, 0])
+
+
+def test_tile_ownership_trailing_pad_tile_is_dead():
+    # A pad tile past the last document clamps to the last doc but its
+    # tile_end precedes it: no lane can be live.
+    offsets = np.array([0, TILE])
+    lengths = np.array([10], np.int32)
+    tile_doc, tile_end, _, _ = packing.tile_ownership(
+        jnp.asarray(offsets), jnp.asarray(lengths), nblk=2, block=TILE)
+    assert int(tile_doc[1]) == 0
+    assert int(tile_end[1]) == 10 < TILE  # every lane of tile 1 is dead
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity with the per-document fused transcoder
+
+
+def _assert_doc_equal(res, d, single, span):
+    """Ragged doc d must reproduce the single-doc fused TranscodeResult:
+    same count, same status, same buffer prefix (the single-doc buffer is
+    capacity-clamped, so compare min(count, span) elements)."""
+    assert int(res.counts[d]) == int(single.count), d
+    assert int(res.statuses[d]) == int(single.status), d
+    k = min(int(single.count), span)
+    lo = int(res.offsets[d])
+    got = np.asarray(res.buffer)[lo: lo + k]
+    want = np.asarray(single.buffer)[:k]
+    assert np.array_equal(got, want), d
+
+
+@pytest.mark.parametrize("errors", ["strict", "replace"])
+def test_ragged_utf8_matches_per_doc_fused(errors):
+    docs = _docs_mixed()
+    pk = packing.pack_documents(docs)
+    res = tc.ragged_utf8_to_utf16(pk.data, pk.offsets, pk.lengths,
+                                  errors=errors)
+    # Dense output: offsets are the cumsum of counts.
+    assert np.array_equal(np.asarray(res.offsets),
+                          np.concatenate([[0], np.cumsum(res.counts)]))
+    for d, doc in enumerate(docs):
+        n = len(doc)
+        buf = np.zeros(max(n, 1), np.uint8)
+        buf[:n] = doc
+        single = ft.utf8_to_utf16_fused(jnp.asarray(buf), n, errors=errors)
+        _assert_doc_equal(res, d, single, max(n, 1))
+
+
+@pytest.mark.parametrize("errors", ["strict", "replace"])
+def test_ragged_utf16_matches_per_doc_fused(errors):
+    docs = [
+        synthetic.utf16_units("korean", 400, seed=1),
+        np.zeros(0, np.uint16),
+        # surrogate pair straddling the doc's own tile boundary
+        np.concatenate([np.full(1023, 0xE000, np.uint16),
+                        np.array([0xD800, 0xDC00], np.uint16),
+                        np.full(50, 0x41, np.uint16)]),
+        np.array([0x41, 0xD800, 0x42], np.uint16),   # lone surrogate
+        synthetic.utf16_units("emoji", 700, seed=5),
+    ]
+    pk = packing.pack_documents(docs, dtype=np.uint16)
+    res = tc.ragged_utf16_to_utf8(pk.data, pk.offsets, pk.lengths,
+                                  errors=errors)
+    for d, doc in enumerate(docs):
+        n = len(doc)
+        buf = np.zeros(max(n, 1), np.uint16)
+        buf[:n] = doc
+        single = ft.utf16_to_utf8_fused(jnp.asarray(buf), n, errors=errors)
+        _assert_doc_equal(res, d, single, 3 * max(n, 1))
+
+
+def test_ragged_scan_matches_strict_transcode():
+    docs = _docs_mixed()
+    pk = packing.pack_documents(docs)
+    res = tc.ragged_utf8_to_utf16(pk.data, pk.offsets, pk.lengths)
+    counts, statuses = tc.ragged_scan_utf8(pk.data, pk.offsets, pk.lengths)
+    assert np.array_equal(np.asarray(counts), np.asarray(res.counts))
+    assert np.array_equal(np.asarray(statuses), np.asarray(res.statuses))
+    u16docs = [synthetic.utf16_units("latin", 100, seed=1),
+               np.array([0xDC00], np.uint16)]
+    pk16 = packing.pack_documents(u16docs, dtype=np.uint16)
+    res16 = tc.ragged_utf16_to_utf8(pk16.data, pk16.offsets, pk16.lengths)
+    c16, s16 = tc.ragged_scan_utf16(pk16.data, pk16.offsets, pk16.lengths)
+    assert np.array_equal(np.asarray(c16), np.asarray(res16.counts))
+    assert np.array_equal(np.asarray(s16), np.asarray(res16.statuses))
+
+
+def test_ragged_garbage_beyond_length_is_masked():
+    """Bytes past a document's logical length must not leak into its own
+    or its neighbour's analysis (the packed analogue of n_valid)."""
+    pk = packing.pack_documents([b"ok", b"fine"])
+    data = np.asarray(pk.data).copy()
+    data[2: TILE] = 0xFF            # garbage in doc 0's slack
+    res = tc.ragged_utf8_to_utf16(jnp.asarray(data), pk.offsets, pk.lengths)
+    assert np.array_equal(np.asarray(res.statuses), [-1, -1])
+    assert np.array_equal(np.asarray(res.counts), [2, 4])
+
+
+def test_ragged_rejects_malformed_batch_args():
+    data = jnp.zeros((2 * TILE,), jnp.uint8)
+    with pytest.raises(ValueError):
+        tc.ragged_utf8_to_utf16(data, jnp.zeros((1,), jnp.int32),
+                                jnp.zeros((0,), jnp.int32))
+    with pytest.raises(ValueError):
+        tc.ragged_utf8_to_utf16(data, jnp.asarray([0, TILE]),
+                                jnp.asarray([5, 5]))
+    with pytest.raises(ValueError):
+        tc.ragged_utf8_to_utf16(data, jnp.asarray([0, TILE]),
+                                jnp.asarray([5]), errors="ignore")
+    # Layout invariants (silently wrong results otherwise): mid-tile
+    # start, nonzero first offset, decreasing offsets, oversize length.
+    with pytest.raises(ValueError):
+        tc.ragged_utf8_to_utf16(data, jnp.asarray([0, 100, 2 * TILE]),
+                                jnp.asarray([100, 1900]))
+    with pytest.raises(ValueError):
+        tc.ragged_utf8_to_utf16(data, jnp.asarray([TILE, 2 * TILE]),
+                                jnp.asarray([5]))
+    with pytest.raises(ValueError):
+        tc.ragged_utf8_to_utf16(data, jnp.asarray([0, 2 * TILE, TILE]),
+                                jnp.asarray([5, 5]))
+    with pytest.raises(ValueError):
+        tc.ragged_utf8_to_utf16(data, jnp.asarray([0, TILE, 2 * TILE]),
+                                jnp.asarray([TILE + 1, 5]))
+    # Truncated data buffer: trailing docs would silently read as empty.
+    with pytest.raises(ValueError):
+        tc.ragged_utf8_to_utf16(data[:TILE],
+                                jnp.asarray([0, TILE, 2 * TILE]),
+                                jnp.asarray([5, 50]))
+
+
+def test_ragged_single_launch_per_pass_jaxpr():
+    """The whole batch must transcode in ONE count + ONE write launch
+    (the tentpole claim), vs one pair per document under vmap."""
+    import jax
+    from tests.test_fused_transcode import _pallas_eqns
+    pk = packing.pack_documents(_docs_mixed())
+    jaxpr = jax.make_jaxpr(
+        lambda d, o, l: tc.ragged_utf8_to_utf16(d, o, l))(
+            jnp.asarray(pk.data), jnp.asarray(pk.offsets),
+            jnp.asarray(pk.lengths)).jaxpr
+    assert len(_pallas_eqns(jaxpr)) == 2      # count + write, batch-wide
+    jaxpr_scan = jax.make_jaxpr(
+        lambda d, o, l: tc.ragged_scan_utf8(d, o, l))(
+            jnp.asarray(pk.data), jnp.asarray(pk.offsets),
+            jnp.asarray(pk.lengths)).jaxpr
+    assert len(_pallas_eqns(jaxpr_scan)) == 1  # count pass only
+
+
+# ---------------------------------------------------------------------------
+# Batch entry points (strategy="packed" vs the vmap reference)
+
+
+def test_batch_entries_packed_equals_vmap():
+    L = 1536
+    docs = np.zeros((4, L), np.uint8)
+    lens = []
+    for i, lang in enumerate(["latin", "chinese", "emoji", "arabic"]):
+        d = synthetic.utf8_array(lang, 300, seed=i)[:L]
+        docs[i, : len(d)] = d
+        lens.append(len(d))
+    lens = np.asarray(lens, np.int32)
+    pk = pipeline.batch_utf8_to_utf16(docs, lens)              # packed
+    vm = pipeline.batch_utf8_to_utf16(docs, lens, strategy="vmap")
+    assert pk.buffer.shape == vm.buffer.shape == (4, L)
+    assert np.array_equal(np.asarray(pk.buffer), np.asarray(vm.buffer))
+    assert np.array_equal(np.asarray(pk.count), np.asarray(vm.count))
+    assert np.array_equal(np.asarray(pk.status), np.asarray(vm.status))
+
+    units = np.zeros((2, 1024), np.uint16)
+    ulens = []
+    for i, lang in enumerate(["korean", "latin"]):
+        d = synthetic.utf16_units(lang, 300, seed=i)[:1024]
+        units[i, : len(d)] = d
+        ulens.append(len(d))
+    ulens = np.asarray(ulens, np.int32)
+    pk = pipeline.batch_utf16_to_utf8(units, ulens)
+    vm = pipeline.batch_utf16_to_utf8(units, ulens, strategy="vmap")
+    assert pk.buffer.shape == vm.buffer.shape == (2, 3 * 1024)
+    assert np.array_equal(np.asarray(pk.buffer), np.asarray(vm.buffer))
+    assert np.array_equal(np.asarray(pk.count), np.asarray(vm.count))
+    assert np.array_equal(np.asarray(pk.status), np.asarray(vm.status))
+
+
+def test_batch_entries_replace_policy_threads_through():
+    docs = np.zeros((2, 1024), np.uint8)
+    docs[0, :3] = [0x61, 0xFF, 0x62]     # a <bad> b
+    docs[1, :2] = [0xC3, 0xA9]           # é
+    lens = np.asarray([3, 2], np.int32)
+    res = pipeline.batch_utf8_to_utf16(docs, lens, errors="replace")
+    want0 = np.frombuffer(
+        b"a\xffb".decode("utf-8", "replace").encode("utf-16-le"), np.uint16)
+    assert np.array_equal(np.asarray(res.buffer[0])[:3], want0)
+    assert int(res.status[0]) == 1 and int(res.status[1]) == -1
+
+
+# ---------------------------------------------------------------------------
+# _BATCH_CACHE: keyed per-capacity, LRU-bounded
+
+
+def test_batch_cache_keyed_per_capacity_and_bounded():
+    pipeline._BATCH_CACHE.clear()
+    f1 = pipeline._batched("8to16", "fused", True, "strict", 1024)
+    f2 = pipeline._batched("8to16", "fused", True, "strict", 1024)
+    assert f1 is f2                       # same capacity -> cached callable
+    f3 = pipeline._batched("8to16", "fused", True, "strict", 2048)
+    assert f3 is not f1                   # capacity is part of the key
+    assert len(pipeline._BATCH_CACHE) == 2
+    for cap in range(3 * pipeline._BATCH_CACHE_MAX):
+        pipeline._batched("8to16", "fused", True, "strict", 4096 + cap)
+    assert len(pipeline._BATCH_CACHE) <= pipeline._BATCH_CACHE_MAX
+
+
+def test_batch_cache_lru_keeps_hot_entries():
+    pipeline._BATCH_CACHE.clear()
+    hot = pipeline._batched("8to16", "fused", True, "strict", 1024)
+    for cap in range(pipeline._BATCH_CACHE_MAX - 1):
+        pipeline._batched("8to16", "fused", True, "strict", 2048 + cap)
+    # Touch the hot entry, then overflow: the hot entry must survive.
+    assert pipeline._batched("8to16", "fused", True, "strict", 1024) is hot
+    pipeline._batched("8to16", "fused", True, "strict", 9999)
+    assert ("8to16", "fused", True, "strict", 1024) in pipeline._BATCH_CACHE
