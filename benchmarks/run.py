@@ -15,6 +15,12 @@ Flags:
 import json
 import sys
 
+# Bench-report schema version (see scripts/bench_gate.py): bumped when a
+# run starts emitting tables an older committed baseline cannot know
+# about, so the gate warns-and-skips unshared tables across schema
+# versions instead of failing on them.  v2 added ``table_matrix``.
+SCHEMA = 2
+
 
 def _records(table: str, rows):
     """Flatten a strategy-keyed CSV row block into one record per cell."""
@@ -52,7 +58,7 @@ def main(argv=None) -> None:
     else:
         langs, n = tb.LIPSUM_LANGS, tb.N_CHARS
 
-    report = {"langs": langs, "n_chars": n,
+    report = {"schema": SCHEMA, "langs": langs, "n_chars": n,
               "mode": "smoke" if smoke else ("quick" if quick else "full"),
               "records": []}
 
@@ -67,6 +73,13 @@ def main(argv=None) -> None:
     t9 = tb.table9(langs, n)
     tb.print_rows("Table 9: validating UTF-16 -> UTF-8 (Gchars/s)", t9)
     report["records"] += _records("table9", t9)
+
+    # The codec matrix rides in every mode (incl. --smoke: it is the
+    # acceptance surface for the decode×encode stage composition).
+    tm = tb.table_matrix(n_chars=1 << 13 if (quick or smoke) else n,
+                         reps=4 if (quick or smoke) else tb.REPS)
+    tb.print_rows("Codec matrix: all format pairs (Gchars/s)", tm)
+    report["records"] += _records("table_matrix", tm)
 
     if not smoke:
         tr = tb.table_replace(n_chars=n)

@@ -238,6 +238,45 @@ def table_ragged(batch_sizes=(8, 64), n_chars=2048, reps=6):
     return rows
 
 
+def table_matrix(n_chars=N_CHARS, lang="arabic", reps=REPS):
+    """Beyond-paper: the full codec matrix, GC/s per format pair x strategy.
+
+    Every supported (src, dst) cell of the decode×encode composition
+    (DESIGN.md §8) is timed through the SAME generic fused driver and
+    the pure-jnp block-parallel reference.  Source buffers are the
+    narrow-dtype wire forms of one corpus (Latin-1 uses a high-byte
+    corpus of its own, since the multilingual corpora do not fit in one
+    byte per character).
+    """
+    text = synthetic.utf8_array(lang, n_chars, 0).tobytes().decode("utf-8")
+    l1_rng = np.random.default_rng(0)
+    l1_text = "".join(chr(c) for c in l1_rng.integers(0x20, 0x100, n_chars))
+    rows = []
+    for src, dst in tc.PAIRS:
+        t = l1_text if "latin1" in (src, dst) else text
+        nch = len(t)
+        wire = {
+            "utf8": lambda t: np.frombuffer(t.encode("utf-8"), np.uint8),
+            "utf16": lambda t: np.frombuffer(t.encode("utf-16-le"),
+                                             np.uint16),
+            "utf32": lambda t: np.frombuffer(t.encode("utf-32-le"),
+                                             np.uint32),
+            "latin1": lambda t: np.frombuffer(t.encode("latin-1"),
+                                              np.uint8),
+        }[src](t)
+        x = jnp.asarray(wire)
+        row = {"lang": f"{src}->{dst}"}
+        for strat in ("fused", "blockparallel"):
+            f = jax.jit(lambda v, s=src, d=dst, st=strat: tc.transcode(
+                v, d, src_format=s, strategy=st))
+            jax.block_until_ready(f(x))  # warmup/compile
+            t_min = _time_min(lambda: jax.block_until_ready(f(x)),
+                              reps=reps)
+            row[strat] = _gcps(nch, t_min)
+        rows.append(row)
+    return rows
+
+
 def table8_proxy(langs=("arabic", "latin", "chinese")):
     """Instructions-per-byte proxy (paper Table 8): jaxpr FLOPs/bytes per
     input byte for each strategy — the HLO-op analogue of instruction

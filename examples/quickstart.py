@@ -55,6 +55,24 @@ def main():
     fixed = np.asarray(out)[: int(cnt)].astype(np.uint16).tobytes()
     show("errors='replace' output", fixed.decode("utf-16-le"))
 
+    # --- the codec matrix (DESIGN.md §8): any (src, dst) format pair ----
+    legacy = "café ÿ £".encode("latin-1")   # a Latin-1 wire buffer
+    out, cnt, status = tc.transcode(
+        jnp.asarray(np.frombuffer(legacy, np.uint8)), "utf8",
+        src_format="latin1")
+    show("transcode(latin1 -> utf8) round-trips",
+         bytes(np.asarray(out)[: int(cnt)].astype(np.uint8))
+         == "café ÿ £".encode("utf-8"))
+    out, cnt, status = tc.utf8_to_utf32(
+        jnp.asarray(utf8), len(utf8), strategy="fused")
+    show("utf8 -> utf32 code points (fused cell)",
+         np.array_equal(np.asarray(out)[: int(cnt)].astype(np.int64),
+                        np.array([ord(c) for c in s])))
+    out, cnt, status = tc.transcode(
+        jnp.asarray(utf8), "latin1", src_format="utf8", errors="replace")
+    show("utf8 -> latin1 (replace: '?' for cp > U+00FF)",
+         bytes(np.asarray(out)[: int(cnt)].astype(np.uint8)))
+
     # --- capacity planning (simdutf-style length queries) ---------------
     show("utf16 units needed",
          int(tc.utf16_length_from_utf8(jnp.asarray(utf8), len(utf8))))

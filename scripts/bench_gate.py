@@ -22,7 +22,14 @@ noise, tight enough to catch a real perf cliff).  Two modes:
     fused pipeline's advantage still fails.
 
 Cells present in the baseline but missing from the fresh run fail the
-gate outright (a silently dropped strategy is a regression, not a skip).
+gate outright (a silently dropped strategy is a regression, not a skip)
+— with one schema-versioned exception: reports carry a ``"schema"`` int
+(absent = 1), and when the two reports disagree on it, whole TABLES
+known to only one side are warned-and-skipped instead of failed.  That
+lets a newer run introduce a new table (e.g. ``table_matrix``, schema 2)
+without breaking against an older committed baseline, and an older
+branch re-run against a newer baseline likewise — while a cell missing
+from a table both sides know about still fails as a regression.
 
 Exit codes: 0 = gate passed, 1 = regression / missing cells, 2 = a JSON
 file is unreadable or malformed (never a traceback: a corrupt committed
@@ -44,6 +51,15 @@ EXIT_MALFORMED = 2
 class MalformedReport(ValueError):
     """A bench JSON that cannot be interpreted as (table, lang, strategy,
     gchars_per_s) records."""
+
+
+def _schema(report) -> int:
+    """Schema version of a bench report (absent = 1, the pre-versioned
+    format)."""
+    v = report.get("schema", 1) if isinstance(report, dict) else 1
+    if not isinstance(v, int) or isinstance(v, bool) or v < 1:
+        raise MalformedReport(f"'schema' is not a positive int: {v!r}")
+    return v
 
 
 def _cells(report, mode: str) -> dict:
@@ -95,7 +111,8 @@ def main(argv=None) -> int:
     def load(path):
         try:
             with open(path) as f:
-                return _cells(json.load(f), args.mode)
+                report = json.load(f)
+                return _schema(report), _cells(report, args.mode)
         # ValueError covers json.JSONDecodeError, UnicodeDecodeError
         # (binary baseline) and MalformedReport alike.
         except (OSError, ValueError) as e:
@@ -103,15 +120,40 @@ def main(argv=None) -> int:
                   f"{path}: {e}", file=sys.stderr)
             return None
 
-    base = load(args.baseline)
-    fresh = load(args.fresh)
-    if base is None or fresh is None:
+    loaded_base = load(args.baseline)
+    loaded_fresh = load(args.fresh)
+    if loaded_base is None or loaded_fresh is None:
         return EXIT_MALFORMED
+    base_schema, base = loaded_base
+    fresh_schema, fresh = loaded_fresh
 
     if not base:
         print(f"bench gate: no '{GATED_STRATEGY}' records in baseline "
               f"{args.baseline}", file=sys.stderr)
         return 1
+
+    # Schema-versioned table skipping: when the two reports come from
+    # different schema versions, tables only one side knows about are a
+    # format evolution, not a regression — warn and gate on the shared
+    # tables only.  Same-schema missing cells still fail below.
+    if base_schema != fresh_schema:
+        base_tables = {t for (t, _l) in base}
+        fresh_tables = {t for (t, _l) in fresh}
+        for t in sorted(base_tables ^ fresh_tables):
+            where = "baseline" if t in base_tables else "fresh run"
+            print(f"bench gate: WARNING: skipping table '{t}' (only in "
+                  f"the {where}; schema {base_schema} vs {fresh_schema})",
+                  file=sys.stderr)
+        shared = base_tables & fresh_tables
+        base = {k: v for k, v in base.items() if k[0] in shared}
+        fresh = {k: v for k, v in fresh.items() if k[0] in shared}
+        if not base:
+            # Version skew must never produce a vacuous pass: with no
+            # shared table left, nothing was gated at all.
+            print("bench gate: no tables shared between baseline and "
+                  "fresh run after schema skipping — nothing gated",
+                  file=sys.stderr)
+            return 1
 
     failures = []
     unit = "Gchars/s" if args.mode == "absolute" else "x blockparallel"

@@ -1,0 +1,38 @@
+"""Latin-1 (ISO-8859-1) primitives for the codec matrix.
+
+Latin-1 is the degenerate corner of the matrix and the paper-family's
+favourite fast path (simdutf ships Latin-1 endpoints next to the UTF
+ones): every byte IS a code point, so decoding is a widening copy and can
+never fail, and encoding is a narrowing copy that fails exactly on code
+points above U+00FF.  Following CPython's ``errors="replace"`` *encode*
+semantics, unrepresentable code points substitute ``?`` (0x3F) — note the
+asymmetry with the decode-side substitution character U+FFFD, which is
+itself not Latin-1-representable.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# CPython's encode-side substitution character ('?'), applied per
+# unrepresentable code point under errors="replace".
+SUB_BYTE = 0x3F
+
+
+def encode_bad(cp: jax.Array) -> jax.Array:
+    """Per-position bool: code point has no Latin-1 encoding."""
+    return (cp < 0) | (cp > 0xFF)
+
+
+def encode_candidates(cp: jax.Array):
+    """Per code point, produce ``(length, byte, bad)``.
+
+    ``length`` is always 1; ``byte`` is the code point itself or the
+    ``?`` substitute where unrepresentable (the caller's ``status``
+    carries the offender's offset — CPython ``UnicodeEncodeError.start``
+    semantics mapped to source elements).
+    """
+    bad = encode_bad(cp)
+    byte = jnp.where(bad, SUB_BYTE, cp)
+    return jnp.ones_like(cp), byte, bad

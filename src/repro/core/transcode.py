@@ -7,7 +7,19 @@ and batch with ``vmap`` / shard with ``pjit``.  Outputs are a
 fixed-capacity buffer, the number of meaningful elements, and an int32
 simdutf-style status — -1 for a valid stream, else the input offset of the
 first invalid maximal subpart, with Python ``UnicodeDecodeError.start``
-semantics (bytes for UTF-8, code units for UTF-16).
+semantics (bytes for UTF-8/Latin-1, code units for UTF-16, code points for
+UTF-32).  For Latin-1 *egress* the status additionally reports the first
+unencodable code point, at the offset of its source lead (CPython
+``UnicodeEncodeError.start`` mapped to source elements).
+
+The codec matrix (DESIGN.md §8): :func:`transcode` dispatches any
+``(src_format, dst_format)`` pair over the ``utf8`` / ``utf16`` / ``utf32``
+/ ``latin1`` formats — every pair runs through ONE generic decode×encode
+composition per strategy (the stage driver of ``repro.kernels.stages`` on
+the fused path, the shared speculative-decode + global-compaction body on
+the block-parallel path).  Format names accept the codecs-module aliases
+(``"utf-8"``, ``"utf-16-le"``, ``"utf-32-le"``, ``"latin-1"`` /
+``"iso-8859-1"``).
 
 Error policy (the ``errors=`` kwarg; full table in DESIGN.md §4):
 
@@ -16,29 +28,25 @@ Error policy (the ``errors=`` kwarg; full table in DESIGN.md §4):
     callers reject invalid input wholesale.
   * ``"replace"`` -- lossy ingestion: each maximal subpart of an
     ill-formed sequence (W3C / CPython substitution semantics) emits one
-    U+FFFD and the transcode completes at full speed; ``status`` still
-    reports the first substitution offset.
+    U+FFFD — and each Latin-1-unencodable code point one ``?`` — and the
+    transcode completes at full speed; ``status`` still reports the first
+    substitution offset.
 
-Strategies (the ``strategy=`` kwarg of ``transcode_utf8_to_utf16`` /
-``transcode_utf16_to_utf8``; full decision table in DESIGN.md §5):
+Strategies (the ``strategy=`` kwarg; full decision table in DESIGN.md §5):
 
-  * ``fused`` (default)  -- two-pass Pallas pipeline with hierarchical
-    in-kernel compaction and narrow (uint8/uint16) I/O; validation (the
-    Keiser-Lemire nibble tables + the maximal-subpart error locator) is
-    folded into the counting scan, so no standalone validation pass ever
-    re-reads the input.  Output buffers are narrow (uint16 units / uint8
-    bytes); ``buffer[:count]``, ``count`` and ``status`` are
-    bit-identical to ``blockparallel``.
+  * ``fused`` (matrix + per-doc default) -- two-pass Pallas pipeline with
+    hierarchical in-kernel compaction and narrow (uint8/uint16/uint32)
+    I/O; validation is folded into the counting scan.
   * ``blockparallel``    -- speculative per-position decode + global XLA
     cumsum compaction; fully branch-free, pure-jnp (no Pallas), the
     portable beyond-paper form and the semantic reference.
   * ``windowed``         -- the paper-faithful Algorithm 2/3 structure
     (see ``repro.core.windowed``); serial window walk, the measured
-    baseline.  Supports ``errors="strict"`` only.
+    baseline.  UTF-8<->UTF-16 only, ``errors="strict"`` only.
 
 The ASCII fast path of Algorithm 3 survives as a whole-chunk ``lax.cond``:
-for ASCII-pure chunks (the paper's Latin benchmark) the entire decode is a
-widening copy.
+ASCII values are numerically identical in every matrix format, so
+ASCII-pure chunks (the paper's Latin benchmark) reduce to a widening copy.
 """
 
 from __future__ import annotations
@@ -46,7 +54,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import compaction, result as R
+from repro.core import compaction, latin1 as l1mod, result as R
 from repro.core import utf16 as u16mod, utf32 as u32mod, utf8 as u8mod
 from repro.core.result import STATUS_OK, TranscodeResult  # noqa: F401  (re-export)
 
@@ -68,8 +76,55 @@ _first_error_status = R.first_error_status
 
 
 # ---------------------------------------------------------------------------
-# Validation
+# The codec matrix: formats, aliases and static capacity conventions.
+# (``repro.kernels.stages`` imports these — the kernel registry and the
+# public dispatch share one source of truth.)
 
+FORMATS = ("utf8", "utf16", "utf32", "latin1")
+
+_FORMAT_ALIASES = {
+    "utf8": "utf8", "utf-8": "utf8",
+    "utf16": "utf16", "utf-16": "utf16", "utf-16-le": "utf16",
+    "utf16-le": "utf16", "utf16le": "utf16",
+    "utf32": "utf32", "utf-32": "utf32", "utf-32-le": "utf32",
+    "utf32-le": "utf32", "utf32le": "utf32",
+    "latin1": "latin1", "latin-1": "latin1", "latin": "latin1",
+    "iso-8859-1": "latin1", "iso8859-1": "latin1",
+}
+
+# Output capacity per input element for each (src, dst) pair: enough for
+# every *valid* stream; speculative garbage beyond it drops at capacity
+# in all strategies alike.
+CAP_FACTOR = {
+    ("utf8", "utf16"): 1, ("utf8", "utf32"): 1, ("utf8", "latin1"): 1,
+    ("utf16", "utf8"): 3, ("utf16", "utf32"): 1, ("utf16", "latin1"): 1,
+    ("utf32", "utf8"): 4, ("utf32", "utf16"): 2, ("utf32", "latin1"): 1,
+    ("latin1", "utf8"): 2, ("latin1", "utf16"): 1, ("latin1", "utf32"): 1,
+}
+
+PAIRS = tuple(sorted(CAP_FACTOR))
+
+
+def normalize_format(name: str) -> str:
+    """Resolve a format name or codecs-style alias to its canonical name."""
+    try:
+        return _FORMAT_ALIASES[str(name).lower()]
+    except KeyError:
+        raise ValueError(
+            f"unknown format {name!r}; supported: {list(FORMATS)} "
+            f"(and codecs aliases like 'utf-16-le')")
+
+
+def _check_pair(src: str, dst: str):
+    if (src, dst) not in CAP_FACTOR:
+        raise ValueError(
+            f"unsupported format pair {src!r} -> {dst!r}; "
+            f"supported pairs: {list(PAIRS)}")
+    return CAP_FACTOR[(src, dst)]
+
+
+# ---------------------------------------------------------------------------
+# Validation
 
 def validate_utf8(b, n_valid=None):
     """Scalar bool: is the byte stream valid UTF-8 (Keiser-Lemire)."""
@@ -78,6 +133,124 @@ def validate_utf8(b, n_valid=None):
 
 def validate_utf16(u, n_valid=None):
     return u16mod.validate(_as_i32(u), n_valid)
+
+
+# ---------------------------------------------------------------------------
+# Block-parallel matrix body: whole-array speculative decode + analysis
+# per source format, candidate production per destination format, global
+# XLA compaction.  This is the pure-jnp semantic reference every fused
+# cell is pinned to bit-for-bit.
+
+
+def _src_decode(src: str, x):
+    """Speculative whole-array decode: ``(cp, lead_mask)``."""
+    if src == "utf8":
+        cp, is_lead, _err = u8mod.decode_speculative(x)
+        return cp, is_lead
+    if src == "utf16":
+        cp, is_lead, _err = u16mod.decode_speculative(x)
+        return cp, is_lead
+    if src == "utf32":
+        # Unrepresentable scalars substitute U+FFFD in the buffer even
+        # under errors="strict" (status still locates the offender), so
+        # the speculative output is a well-defined narrow value in every
+        # strategy.
+        return jnp.where(u32mod.invalid_scalar(x), 0xFFFD, x), \
+            jnp.ones(x.shape, bool)
+    # latin1: every byte is a code point.
+    return x, jnp.ones(x.shape, bool)
+
+
+def _src_analyze(src: str, x):
+    """Whole-array maximal-subpart analysis: {starts, valid, cp, err}."""
+    if src == "utf8":
+        return u8mod.analyze(x)
+    if src == "utf16":
+        return u16mod.analyze(x)
+    if src == "utf32":
+        bad = u32mod.invalid_scalar(x)
+        return {"starts": jnp.ones(x.shape, bool), "valid": ~bad,
+                "cp": jnp.where(bad, 0xFFFD, x), "err": bad}
+    ones = jnp.ones(x.shape, bool)
+    return {"starts": ones, "valid": ones, "cp": x,
+            "err": jnp.zeros(x.shape, bool)}
+
+
+def _dst_encode(dst: str, cp):
+    """Candidate production: ``(lengths, values[N, K], encode_bad)``."""
+    if dst == "utf16":
+        units, u0, u1, _bad = u16mod.encode_candidates(cp)
+        return units, jnp.stack([u0, u1], -1), None
+    if dst == "utf8":
+        L, cand, _bad = u32mod.encode_utf8_candidates(cp)
+        return L, cand, None
+    if dst == "utf32":
+        return jnp.ones_like(cp), cp[..., None], None
+    L, byte, bad = l1mod.encode_candidates(cp)
+    return L, byte[..., None], bad
+
+
+def _blockparallel_pair(x, n_valid, src: str, dst: str, validate: bool,
+                        errors: str, ascii_fastpath: bool = True):
+    """Generic block-parallel (src, dst) transcode; see module docstring."""
+    factor = _check_pair(src, dst)
+    x = _mask_padding(_as_i32(x), n_valid)
+    n = _n(x, n_valid)
+    cap = factor * x.shape[0]
+    idx = jnp.arange(x.shape[0])
+
+    def general(x):
+        need_analysis = validate or errors == "replace"
+        a = _src_analyze(src, x) if need_analysis else None
+        if errors == "replace":
+            cp, mask = a["cp"], a["starts"] & (idx < n)
+        else:
+            cp, is_lead = _src_decode(src, x)
+            mask = is_lead & (idx < n)
+        lens, vals, enc_bad = _dst_encode(dst, cp)
+        out, count = compaction.compact_offsets(vals, lens, mask, cap)
+        if validate:
+            err_map = a["err"]
+            if enc_bad is not None:
+                _l, _v, a_bad = _dst_encode(dst, a["cp"])
+                err_map = err_map | (a_bad & a["starts"])
+            status = _first_error_status(err_map, n)
+        else:
+            status = jnp.int32(STATUS_OK)
+        return TranscodeResult(out, count, status)
+
+    def ascii(x):
+        # Paper Algorithm 3 fast path: ASCII values are numerically
+        # identical in every matrix format — a widening copy.
+        out = x if cap == x.shape[0] else jnp.concatenate(
+            [x, jnp.zeros((cap - x.shape[0],), x.dtype)])
+        return TranscodeResult(out, jnp.asarray(n, jnp.int32),
+                               jnp.int32(STATUS_OK))
+
+    if not ascii_fastpath:
+        return general(x)
+    # The lower bound matters: lanes are int32 here, so a garbage UTF-32
+    # scalar like 0xFFFFFFFF wraps negative and would pass a bare
+    # ``x < 0x80`` (the fused path compares in the unsigned narrow dtype
+    # and needs no guard).
+    return jax.lax.cond(jnp.all((x >= 0) & (x < 0x80)), ascii, general, x)
+
+
+def _blockparallel_count(x, n_valid, src: str, dst: str):
+    """Single-scan validation + capacity, pure jnp: ``(count, status)``."""
+    _check_pair(src, dst)
+    x = _mask_padding(_as_i32(x), n_valid)
+    n = _n(x, n_valid)
+    idx = jnp.arange(x.shape[0])
+    cp, is_lead = _src_decode(src, x)
+    lens, _vals, _bad = _dst_encode(dst, cp)
+    count = jnp.sum(jnp.where(is_lead & (idx < n), lens, 0))
+    a = _src_analyze(src, x)
+    err_map = a["err"]
+    _l, _v, a_bad = _dst_encode(dst, a["cp"])
+    if a_bad is not None:
+        err_map = err_map | (a_bad & a["starts"])
+    return count, _first_error_status(err_map, n)
 
 
 def scan_utf8(b, n_valid=None, *, strategy: str = "fused"):
@@ -90,41 +263,33 @@ def scan_utf8(b, n_valid=None, *, strategy: str = "fused"):
     with its folded validation); ``blockparallel`` is the pure-jnp
     reference with identical results.
     """
-    if strategy == "fused":
-        from repro.kernels import fused_transcode
-        return fused_transcode.utf8_scan_fused(b, n_valid)
-    if strategy != "blockparallel":
-        raise ValueError(f"scan_utf8: unknown strategy {strategy!r}")
-    b = _mask_padding(_as_i32(b), n_valid)
-    n = _n(b, n_valid)
-    idx = jnp.arange(b.shape[0])
-    cp, is_lead, _dec_err = u8mod.decode_speculative(b)
-    units, _u0, _u1, _bad = u16mod.encode_candidates(cp)
-    count = jnp.sum(jnp.where(is_lead & (idx < n), units, 0))
-    a = u8mod.analyze(b)
-    return count, _first_error_status(a["err"], n)
+    return scan(b, "utf16", src_format="utf8", n_valid=n_valid,
+                strategy=strategy)
 
 
 def scan_utf16(u, n_valid=None, *, strategy: str = "fused"):
-    """Single-scan UTF-16 validation + UTF-8 capacity: ``(count, status)``.
+    """Single-scan UTF-16 validation + UTF-8 capacity: ``(count, status)``."""
+    return scan(u, "utf8", src_format="utf16", n_valid=n_valid,
+                strategy=strategy)
 
-    ``status`` is -1 for valid streams, else the unit offset of the first
-    unpaired surrogate half; ``count`` is the UTF-8 bytes a transcode
-    would emit.
+
+def scan(x, dst_format, *, src_format: str = "utf8", n_valid=None,
+         strategy: str = "fused"):
+    """Single-scan validation + destination capacity for any matrix cell.
+
+    One read of the input yields ``(count, status)``: the number of
+    ``dst_format`` units a transcode would produce and the simdutf-style
+    verdict (DESIGN.md §4) — the ingestion-boundary query.
     """
+    src = normalize_format(src_format)
+    dst = normalize_format(dst_format)
+    _check_pair(src, dst)
     if strategy == "fused":
         from repro.kernels import fused_transcode
-        return fused_transcode.utf16_scan_fused(u, n_valid)
+        return fused_transcode.scan_fused(x, n_valid, src=src, dst=dst)
     if strategy != "blockparallel":
-        raise ValueError(f"scan_utf16: unknown strategy {strategy!r}")
-    u = _mask_padding(_as_i32(u), n_valid)
-    n = _n(u, n_valid)
-    idx = jnp.arange(u.shape[0])
-    cp, is_lead, _dec_err = u16mod.decode_speculative(u)
-    L, _cand, _bad = u32mod.encode_utf8_candidates(cp)
-    count = jnp.sum(jnp.where(is_lead & (idx < n), L, 0))
-    a = u16mod.analyze(u)
-    return count, _first_error_status(a["err"], n)
+        raise ValueError(f"scan: unknown strategy {strategy!r}")
+    return _blockparallel_count(x, n_valid, src, dst)
 
 
 # ---------------------------------------------------------------------------
@@ -139,30 +304,16 @@ def _mask_padding(b, n_valid):
 
 
 def utf8_to_utf32(b, n_valid=None, validate: bool = True,
-                  errors: str = "strict"):
+                  errors: str = "strict", *,
+                  strategy: str = "blockparallel"):
     """Decode UTF-8 bytes to code points.
 
-    Returns TranscodeResult(cp_buffer[int32, capacity=len(b)], count,
-    status).
+    Returns TranscodeResult(cp_buffer[capacity=len(b)], count, status);
+    int32 values under the default pure-jnp strategy, uint32 under
+    ``strategy="fused"`` (the Pallas matrix cell).
     """
-    _check_errors(errors)
-    b = _mask_padding(_as_i32(b), n_valid)
-    n = _n(b, n_valid)
-    idx = jnp.arange(b.shape[0])
-    if errors == "replace":
-        a = u8mod.analyze(b)
-        mask = a["starts"] & (idx < n)
-        out, count = compaction.compact(a["cp"], mask, b.shape[0])
-        status = _first_error_status(a["err"], n) if validate else jnp.int32(STATUS_OK)
-        return TranscodeResult(out, count, status)
-    cp, is_lead, _dec_err = u8mod.decode_speculative(b)
-    mask = is_lead & (idx < n)
-    out, count = compaction.compact(cp, mask, b.shape[0])
-    if validate:
-        status = _first_error_status(u8mod.analyze(b)["err"], n)
-    else:
-        status = jnp.int32(STATUS_OK)
-    return TranscodeResult(out, count, status)
+    return transcode(b, "utf32", src_format="utf8", n_valid=n_valid,
+                     strategy=strategy, validate=validate, errors=errors)
 
 
 def utf8_to_utf16(b, n_valid=None, validate: bool = True,
@@ -170,37 +321,40 @@ def utf8_to_utf16(b, n_valid=None, validate: bool = True,
     """Transcode UTF-8 bytes to UTF-16 code units (little-endian values).
 
     Returns TranscodeResult(u16_buffer[int32, capacity=len(b)], count,
-    status).
+    status).  This is the pure-jnp block-parallel reference cell.
     """
     _check_errors(errors)
-    b = _mask_padding(_as_i32(b), n_valid)
-    n = _n(b, n_valid)
-    cap = b.shape[0]
-    idx = jnp.arange(cap)
+    return _blockparallel_pair(b, n_valid, "utf8", "utf16", validate,
+                               errors, ascii_fastpath)
 
-    def general(b):
-        if errors == "replace" or validate:
-            a = u8mod.analyze(b)
-        if errors == "replace":
-            cp, mask = a["cp"], a["starts"] & (idx < n)
-        else:
-            cp, is_lead, _dec_err = u8mod.decode_speculative(b)
-            mask = is_lead & (idx < n)
-        units, u0, u1, _bad = u16mod.encode_candidates(cp)
-        vals = jnp.stack([u0, u1], -1)
-        out, count = compaction.compact_offsets(vals, units, mask, cap)
-        status = _first_error_status(a["err"], n) if validate else jnp.int32(STATUS_OK)
-        return TranscodeResult(out, count, status)
 
-    def ascii(b):
-        # Paper Algorithm 3 fast path: widening copy.
-        return TranscodeResult(b, jnp.asarray(n, jnp.int32),
-                               jnp.int32(STATUS_OK))
+def utf8_to_latin1(b, n_valid=None, validate: bool = True,
+                   errors: str = "strict", *, strategy: str = "fused"):
+    """Transcode UTF-8 bytes to Latin-1 bytes.
 
-    if not ascii_fastpath:
-        return general(b)
-    all_ascii = jnp.all(b < 0x80)
-    return jax.lax.cond(all_ascii, ascii, general, b)
+    Returns TranscodeResult(byte_buffer[capacity=len(b)], count, status).
+    ``status`` reports the first ill-formed UTF-8 subpart OR the first
+    code point above U+00FF (at its lead byte's offset); under
+    ``errors="replace"`` both substitute CPython-style (``?``).
+    """
+    return transcode(b, "latin1", src_format="utf8", n_valid=n_valid,
+                     strategy=strategy, validate=validate, errors=errors)
+
+
+def latin1_to_utf8(b, n_valid=None, validate: bool = True,
+                   errors: str = "strict", *, strategy: str = "fused"):
+    """Transcode Latin-1 bytes to UTF-8 (never fails: every byte is a
+    code point).  Returns TranscodeResult(byte_buffer[capacity=2*len(b)],
+    count, status)."""
+    return transcode(b, "utf8", src_format="latin1", n_valid=n_valid,
+                     strategy=strategy, validate=validate, errors=errors)
+
+
+def latin1_to_utf16(b, n_valid=None, validate: bool = True,
+                    errors: str = "strict", *, strategy: str = "fused"):
+    """Transcode Latin-1 bytes to UTF-16 code units (a widening copy)."""
+    return transcode(b, "utf16", src_format="latin1", n_valid=n_valid,
+                     strategy=strategy, validate=validate, errors=errors)
 
 
 # ---------------------------------------------------------------------------
@@ -208,25 +362,11 @@ def utf8_to_utf16(b, n_valid=None, validate: bool = True,
 
 
 def utf16_to_utf32(u, n_valid=None, validate: bool = True,
-                   errors: str = "strict"):
-    _check_errors(errors)
-    u = _mask_padding(_as_i32(u), n_valid)
-    n = _n(u, n_valid)
-    idx = jnp.arange(u.shape[0])
-    if errors == "replace":
-        a = u16mod.analyze(u)
-        mask = a["starts"] & (idx < n)
-        out, count = compaction.compact(a["cp"], mask, u.shape[0])
-        status = _first_error_status(a["err"], n) if validate else jnp.int32(STATUS_OK)
-        return TranscodeResult(out, count, status)
-    cp, is_lead, _dec_err = u16mod.decode_speculative(u)
-    mask = is_lead & (idx < n)
-    out, count = compaction.compact(cp, mask, u.shape[0])
-    if validate:
-        status = _first_error_status(u16mod.analyze(u)["err"], n)
-    else:
-        status = jnp.int32(STATUS_OK)
-    return TranscodeResult(out, count, status)
+                   errors: str = "strict", *,
+                   strategy: str = "blockparallel"):
+    """Decode UTF-16 units to code points (surrogate pairs folded)."""
+    return transcode(u, "utf32", src_format="utf16", n_valid=n_valid,
+                     strategy=strategy, validate=validate, errors=errors)
 
 
 def utf16_to_utf8(u, n_valid=None, validate: bool = True,
@@ -234,36 +374,11 @@ def utf16_to_utf8(u, n_valid=None, validate: bool = True,
     """Transcode UTF-16 units to UTF-8 bytes.
 
     Returns TranscodeResult(byte_buffer[int32, capacity=3*len(u)], count,
-    status).
+    status).  This is the pure-jnp block-parallel reference cell.
     """
     _check_errors(errors)
-    u = _mask_padding(_as_i32(u), n_valid)
-    n = _n(u, n_valid)
-    cap = 3 * u.shape[0]
-    idx = jnp.arange(u.shape[0])
-
-    def general(u):
-        if errors == "replace" or validate:
-            a = u16mod.analyze(u)
-        if errors == "replace":
-            cp, mask = a["cp"], a["starts"] & (idx < n)
-        else:
-            cp, is_lead, _dec_err = u16mod.decode_speculative(u)
-            mask = is_lead & (idx < n)
-        L, cand, _bad = u32mod.encode_utf8_candidates(cp)
-        out, count = compaction.compact_offsets(cand, L, mask, cap)
-        status = _first_error_status(a["err"], n) if validate else jnp.int32(STATUS_OK)
-        return TranscodeResult(out, count, status)
-
-    def ascii(u):
-        out = jnp.concatenate([u, jnp.zeros((cap - u.shape[0],), u.dtype)])
-        return TranscodeResult(out, jnp.asarray(n, jnp.int32),
-                               jnp.int32(STATUS_OK))
-
-    if not ascii_fastpath:
-        return general(u)
-    all_ascii = jnp.all(u < 0x80)
-    return jax.lax.cond(all_ascii, ascii, general, u)
+    return _blockparallel_pair(u, n_valid, "utf16", "utf8", validate,
+                               errors, ascii_fastpath)
 
 
 # ---------------------------------------------------------------------------
@@ -272,44 +387,26 @@ def utf16_to_utf8(u, n_valid=None, validate: bool = True,
 
 def _invalid_scalar(cp):
     """Code points no encoding may represent: surrogates, > U+10FFFF,
-    negatives.  Checked pre-substitution so errors="replace" can swap in
-    U+FFFD while status still reports the original offender."""
-    return ((cp >= 0xD800) & (cp < 0xE000)) | (cp > 0x10FFFF) | (cp < 0)
+    negatives.  (Single definition: ``repro.core.utf32.invalid_scalar``.)"""
+    return u32mod.invalid_scalar(cp)
 
 
 def utf32_to_utf8(cp, n_valid=None, validate: bool = True,
-                  errors: str = "strict"):
-    _check_errors(errors)
-    cp = _mask_padding(_as_i32(cp), n_valid)
-    n = _n(cp, n_valid)
-    cap = 4 * cp.shape[0]
-    idx = jnp.arange(cp.shape[0])
-    mask = idx < n
-    bad = _invalid_scalar(cp)
-    if errors == "replace":
-        cp = jnp.where(bad, 0xFFFD, cp)
-    L, cand, _bad = u32mod.encode_utf8_candidates(cp)
-    out, count = compaction.compact_offsets(cand, L, mask, cap)
-    status = _first_error_status(bad, n) if validate else jnp.int32(STATUS_OK)
-    return TranscodeResult(out, count, status)
+                  errors: str = "strict", *,
+                  strategy: str = "blockparallel"):
+    """Encode code points as UTF-8.  Unrepresentable scalars substitute
+    U+FFFD in the buffer under BOTH error policies (status locates the
+    first offender; strict callers reject wholesale)."""
+    return transcode(cp, "utf8", src_format="utf32", n_valid=n_valid,
+                     strategy=strategy, validate=validate, errors=errors)
 
 
 def utf32_to_utf16(cp, n_valid=None, validate: bool = True,
-                   errors: str = "strict"):
-    _check_errors(errors)
-    cp = _mask_padding(_as_i32(cp), n_valid)
-    n = _n(cp, n_valid)
-    cap = 2 * cp.shape[0]
-    idx = jnp.arange(cp.shape[0])
-    mask = idx < n
-    bad = _invalid_scalar(cp)
-    if errors == "replace":
-        cp = jnp.where(bad, 0xFFFD, cp)
-    units, u0, u1, _bad = u16mod.encode_candidates(cp)
-    vals = jnp.stack([u0, u1], -1)
-    out, count = compaction.compact_offsets(vals, units, mask, cap)
-    status = _first_error_status(bad, n) if validate else jnp.int32(STATUS_OK)
-    return TranscodeResult(out, count, status)
+                   errors: str = "strict", *,
+                   strategy: str = "blockparallel"):
+    """Encode code points as UTF-16 (see :func:`utf32_to_utf8`)."""
+    return transcode(cp, "utf16", src_format="utf32", n_valid=n_valid,
+                     strategy=strategy, validate=validate, errors=errors)
 
 
 # ---------------------------------------------------------------------------
@@ -347,19 +444,44 @@ def count_utf8_chars(b, n_valid=None):
 
 
 # ---------------------------------------------------------------------------
-# Byte-level helpers (UTF-16LE byte buffers <-> unit arrays)
+# Byte-level helpers (LE byte buffers <-> unit arrays).  All are explicit
+# little-endian jnp byte math — no ``.view()`` / ``frombuffer`` host-
+# endianness dependence anywhere on the wire path.
 
 
 def utf16le_bytes_to_units(by):
+    """UTF-16LE byte buffer -> int32 unit array (explicit LE byte math)."""
     by = _as_i32(by)
+    if by.shape[0] % 2:
+        raise ValueError(
+            f"utf16le_bytes_to_units: odd byte length {by.shape[0]}")
     return by[0::2] | (by[1::2] << 8)
 
 
 def units_to_utf16le_bytes(u):
+    """int32/uint16 unit array -> UTF-16LE byte array (explicit LE)."""
     u = _as_i32(u)
     lo = u & 0xFF
     hi = (u >> 8) & 0xFF
     return jnp.stack([lo, hi], -1).reshape(-1)
+
+
+def utf32le_bytes_to_cps(by):
+    """UTF-32LE byte buffer -> int32 code-point array (explicit LE)."""
+    by = _as_i32(by)
+    if by.shape[0] % 4:
+        raise ValueError(
+            f"utf32le_bytes_to_cps: byte length {by.shape[0]} not a "
+            f"multiple of 4")
+    return (by[0::4] | (by[1::4] << 8) | (by[2::4] << 16)
+            | (by[3::4] << 24))
+
+
+def cps_to_utf32le_bytes(cp):
+    """int32/uint32 code-point array -> UTF-32LE byte array (explicit LE)."""
+    cp = _as_i32(cp)
+    return jnp.stack([cp & 0xFF, (cp >> 8) & 0xFF, (cp >> 16) & 0xFF,
+                      (cp >> 24) & 0xFF], -1).reshape(-1)
 
 
 # ---------------------------------------------------------------------------
@@ -368,51 +490,109 @@ def units_to_utf16le_bytes(u):
 
 DEFAULT_STRATEGY = "fused"
 
+# The serial paper baseline exists for the paper's own two directions.
+_WINDOWED_PAIRS = {("utf8", "utf16"), ("utf16", "utf8")}
 
-def transcode_utf8_to_utf16(b, n_valid=None, *, strategy: str = DEFAULT_STRATEGY,
-                            validate: bool = True, errors: str = "strict"):
-    """Strategy-dispatched UTF-8 -> UTF-16.  See module docstring."""
+
+def transcode(src, dst_format, *, src_format: str = "utf8", n_valid=None,
+              strategy: str = DEFAULT_STRATEGY, validate: bool = True,
+              errors: str = "strict"):
+    """Strategy-dispatched transcode for any cell of the codec matrix.
+
+    ``src`` is the input buffer (narrow dtype or int32); ``src_format`` /
+    ``dst_format`` name any two distinct formats of ``FORMATS`` (codecs
+    aliases accepted).  Returns a :class:`TranscodeResult` whose buffer
+    capacity is ``CAP_FACTOR[(src, dst)] * len(src)``.  See the module
+    docstring for strategy / ``errors=`` semantics.
+    """
+    _check_errors(errors)
+    s = normalize_format(src_format)
+    d = normalize_format(dst_format)
+    _check_pair(s, d)
     if strategy == "fused":
         from repro.kernels import fused_transcode
-        return fused_transcode.utf8_to_utf16_fused(b, n_valid,
-                                                   validate=validate,
-                                                   errors=errors)
+        return fused_transcode.transcode_fused(
+            src, n_valid, src=s, dst=d, validate=validate, errors=errors)
     elif strategy == "blockparallel":
-        return utf8_to_utf16(b, n_valid, validate=validate, errors=errors)
+        return _blockparallel_pair(src, n_valid, s, d, validate, errors)
     elif strategy == "windowed":
+        if (s, d) not in _WINDOWED_PAIRS:
+            raise ValueError(
+                f"strategy='windowed' (the paper-faithful serial baseline) "
+                f"supports utf8<->utf16 only, not {s!r} -> {d!r}")
         if errors != "strict":
             raise ValueError(
                 "strategy='windowed' supports errors='strict' only "
                 "(the serial baseline has no replacement path)")
         from repro.core import windowed
-        return windowed.utf8_to_utf16_windowed(b, n_valid, validate=validate)
+        if s == "utf8":
+            return windowed.utf8_to_utf16_windowed(src, n_valid,
+                                                   validate=validate)
+        return windowed.utf16_to_utf8_windowed(src, n_valid,
+                                               validate=validate)
     raise ValueError(f"unknown strategy: {strategy}")
+
+
+def transcode_utf8_to_utf16(b, n_valid=None, *, strategy: str = DEFAULT_STRATEGY,
+                            validate: bool = True, errors: str = "strict"):
+    """Strategy-dispatched UTF-8 -> UTF-16.  See module docstring."""
+    return transcode(b, "utf16", src_format="utf8", n_valid=n_valid,
+                     strategy=strategy, validate=validate, errors=errors)
+
+
+def transcode_utf16_to_utf8(u, n_valid=None, *, strategy: str = DEFAULT_STRATEGY,
+                            validate: bool = True, errors: str = "strict"):
+    """Strategy-dispatched UTF-16 -> UTF-8.  See module docstring."""
+    return transcode(u, "utf8", src_format="utf16", n_valid=n_valid,
+                     strategy=strategy, validate=validate, errors=errors)
+
+
+# ---------------------------------------------------------------------------
+# Ragged packed-batch entry points (one Pallas launch per batch).
+
+
+def ragged_transcode(data, offsets, lengths, *, src_format: str = "utf8",
+                     dst_format: str = "utf16", validate: bool = True,
+                     errors: str = "strict"):
+    """Ragged packed-batch transcode for any matrix cell: one launch per
+    pass over a :func:`repro.core.packing.pack_documents` layout.
+
+    Returns a :class:`repro.core.result.RaggedTranscodeResult` whose
+    per-document slices are bit-identical to the single-document fused
+    transcoder; ``errors=`` carries the usual strict/replace policy per
+    document.  This is the padding-tax-free batch path (DESIGN.md §7) —
+    the padded ``vmap`` form survives in ``repro.data.pipeline`` as the
+    reference.
+    """
+    from repro.kernels import ragged_transcode as rt
+    return rt.transcode_ragged(
+        data, offsets, lengths, src=normalize_format(src_format),
+        dst=normalize_format(dst_format), validate=validate, errors=errors)
+
+
+def ragged_scan(data, offsets, lengths, *, src_format: str = "utf8",
+                dst_format: str = "utf16"):
+    """Per-document single-scan validation + capacity: (counts, statuses)."""
+    from repro.kernels import ragged_transcode as rt
+    return rt.scan_ragged(
+        data, offsets, lengths, src=normalize_format(src_format),
+        dst=normalize_format(dst_format))
 
 
 def ragged_utf8_to_utf16(data, offsets, lengths, *, validate: bool = True,
                          errors: str = "strict"):
-    """Ragged packed-batch UTF-8 -> UTF-16: one Pallas launch per batch.
-
-    ``(data, offsets, lengths)`` is the tile-aligned packed layout of
-    :func:`repro.core.packing.pack_documents` (``offsets`` is the
-    ``[B+1]`` row-offset vector).  Returns a
-    :class:`repro.core.result.RaggedTranscodeResult` whose per-document
-    slices are bit-identical to the single-document fused transcoder;
-    ``errors=`` carries the usual strict/replace policy per document.
-    This is the padding-tax-free batch path (DESIGN.md §7) — the padded
-    ``vmap`` form survives in ``repro.data.pipeline`` as the reference.
-    """
-    from repro.kernels import ragged_transcode
-    return ragged_transcode.utf8_to_utf16_ragged(
-        data, offsets, lengths, validate=validate, errors=errors)
+    """Ragged packed-batch UTF-8 -> UTF-16 (the (utf8, utf16) cell)."""
+    return ragged_transcode(data, offsets, lengths, src_format="utf8",
+                            dst_format="utf16", validate=validate,
+                            errors=errors)
 
 
 def ragged_utf16_to_utf8(data, offsets, lengths, *, validate: bool = True,
                          errors: str = "strict"):
     """Ragged packed-batch UTF-16 -> UTF-8 (see ``ragged_utf8_to_utf16``)."""
-    from repro.kernels import ragged_transcode
-    return ragged_transcode.utf16_to_utf8_ragged(
-        data, offsets, lengths, validate=validate, errors=errors)
+    return ragged_transcode(data, offsets, lengths, src_format="utf16",
+                            dst_format="utf8", validate=validate,
+                            errors=errors)
 
 
 def ragged_scan_utf8(data, offsets, lengths):
@@ -424,31 +604,11 @@ def ragged_scan_utf8(data, offsets, lengths):
     ``UnicodeDecodeError.start`` semantics).  Serve ingress validates a
     whole wave of prompts with this single read.
     """
-    from repro.kernels import ragged_transcode
-    return ragged_transcode.utf8_scan_ragged(data, offsets, lengths)
+    return ragged_scan(data, offsets, lengths, src_format="utf8",
+                       dst_format="utf16")
 
 
 def ragged_scan_utf16(data, offsets, lengths):
     """Per-document single-scan UTF-16 validation + UTF-8 capacity."""
-    from repro.kernels import ragged_transcode
-    return ragged_transcode.utf16_scan_ragged(data, offsets, lengths)
-
-
-def transcode_utf16_to_utf8(u, n_valid=None, *, strategy: str = DEFAULT_STRATEGY,
-                            validate: bool = True, errors: str = "strict"):
-    """Strategy-dispatched UTF-16 -> UTF-8.  See module docstring."""
-    if strategy == "fused":
-        from repro.kernels import fused_transcode
-        return fused_transcode.utf16_to_utf8_fused(u, n_valid,
-                                                   validate=validate,
-                                                   errors=errors)
-    elif strategy == "blockparallel":
-        return utf16_to_utf8(u, n_valid, validate=validate, errors=errors)
-    elif strategy == "windowed":
-        if errors != "strict":
-            raise ValueError(
-                "strategy='windowed' supports errors='strict' only "
-                "(the serial baseline has no replacement path)")
-        from repro.core import windowed
-        return windowed.utf16_to_utf8_windowed(u, n_valid, validate=validate)
-    raise ValueError(f"unknown strategy: {strategy}")
+    return ragged_scan(data, offsets, lengths, src_format="utf16",
+                       dst_format="utf8")

@@ -13,6 +13,13 @@ import jax
 import jax.numpy as jnp
 
 
+def invalid_scalar(cp: jax.Array) -> jax.Array:
+    """Code points no encoding may represent: surrogates, > U+10FFFF,
+    negatives (garbage int32 lanes).  The single definition shared by the
+    block-parallel matrix body and the UTF-32 decode stage."""
+    return ((cp >= 0xD800) & (cp < 0xE000)) | (cp > 0x10FFFF) | (cp < 0)
+
+
 def utf8_length_per_cp(cp: jax.Array) -> jax.Array:
     return (
         1

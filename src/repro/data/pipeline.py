@@ -63,7 +63,7 @@ from repro.data.tokenizer import BOS_ID, EOS_ID, PAD_ID, ByteTokenizer
 # malformed documents can ingest losslessly (errors="replace": U+FFFD
 # per maximal subpart) without a host round trip.
 
-# Jitted vmap callables, keyed per (direction, strategy, validate,
+# Jitted vmap callables, keyed per (pair, strategy, validate,
 # errors, capacity).  Capacity is part of the key: a [B, L] batch
 # compiles per distinct L anyway (shapes are static), so an unkeyed
 # entry would silently accumulate one trace per capacity inside a
@@ -73,16 +73,15 @@ _BATCH_CACHE: "dict" = {}
 _BATCH_CACHE_MAX = 16
 
 
-def _batched(direction: str, strategy: str, validate: bool, errors: str,
+def _batched(src: str, dst: str, strategy: str, validate: bool, errors: str,
              capacity: int):
-    key = (direction, strategy, validate, errors, capacity)
+    key = (src, dst, strategy, validate, errors, capacity)
     fn = _BATCH_CACHE.get(key)
     if fn is None:
-        one = (tc.transcode_utf8_to_utf16 if direction == "8to16"
-               else tc.transcode_utf16_to_utf8)
         fn = jax.jit(jax.vmap(
-            lambda x, n: one(x, n, strategy=strategy, validate=validate,
-                             errors=errors)))
+            lambda x, n: tc.transcode(x, dst, src_format=src, n_valid=n,
+                                      strategy=strategy, validate=validate,
+                                      errors=errors)))
         while len(_BATCH_CACHE) >= _BATCH_CACHE_MAX:
             _BATCH_CACHE.pop(next(iter(_BATCH_CACHE)))
         _BATCH_CACHE[key] = fn
@@ -122,48 +121,70 @@ def _repad(res, out_cap: int):
     return tc.TranscodeResult(out, res.counts, res.statuses)
 
 
-@functools.partial(jax.jit, static_argnames=("validate", "errors",
-                                             "out_cap"))
-def _packed8_batch(docs, lengths, validate, errors, out_cap):
+@functools.partial(jax.jit, static_argnames=("src", "dst", "validate",
+                                             "errors", "out_cap"))
+def _packed_batch(docs, lengths, src, dst, validate, errors, out_cap):
     data, offsets = _rows_as_packed(docs)
-    res = tc.ragged_utf8_to_utf16(data, offsets, lengths,
-                                  validate=validate, errors=errors)
+    res = tc.ragged_transcode(data, offsets, lengths, src_format=src,
+                              dst_format=dst, validate=validate,
+                              errors=errors)
     return _repad(res, out_cap)
 
 
-@functools.partial(jax.jit, static_argnames=("validate", "errors",
-                                             "out_cap"))
-def _packed16_batch(units, lengths, validate, errors, out_cap):
-    data, offsets = _rows_as_packed(units)
-    res = tc.ragged_utf16_to_utf8(data, offsets, lengths,
-                                  validate=validate, errors=errors)
-    return _repad(res, out_cap)
+def batch_transcode(docs, lengths, *, in_encoding: str = "utf8",
+                    out_encoding: str = "utf16", strategy: str = "packed",
+                    validate: bool = True, errors: str = "strict"):
+    """Batched transcode for any matrix cell: [B, L] narrow buffers ->
+    TranscodeResult([B, cap_factor*L], [B], [B]).
+
+    ``strategy="packed"`` (default) reinterprets the row-major batch as
+    ONE tile-aligned packed stream and runs a single ragged launch;
+    ``strategy="vmap"`` maps the single-document fused transcoder over
+    the document axis (a per-document strategy name selects that
+    transcoder under vmap instead).
+    """
+    src = tc.normalize_format(in_encoding)
+    dst = tc.normalize_format(out_encoding)
+    if (src, dst) not in tc.CAP_FACTOR:
+        raise ValueError(f"unsupported format pair {src!r} -> {dst!r}")
+    factor = tc.CAP_FACTOR[(src, dst)]
+    docs = jnp.asarray(docs)
+    lengths = jnp.asarray(lengths)
+    if strategy == "packed":
+        from repro.kernels import stages
+        narrow = docs.astype(stages.get_codec(src).dtype)
+        return _packed_batch(narrow, lengths, src, dst, validate, errors,
+                             factor * docs.shape[1])
+    per_doc = tc.DEFAULT_STRATEGY if strategy == "vmap" else strategy
+    return _batched(src, dst, per_doc, validate, errors,
+                    docs.shape[1])(docs, lengths)
 
 
 def batch_utf8_to_utf16(docs, lengths, *, strategy: str = "packed",
                         validate: bool = True, errors: str = "strict"):
     """Batched UTF-8 -> UTF-16: [B, L] byte buffers -> ([B, L], [B], [B])."""
-    docs = jnp.asarray(docs)
-    lengths = jnp.asarray(lengths)
-    if strategy == "packed":
-        return _packed8_batch(docs.astype(jnp.uint8), lengths, validate,
-                              errors, docs.shape[1])
-    per_doc = tc.DEFAULT_STRATEGY if strategy == "vmap" else strategy
-    return _batched("8to16", per_doc, validate, errors,
-                    docs.shape[1])(docs, lengths)
+    return batch_transcode(docs, lengths, in_encoding="utf8",
+                           out_encoding="utf16", strategy=strategy,
+                           validate=validate, errors=errors)
 
 
 def batch_utf16_to_utf8(units, lengths, *, strategy: str = "packed",
                         validate: bool = True, errors: str = "strict"):
     """Batched UTF-16 -> UTF-8: [B, L] unit buffers -> ([B, 3L], [B], [B])."""
-    units = jnp.asarray(units)
-    lengths = jnp.asarray(lengths)
-    if strategy == "packed":
-        return _packed16_batch(units.astype(jnp.uint16), lengths, validate,
-                               errors, 3 * units.shape[1])
-    per_doc = tc.DEFAULT_STRATEGY if strategy == "vmap" else strategy
-    return _batched("16to8", per_doc, validate, errors,
-                    units.shape[1])(units, lengths)
+    return batch_transcode(units, lengths, in_encoding="utf16",
+                           out_encoding="utf8", strategy=strategy,
+                           validate=validate, errors=errors)
+
+
+def batch_utf8_to_codepoints(docs, lengths, *, strategy: str = "packed",
+                             validate: bool = True,
+                             errors: str = "strict"):
+    """Batched UTF-8 -> UTF-32 code points: the device-side decode the
+    codepoint-consuming models ingest (one fused/ragged launch, not the
+    host-side ``core/utf32.py`` helpers)."""
+    return batch_transcode(docs, lengths, in_encoding="utf8",
+                           out_encoding="utf32", strategy=strategy,
+                           validate=validate, errors=errors)
 
 
 @dataclasses.dataclass
@@ -175,6 +196,12 @@ class PipelineConfig:
     host_id: int = 0
     n_hosts: int = 1
     validate: bool = True
+    # "tokens" (default): byte-tokenized BOS/doc/EOS frames.
+    # "codepoints": the batch additionally carries per-document UTF-32
+    # code points, decoded ON DEVICE through the fused/ragged
+    # UTF-8 -> UTF-32 matrix cell (one packed launch per batch — not the
+    # host-side core/utf32.py helpers).
+    emit: str = "tokens"
 
 
 class TextPipeline:
@@ -236,7 +263,7 @@ class TextPipeline:
     def next_batch(self):
         """Local (per-host) batch for the current global step."""
         cfg = self.cfg
-        toks, labs = [], []
+        toks, labs, raws, lens = [], [], [], []
         for k in range(cfg.global_batch):
             if k % cfg.n_hosts != cfg.host_id:
                 continue  # deterministic host sharding
@@ -248,11 +275,23 @@ class TextPipeline:
                 raise ValueError(f"invalid UTF-8 document at step={self.step}")
             toks.append(t)
             labs.append(l)
+            raws.append(raw)
+            lens.append(len(doc))
         self.step += 1
-        return {
+        batch = {
             "tokens": jnp.stack(toks),
             "labels": jnp.stack(labs),
         }
+        if cfg.emit == "codepoints":
+            # Device-side decode to the UTF-32 interchange format: ONE
+            # ragged packed launch for the whole local batch through the
+            # fused UTF-8 -> UTF-32 matrix cell.
+            res = batch_utf8_to_codepoints(
+                np.stack(raws), np.asarray(lens, np.int32),
+                validate=cfg.validate)
+            batch["codepoints"] = res.buffer
+            batch["cp_counts"] = res.count
+        return batch
 
     def __iter__(self):
         while True:

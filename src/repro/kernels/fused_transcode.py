@@ -1,27 +1,27 @@
-"""Fused two-pass Pallas transcode pipeline (strategy ``"fused"``).
+"""Fused two-pass Pallas transcode pipeline (strategy ``"fused"``) —
+pair-agnostic over the codec matrix.
 
 This is the hierarchical, in-kernel answer to the global cumsum+scatter
-compaction of ``repro.core.transcode`` (DESIGN.md §5).  The block-parallel
-strategy round-trips three full-capacity int32 candidate arrays
-(cp / lead / units, 12 bytes per input byte) through HBM before XLA
-compacts them — the TPU analogue of writing every speculative lane to
-memory and shuffling afterwards.  Here nothing full-capacity and nothing
-int32 ever leaves the kernels:
+compaction of ``repro.core.transcode`` (DESIGN.md §5), generalized from
+two hardwired format pairs to the full decode×encode matrix of
+``repro.kernels.stages`` (DESIGN.md §8).  Nothing full-capacity and
+nothing int32 ever leaves the kernels:
 
   Pass 1 (count)   Each grid step speculatively decodes its VMEM tile
-                   (re-using :func:`repro.kernels.utf8_decode.decode_tile`
-                   / :func:`repro.kernels.utf16_encode.encode_tile`) and
+                   through the *source* codec's decode stage, lengths it
+                   through the *destination* codec's encode stage, and
                    emits THREE scalars — the tile's total output length,
                    a fused validation flag, and the tile's first-error
                    offset.  Validation is *folded into this scan*
-                   (DESIGN.md §4): the Keiser-Lemire nibble tables run
-                   against the tile already resident in VMEM, and the
-                   maximal-subpart analysis
-                   (``repro.core.utf8.analyze_subparts``) locates the
-                   first ill-formed sequence with Python
-                   ``UnicodeDecodeError.start`` semantics.  No standalone
-                   validation pass re-reads the input.  HBM egress: 12
-                   bytes per 1024-element tile.
+                   (DESIGN.md §4): the source's maximal-subpart analysis
+                   locates the first ill-formed sequence with Python
+                   ``UnicodeDecodeError.start`` semantics, the
+                   destination's encode-error map folds in unencodable
+                   scalars (Latin-1 egress), and the source's extra
+                   detector (the Keiser-Lemire nibble tables for UTF-8)
+                   rides along VMEM-resident.  No standalone validation
+                   pass re-reads the input.  HBM egress: 12 bytes per
+                   1024-element tile.
 
   Inter-tile scan  An ``nblk``-element exclusive cumsum over the per-tile
                    totals (``compaction.tile_base_offsets``) yields each
@@ -30,45 +30,24 @@ int32 ever leaves the kernels:
 
   Pass 2 (write)   Each grid step re-decodes its tile (decode is cheap;
                    bandwidth is not), compacts it *inside VMEM* with an
-                   intra-tile exclusive scan (``tile_exclusive_scan``) and
-                   an in-register scatter — the hierarchical equivalent of
-                   AVX-512 ``vpcompressb`` compress-store — and stores the
-                   compact tile at ``base[tile]``.  Output lane j of the
-                   final buffer is written exactly once, at
-                   ``base[tile] + local_rank``.
+                   intra-tile exclusive scan plus an in-register scatter
+                   — the hierarchical equivalent of AVX-512
+                   ``vpcompressb`` compress-store — and stores the
+                   compact tile at ``base[tile]``.
 
-Error semantics (the ``errors=`` policy, DESIGN.md §4):
+Per-tile staging widths are sized for the SPECULATIVE worst case, derived
+per pair by ``stages.driver.stage_units`` (the destination's unit length
+at the source's largest fabricable code point).  The derivation replaced
+hand-sized per-pair constants and fixed a real overflow: the old
+UTF-16→UTF-8 bound of ``3*BLOCK + 1`` undersized surrogate-flood garbage,
+where EVERY lane folds to a supplementary pair code point and claims 4
+candidate bytes (``4*BLOCK`` per tile).
 
-  * ``errors="strict"``   — historical behavior: the output buffer holds
-    the speculative transcode (bit-identical to ``blockparallel``), and
-    the int32 ``status`` of the returned
-    :class:`repro.core.result.TranscodeResult` carries the offset of the
-    first invalid maximal subpart (-1 when valid).
-  * ``errors="replace"``  — malformed input transcodes at full speed:
-    every maximal subpart of an ill-formed sequence (W3C / CPython
-    semantics) emits one U+FFFD, selected branch-free inside the same
-    count/write kernels (the policy is a static compile-time switch; no
-    data-dependent branch exists in either kernel).  ``status`` still
-    reports where the first substitution happened.
-
-The writer stores a full tile-width window at ``base[tile]``; the slack
-beyond the tile's total is overwritten by the next tile's window (grid
-steps execute in order), and the slack after the *last* tile is cleared
-by the wrapper.  I/O dtypes are narrow end-to-end: UTF-8 bytes travel as
-``uint8`` and UTF-16 units as ``uint16``; lanes widen to int32 only
-inside VMEM.  Ingress HBM traffic drops 4x vs the int32 paths.
-
-Interpreter-mode notes: the in-tile compaction is expressed as a jnp
-scatter on VMEM-resident values and the writer output block is the whole
-staging buffer revisited every grid step with a dynamic-offset store.
-Both passes are plain ``pl.pallas_call``s and run under
-``interpret=True`` on CPU (auto-detected, see ``repro.kernels.runtime``).
-Compiled-TPU caveat: the whole-buffer output block implies full-buffer
-VMEM residency, which bounds a single call to roughly VMEM-sized inputs
-(~4 MB); larger documents must be chunked at that granularity, or the
-writer re-expressed with a per-tile output block at a scalar-prefetched
-base offset (PrefetchScalarGridSpec) plus the on-chip shuffle form of
-the in-tile scatter — the planned shape for real-TPU deployment.
+Error semantics (the ``errors=`` policy, DESIGN.md §4) and the
+interpreter/compiled execution notes are unchanged from the two-pair
+pipeline; see the strategy table in DESIGN.md §5 and the codec matrix in
+§8.  I/O dtypes are narrow end-to-end (uint8/uint16/uint32 by format);
+lanes widen to int32 only inside VMEM.
 """
 
 from __future__ import annotations
@@ -81,29 +60,19 @@ from jax.experimental import pallas as pl
 
 from repro.core import compaction
 from repro.core import result as R
-from repro.core import tables as T
-from repro.core import utf16 as u16mod
 from repro.kernels import runtime
-from repro.kernels import utf8_decode as kdec
-from repro.kernels import utf8_validate as kval
-from repro.kernels import utf16_encode as kenc
+from repro.kernels import stages
+from repro.kernels.stages import driver as sdrv
 
-ROWS = 8
-LANES = 128
-BLOCK = ROWS * LANES
-# Per-tile staging widths are sized for the SPECULATIVE worst case, not the
-# valid-input worst case: on garbage input every byte of a tile can decode
-# as a 4-byte lead with a supplementary code point (2 units), so a UTF-8
-# tile can claim up to 2*BLOCK units.  A UTF-16 tile tops out at
-# 3*BLOCK + 1 bytes: a 4-byte lane is normally followed in-tile by its
-# 0-byte trailing-surrogate lane, EXCEPT in the last lane, whose pairing
-# low surrogate lives in the next tile (1023 three-byte lanes + one
-# 4-byte lane).  Undersizing these desynchronizes base offsets from
-# blockparallel's global cumsum and overflows the windowed store.
-# errors="replace" stays within the same bounds (a replacement lane is 1
-# unit / 3 bytes, never more than the speculative maximum).
-STAGE16 = 2 * BLOCK      # max UTF-16 units out of one 1024-byte UTF-8 tile
-STAGE8 = 3 * BLOCK + 1   # max UTF-8 bytes out of one 1024-unit UTF-16 tile
+ROWS = sdrv.ROWS
+LANES = sdrv.LANES
+BLOCK = sdrv.BLOCK
+
+# Back-compat stage-width constants (now derived, not hand-sized): the
+# worst-case UTF-16 units out of one UTF-8 tile and UTF-8 bytes out of
+# one UTF-16 tile.
+STAGE16 = stages.stage_width(stages.UTF8, stages.UTF16)   # 2 * BLOCK
+STAGE8 = stages.stage_width(stages.UTF16, stages.UTF8)    # 4 * BLOCK
 
 _IMAX = R.NO_ERR_SENTINEL
 
@@ -123,7 +92,7 @@ _check_errors = R.check_errors_policy
 
 
 # Shared BlockSpecs: one definition of the tile geometry / neighbour-tile
-# offset convention for the count and write passes of both directions —
+# offset convention for the count and write passes of every pair —
 # desynchronizing them would compute base offsets on a different tiling
 # than the writer stores with.
 def _tile_spec(off):
@@ -132,127 +101,91 @@ def _tile_spec(off):
 
 
 _SCALAR_SPEC = pl.BlockSpec((1,), lambda i: (0,))     # broadcast scalar
-_TABLE_SPEC = pl.BlockSpec((16,), lambda i: (0,))     # KL nibble table
 _PER_TILE_SPEC = pl.BlockSpec((1,), lambda i: (i,))   # per-tile scalar out
 
 
+def _table_specs(src: stages.Codec):
+    """Broadcast BlockSpecs for the source codec's validation tables."""
+    return [pl.BlockSpec((len(t),), lambda i: (0,)) for t in src.tables]
+
+
 # ---------------------------------------------------------------------------
-# UTF-8 -> UTF-16
-#
-# The per-tile count/write bodies are free functions of VMEM-resident
-# arrays so the ragged packed-batch kernels
-# (``repro.kernels.ragged_transcode``) can run EXACTLY the same scan with
-# a per-document live mask — one definition of the transcode per
-# direction, two launch geometries (single stream / packed batch).
+# Generic kernels: ONE count body and ONE write body serve every
+# (src, dst) cell of the codec matrix; the format pair is a static
+# parameter resolved through the stages registry.  The per-tile bodies
+# are free functions of VMEM-resident arrays so the ragged packed-batch
+# kernels (``repro.kernels.ragged_transcode``) run EXACTLY the same scan
+# with a per-document live mask — one definition of the transcode per
+# pair, two launch geometries (single stream / packed batch).
 
 
-def count8_tile(b, bp, bn, live, gidx, t1h, t1l, t2h, *, errors, validate):
-    """One counting/validating scan of a VMEM tile.
+def _count_kernel(*refs, src, dst, errors, validate):
+    codec_s, codec_d = stages.get_codec(src), stages.get_codec(dst)
+    nt = len(codec_s.tables)
+    table_refs = refs[:nt]
+    n_ref, xp_ref, x_ref, xn_ref, tot_ref, err_ref, ferr_ref = refs[nt:]
+    x = x_ref[...].astype(jnp.int32)
+    xp = xp_ref[...].astype(jnp.int32)
+    xn = xn_ref[...].astype(jnp.int32)
+    gidx = _gidx(x.shape)
+    tot_ref[0], err_ref[0], ferr_ref[0] = sdrv.count_tile(
+        codec_s, codec_d, x, xp, xn, gidx < n_ref[0], gidx,
+        tuple(t[...] for t in table_refs), errors=errors, validate=validate)
 
-    ``live`` is the caller's in-stream mask (single stream: ``gidx < n``;
-    ragged: ``gidx < doc_end``).  Returns the three per-tile scalars
-    ``(total, err_flag, first_err_gidx)`` — first-error offsets are in
-    *global* stream coordinates (callers subtract the document start).
+
+def _write_kernel(n_ref, base_ref, xp_ref, x_ref, xn_ref, out_ref, *,
+                  src, dst, errors):
+    codec_s, codec_d = stages.get_codec(src), stages.get_codec(dst)
+    width = stages.stage_width(codec_s, codec_d)
+    x = x_ref[...].astype(jnp.int32)
+    xp = xp_ref[...].astype(jnp.int32)
+    xn = xn_ref[...].astype(jnp.int32)
+    stage = sdrv.write_stage(codec_s, codec_d, x, xp, xn,
+                             _gidx(x.shape) < n_ref[0], errors=errors)
+    out_ref[pl.ds(base_ref[0], width)] = stage.astype(codec_d.dtype)
+
+
+def _count_call(xm, n, src, dst, errors, validate, interpret):
+    """One counting/validating scan over the tiled input.
+
+    Returns (x3, nblk, totals, errs, ferrs): the padded tiles plus the
+    per-tile output totals, fused error flags and first-error offsets.
     """
-    need_analysis = validate or errors == "replace"
-    a = kdec.analyze_tile(b, bp, bn) if need_analysis else None
-    if errors == "replace":
-        tot = jnp.sum(jnp.where(a["starts"] & live, a["units"], 0))
-    else:
-        _cp, is_lead, units, _err = kdec.decode_tile(b, bp, bn)
-        tot = jnp.sum(jnp.where(is_lead & live, units, 0))
-
-    if validate:
-        # Fused validation, one scan: the paper-faithful Keiser-Lemire
-        # nibble tables give the structural verdict, the maximal-subpart
-        # map locates the first error at its lead byte (Python exc.start
-        # semantics).  The detectors are equivalent on live bytes (the
-        # fuzz suite pins both to CPython); KL rides along deliberately —
-        # it is the paper's §4 validator, and OR-ing it in means a defect
-        # in either detector degrades to a located (or offset-0) error
-        # rather than a silently accepted invalid stream.
-        kl = kval.kl_error_tile(b, bp, t1h, t1l, t2h) & live
-        sub = a["err"] & live
-        err = jnp.max((kl | sub).astype(jnp.int32))
-        ferr = jnp.min(jnp.where(sub, gidx, _IMAX))
-    else:
-        err = jnp.int32(0)
-        ferr = jnp.int32(_IMAX)
-    return tot, err, ferr
-
-
-def write8_stage(b, bp, bn, instream, *, errors):
-    """Decode + in-tile compaction of one tile: the write-pass body.
-
-    ``instream`` is the caller's in-stream mask of ``b``'s shape.
-    Returns the compact int32 stage window (STAGE16 lanes); the caller
-    stores it at the tile's base offset.
-    """
-    if errors == "replace":
-        a = kdec.analyze_tile(b, bp, bn)
-        cp = a["cp"]
-        live = (a["starts"] & instream).reshape(-1)
-        eff = jnp.where(live, a["units"].reshape(-1), 0)
-    else:
-        cp, is_lead, units, _err = kdec.decode_tile(b, bp, bn)
-        live = (is_lead & instream).reshape(-1)
-        eff = jnp.where(live, units.reshape(-1), 0)
-    rank, _tot = compaction.tile_exclusive_scan(eff, rows=ROWS)
-    _u, u0, u1, _bad = u16mod.encode_candidates(cp)
-    # In-register compress-store (vpcompressb analogue): scatter the 1-2
-    # code units of each live lane to base-relative rank inside VMEM.
-    stage = jnp.zeros((STAGE16,), jnp.int32)
-    stage = stage.at[jnp.where(live, rank, STAGE16)].set(
-        u0.reshape(-1), mode="drop")
-    stage = stage.at[jnp.where(live & (eff == 2), rank + 1, STAGE16)].set(
-        u1.reshape(-1), mode="drop")
-    return stage
-
-
-def _count8_kernel(t1h_ref, t1l_ref, t2h_ref, n_ref, bp_ref, b_ref, bn_ref,
-                   tot_ref, err_ref, ferr_ref, *, errors, validate):
-    b = b_ref[...].astype(jnp.int32)
-    bp = bp_ref[...].astype(jnp.int32)
-    bn = bn_ref[...].astype(jnp.int32)
-    gidx = _gidx(b.shape)
-    tot_ref[0], err_ref[0], ferr_ref[0] = count8_tile(
-        b, bp, bn, gidx < n_ref[0], gidx,
-        t1h_ref[...], t1l_ref[...], t2h_ref[...],
-        errors=errors, validate=validate)
-
-
-def _write8_kernel(n_ref, base_ref, bp_ref, b_ref, bn_ref, out_ref, *,
-                   errors):
-    b = b_ref[...].astype(jnp.int32)
-    bp = bp_ref[...].astype(jnp.int32)
-    bn = bn_ref[...].astype(jnp.int32)
-    stage = write8_stage(b, bp, bn, _gidx(b.shape) < n_ref[0], errors=errors)
-    out_ref[pl.ds(base_ref[0], STAGE16)] = stage.astype(jnp.uint16)
-
-
-def _count8_call(bm, n, errors, validate, interpret):
-    """One counting/validating scan over the tiled bytes.
-
-    Returns (totals, errs, ferrs): per-tile output totals, fused
-    error flags and first-error offsets.
-    """
-    b3, nblk = _tile(bm)
+    codec_s = stages.get_codec(src)
+    x3, nblk = _tile(xm)
     n1 = jnp.asarray(n, jnp.int32).reshape(1)
-    kernel = functools.partial(_count8_kernel, errors=errors,
-                               validate=validate)
+    kernel = functools.partial(_count_kernel, src=src, dst=dst,
+                               errors=errors, validate=validate)
+    per_tile = jax.ShapeDtypeStruct((nblk,), jnp.int32)
     totals, errs, ferrs = pl.pallas_call(
         kernel,
         grid=(nblk,),
-        in_specs=[_TABLE_SPEC, _TABLE_SPEC, _TABLE_SPEC, _SCALAR_SPEC,
-                  _tile_spec(0), _tile_spec(1), _tile_spec(2)],
+        in_specs=_table_specs(codec_s) + [
+            _SCALAR_SPEC, _tile_spec(0), _tile_spec(1), _tile_spec(2)],
         out_specs=[_PER_TILE_SPEC, _PER_TILE_SPEC, _PER_TILE_SPEC],
-        out_shape=[jax.ShapeDtypeStruct((nblk,), jnp.int32),
-                   jax.ShapeDtypeStruct((nblk,), jnp.int32),
-                   jax.ShapeDtypeStruct((nblk,), jnp.int32)],
+        out_shape=[per_tile, per_tile, per_tile],
         interpret=interpret,
-    )(jnp.asarray(T.BYTE_1_HIGH), jnp.asarray(T.BYTE_1_LOW),
-      jnp.asarray(T.BYTE_2_HIGH), n1, b3, b3, b3)
-    return b3, nblk, totals, errs, ferrs
+    )(*[jnp.asarray(t) for t in codec_s.tables], n1, x3, x3, x3)
+    return x3, nblk, totals, errs, ferrs
+
+
+def _write_call(x3, nblk, base, n, src, dst, errors, interpret):
+    codec_s, codec_d = stages.get_codec(src), stages.get_codec(dst)
+    width = stages.stage_width(codec_s, codec_d)
+    n1 = jnp.asarray(n, jnp.int32).reshape(1)
+    return pl.pallas_call(
+        functools.partial(_write_kernel, src=src, dst=dst, errors=errors),
+        grid=(nblk,),
+        in_specs=[_SCALAR_SPEC, _PER_TILE_SPEC,
+                  _tile_spec(0), _tile_spec(1), _tile_spec(2)],
+        # The whole compact buffer is one revisited block: each grid step
+        # stores its tile at a data-dependent offset inside it.  Sized so
+        # the window store at the largest possible base (the speculative
+        # worst case per preceding tile) fits.
+        out_specs=pl.BlockSpec((nblk * width,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((nblk * width,), codec_d.dtype),
+        interpret=interpret,
+    )(n1, base, x3, x3, x3)
 
 
 def _status(errs, ferrs, validate):
@@ -262,280 +195,159 @@ def _status(errs, ferrs, validate):
     return R.status_from_first(first, jnp.max(errs, initial=0) > 0)
 
 
-@functools.partial(jax.jit, static_argnames=("validate", "interpret",
-                                             "ascii_fastpath", "masked",
-                                             "errors"))
-def _utf8_to_utf16_impl(b, n, validate, interpret, ascii_fastpath, masked,
-                        errors):
-    cap = b.shape[0]
-    idx = jnp.arange(cap)
-    bm = jnp.where(idx < n, b, 0).astype(jnp.uint8) if masked else b
+@functools.partial(jax.jit, static_argnames=("src", "dst", "validate",
+                                             "interpret", "ascii_fastpath",
+                                             "masked", "errors"))
+def _transcode_impl(x, n, src, dst, validate, interpret, ascii_fastpath,
+                    masked, errors):
+    codec_s, codec_d, factor = stages.get_pair(src, dst)
+    cap_in = x.shape[0]
+    cap = factor * cap_in
+    idx = jnp.arange(cap_in)
+    xm = jnp.where(idx < n, x, 0).astype(codec_s.dtype) if masked else x
 
-    def general(bm):
-        b3, nblk, totals, errs, ferrs = _count8_call(
-            bm, n, errors, validate, interpret)
-        n1 = jnp.asarray(n, jnp.int32).reshape(1)
+    def general(xm):
+        x3, nblk, totals, errs, ferrs = _count_call(
+            xm, n, src, dst, errors, validate, interpret)
         base, total = compaction.tile_base_offsets(totals)
-        outp = pl.pallas_call(
-            functools.partial(_write8_kernel, errors=errors),
-            grid=(nblk,),
-            in_specs=[_SCALAR_SPEC, _PER_TILE_SPEC,
-                      _tile_spec(0), _tile_spec(1), _tile_spec(2)],
-            # The whole compact buffer is one revisited block: each grid
-            # step stores its tile at a data-dependent offset inside it.
-            # Sized so the window store at the largest possible base
-            # (STAGE16 per preceding tile, speculative worst case) fits.
-            out_specs=pl.BlockSpec((nblk * STAGE16,), lambda i: (0,)),
-            out_shape=jax.ShapeDtypeStruct((nblk * STAGE16,), jnp.uint16),
-            interpret=interpret,
-        )(n1, base, b3, b3, b3)
+        outp = _write_call(x3, nblk, base, n, src, dst, errors, interpret)
         # Keep the first `cap` lanes (matching blockparallel's drop-at-
         # capacity) and clear the write-window slack after the last tile.
         outp = outp[:cap]
-        outp = jnp.where(jnp.arange(cap) < total, outp, 0)
+        outp = jnp.where(jnp.arange(cap) < total, outp,
+                         jnp.zeros((), codec_d.dtype))
         return R.TranscodeResult(outp, total, _status(errs, ferrs, validate))
 
-    def ascii(bm):
-        # Paper Algorithm 3 fast path: widening copy (uint8 -> uint16).
-        return R.TranscodeResult(bm.astype(jnp.uint16),
-                                 jnp.asarray(n, jnp.int32),
+    def ascii(xm):
+        # Paper Algorithm 3 fast path: ASCII values are numerically
+        # identical in every matrix format — a widening/narrowing copy.
+        out = xm.astype(codec_d.dtype)
+        if cap > cap_in:
+            out = jnp.concatenate(
+                [out, jnp.zeros((cap - cap_in,), codec_d.dtype)])
+        return R.TranscodeResult(out, jnp.asarray(n, jnp.int32),
                                  jnp.int32(R.STATUS_OK))
 
     if not ascii_fastpath:
-        return general(bm)
-    return jax.lax.cond(jnp.all(bm < 0x80), ascii, general, bm)
+        return general(xm)
+    return jax.lax.cond(jnp.all(xm < 0x80), ascii, general, xm)
+
+
+def transcode_fused(x, n_valid=None, *, src: str, dst: str,
+                    validate: bool = True, errors: str = "strict",
+                    interpret=None, ascii_fastpath: bool = True):
+    """Fused two-pass transcode for any (src, dst) cell of the matrix.
+
+    Returns ``TranscodeResult(buffer[dst dtype, capacity =
+    cap_factor * len(x)], count, status)`` — under ``errors="strict"``,
+    ``buffer[:count]`` and ``count`` are bit-identical to the
+    block-parallel strategy and ``status`` carries the first invalid
+    input offset (-1 = valid); under ``errors="replace"`` every maximal
+    subpart of an ill-formed sequence becomes U+FFFD — and every
+    Latin-1-unencodable code point becomes ``?`` — with CPython
+    substitution semantics at full speed.  Validation is fused into the
+    counting scan: the input is never read by a standalone pass.
+    """
+    _check_errors(errors)
+    codec_s, _codec_d, _f = stages.get_pair(src, dst)
+    x = jnp.asarray(x)
+    if x.dtype != codec_s.dtype:
+        x = x.astype(codec_s.dtype)
+    n = x.shape[0] if n_valid is None else n_valid
+    return _transcode_impl(
+        x, jnp.asarray(n, jnp.int32), src, dst, validate,
+        runtime.resolve_interpret(interpret), ascii_fastpath,
+        n_valid is not None, errors)
+
+
+@functools.partial(jax.jit, static_argnames=("src", "dst", "interpret",
+                                             "masked"))
+def _scan_impl(x, n, src, dst, interpret, masked):
+    codec_s = stages.get_codec(src)
+    idx = jnp.arange(x.shape[0])
+    xm = jnp.where(idx < n, x, 0).astype(codec_s.dtype) if masked else x
+    _x3, _nblk, totals, errs, ferrs = _count_call(
+        xm, n, src, dst, "strict", True, interpret)
+    return jnp.sum(totals), _status(errs, ferrs, True)
+
+
+def scan_fused(x, n_valid=None, *, src: str, dst: str, interpret=None):
+    """Single-scan validation + capacity query: ``(count, status)``.
+
+    Runs ONLY the fused pipeline's counting pass — one read of the input
+    yields the simdutf-style verdict: ``status`` is -1 for valid
+    streams, else the input offset of the first invalid maximal subpart
+    (Python ``UnicodeDecodeError.start``), and ``count`` is the number
+    of destination units a transcode would produce.  This is the
+    ingestion-boundary API (serve ingress): validation with error
+    location at the cost of a capacity query.
+    """
+    codec_s, _codec_d, _f = stages.get_pair(src, dst)
+    x = jnp.asarray(x)
+    if x.dtype != codec_s.dtype:
+        x = x.astype(codec_s.dtype)
+    n = x.shape[0] if n_valid is None else n_valid
+    return _scan_impl(x, jnp.asarray(n, jnp.int32), src, dst,
+                      runtime.resolve_interpret(interpret),
+                      n_valid is not None)
+
+
+# ---------------------------------------------------------------------------
+# Thin per-pair instantiations (the pre-matrix public API, and the tile
+# bodies the ragged kernels compose with a per-document live mask).
+
+
+def count8_tile(b, bp, bn, live, gidx, t1h, t1l, t2h, *, errors, validate):
+    """UTF-8→UTF-16 cell of the generic count driver (back-compat)."""
+    return sdrv.count_tile(stages.UTF8, stages.UTF16, b, bp, bn, live, gidx,
+                           (t1h, t1l, t2h), errors=errors, validate=validate)
+
+
+def write8_stage(b, bp, bn, instream, *, errors):
+    """UTF-8→UTF-16 cell of the generic write driver (back-compat)."""
+    return sdrv.write_stage(stages.UTF8, stages.UTF16, b, bp, bn, instream,
+                            errors=errors)
+
+
+def count16_tile(u, up, un, live, gidx, *, errors, validate):
+    """UTF-16→UTF-8 cell of the generic count driver (back-compat)."""
+    return sdrv.count_tile(stages.UTF16, stages.UTF8, u, up, un, live, gidx,
+                           (), errors=errors, validate=validate)
+
+
+def write16_stage(u, up, un, instream, *, errors):
+    """UTF-16→UTF-8 cell of the generic write driver (back-compat)."""
+    return sdrv.write_stage(stages.UTF16, stages.UTF8, u, up, un, instream,
+                            errors=errors)
 
 
 def utf8_to_utf16_fused(b, n_valid=None, *, validate: bool = True,
                         errors: str = "strict", interpret=None,
                         ascii_fastpath: bool = True):
-    """Fused two-pass UTF-8 -> UTF-16 transcode.
-
-    Returns ``TranscodeResult(u16_buffer[uint16, capacity=len(b)], count,
-    status)`` — under ``errors="strict"``, ``buffer[:count]`` and
-    ``count`` are bit-identical to the block-parallel strategy and
-    ``status`` carries the first invalid byte offset (-1 = valid); under
-    ``errors="replace"`` every maximal subpart of an ill-formed sequence
-    becomes U+FFFD (CPython ``errors="replace"`` semantics) at full
-    speed.  Validation is fused into the counting scan: the input bytes
-    are never read by a standalone validation pass.
-    """
-    _check_errors(errors)
-    b = jnp.asarray(b)
-    if b.dtype != jnp.uint8:
-        b = b.astype(jnp.uint8)
-    n = b.shape[0] if n_valid is None else n_valid
-    return _utf8_to_utf16_impl(
-        b, jnp.asarray(n, jnp.int32), validate,
-        runtime.resolve_interpret(interpret), ascii_fastpath,
-        n_valid is not None, errors)
-
-
-@functools.partial(jax.jit, static_argnames=("interpret", "masked"))
-def _utf8_scan_impl(b, n, interpret, masked):
-    cap = b.shape[0]
-    idx = jnp.arange(cap)
-    bm = jnp.where(idx < n, b, 0).astype(jnp.uint8) if masked else b
-    _b3, _nblk, totals, errs, ferrs = _count8_call(
-        bm, n, "strict", True, interpret)
-    return jnp.sum(totals), _status(errs, ferrs, True)
-
-
-def utf8_scan_fused(b, n_valid=None, *, interpret=None):
-    """Single-scan UTF-8 validation + UTF-16 length: (count, status).
-
-    Runs ONLY the fused pipeline's counting pass — one read of the input
-    bytes yields the simdutf-style verdict: ``status`` is -1 for valid
-    streams, else the byte offset of the first invalid maximal subpart
-    (Python ``UnicodeDecodeError.start``), and ``count`` is the UTF-16
-    code units a transcode would produce.  This is the ingestion-boundary
-    API (serve ingress): validation with error location at the cost of a
-    capacity query.
-    """
-    b = jnp.asarray(b)
-    if b.dtype != jnp.uint8:
-        b = b.astype(jnp.uint8)
-    n = b.shape[0] if n_valid is None else n_valid
-    return _utf8_scan_impl(b, jnp.asarray(n, jnp.int32),
-                           runtime.resolve_interpret(interpret),
-                           n_valid is not None)
-
-
-# ---------------------------------------------------------------------------
-# UTF-16 -> UTF-8
-
-
-def count16_tile(u, up, un, live, gidx, *, errors, validate):
-    """One counting/validating scan of a UTF-16 VMEM tile.
-
-    Same contract as :func:`count8_tile` (shared with the ragged packed
-    kernels): returns ``(total, err_flag, first_err_gidx)`` with the
-    first-error offset in global stream coordinates.
-    """
-    need_analysis = validate or errors == "replace"
-    a = kenc.analyze_tile(u, up, un) if need_analysis else None
-    if errors == "replace":
-        _b0, _b1, _b2, _b3, L = kenc.utf8_candidates(a["cp"])
-        tot = jnp.sum(jnp.where(a["starts"] & live, L, 0))
-    else:
-        _b0, _b1, _b2, _b3, L, _err_map = kenc.encode_tile(u, up, un)
-        tot = jnp.sum(jnp.where((L > 0) & live, L, 0))
-
-    if validate:
-        sub = a["err"] & live
-        err = jnp.max(sub.astype(jnp.int32))
-        ferr = jnp.min(jnp.where(sub, gidx, _IMAX))
-    else:
-        err = jnp.int32(0)
-        ferr = jnp.int32(_IMAX)
-    return tot, err, ferr
-
-
-def write16_stage(u, up, un, instream, *, errors):
-    """Encode + in-tile compaction of one UTF-16 tile (write-pass body)."""
-    if errors == "replace":
-        a = kenc.analyze_tile(u, up, un)
-        b0, b1, b2, b3, L = kenc.utf8_candidates(a["cp"])
-        live = (a["starts"] & instream).reshape(-1)
-    else:
-        b0, b1, b2, b3, L, _err = kenc.encode_tile(u, up, un)
-        live = ((L > 0) & instream).reshape(-1)
-    eff = jnp.where(live, L.reshape(-1), 0)
-    rank, _tot = compaction.tile_exclusive_scan(eff, rows=ROWS)
-    # Variable 1-4 byte egress: ``compact_offsets`` semantics, in-tile.
-    stage = jnp.zeros((STAGE8,), jnp.int32)
-    stage = stage.at[jnp.where(live, rank, STAGE8)].set(
-        b0.reshape(-1), mode="drop")
-    stage = stage.at[jnp.where(live & (eff >= 2), rank + 1, STAGE8)].set(
-        b1.reshape(-1), mode="drop")
-    stage = stage.at[jnp.where(live & (eff >= 3), rank + 2, STAGE8)].set(
-        b2.reshape(-1), mode="drop")
-    stage = stage.at[jnp.where(live & (eff == 4), rank + 3, STAGE8)].set(
-        b3.reshape(-1), mode="drop")
-    return stage
-
-
-def _count16_kernel(n_ref, up_ref, u_ref, un_ref,
-                    tot_ref, err_ref, ferr_ref, *, errors, validate):
-    u = u_ref[...].astype(jnp.int32)
-    up = up_ref[...].astype(jnp.int32)
-    un = un_ref[...].astype(jnp.int32)
-    gidx = _gidx(u.shape)
-    tot_ref[0], err_ref[0], ferr_ref[0] = count16_tile(
-        u, up, un, gidx < n_ref[0], gidx, errors=errors, validate=validate)
-
-
-def _write16_kernel(n_ref, base_ref, up_ref, u_ref, un_ref, out_ref, *,
-                    errors):
-    u = u_ref[...].astype(jnp.int32)
-    up = up_ref[...].astype(jnp.int32)
-    un = un_ref[...].astype(jnp.int32)
-    stage = write16_stage(u, up, un, _gidx(u.shape) < n_ref[0],
-                          errors=errors)
-    out_ref[pl.ds(base_ref[0], STAGE8)] = stage.astype(jnp.uint8)
-
-
-def _count16_call(um, n, errors, validate, interpret):
-    u3, nblk = _tile(um)
-    n1 = jnp.asarray(n, jnp.int32).reshape(1)
-    kernel = functools.partial(_count16_kernel, errors=errors,
-                               validate=validate)
-    totals, errs, ferrs = pl.pallas_call(
-        kernel,
-        grid=(nblk,),
-        in_specs=[_SCALAR_SPEC, _tile_spec(0), _tile_spec(1), _tile_spec(2)],
-        out_specs=[_PER_TILE_SPEC, _PER_TILE_SPEC, _PER_TILE_SPEC],
-        out_shape=[jax.ShapeDtypeStruct((nblk,), jnp.int32),
-                   jax.ShapeDtypeStruct((nblk,), jnp.int32),
-                   jax.ShapeDtypeStruct((nblk,), jnp.int32)],
-        interpret=interpret,
-    )(n1, u3, u3, u3)
-    return u3, nblk, totals, errs, ferrs
-
-
-@functools.partial(jax.jit, static_argnames=("validate", "interpret",
-                                             "ascii_fastpath", "masked",
-                                             "errors"))
-def _utf16_to_utf8_impl(u, n, validate, interpret, ascii_fastpath, masked,
-                        errors):
-    cap_in = u.shape[0]
-    cap = 3 * cap_in
-    idx = jnp.arange(cap_in)
-    um = jnp.where(idx < n, u, 0).astype(jnp.uint16) if masked else u
-
-    def general(um):
-        u3, nblk, totals, errs, ferrs = _count16_call(
-            um, n, errors, validate, interpret)
-        n1 = jnp.asarray(n, jnp.int32).reshape(1)
-        base, total = compaction.tile_base_offsets(totals)
-        outp = pl.pallas_call(
-            functools.partial(_write16_kernel, errors=errors),
-            grid=(nblk,),
-            in_specs=[_SCALAR_SPEC, _PER_TILE_SPEC,
-                      _tile_spec(0), _tile_spec(1), _tile_spec(2)],
-            out_specs=pl.BlockSpec((nblk * STAGE8,), lambda i: (0,)),
-            out_shape=jax.ShapeDtypeStruct((nblk * STAGE8,), jnp.uint8),
-            interpret=interpret,
-        )(n1, base, u3, u3, u3)
-        outp = outp[:cap]
-        outp = jnp.where(jnp.arange(cap) < total, outp, 0)
-        return R.TranscodeResult(outp, total, _status(errs, ferrs, validate))
-
-    def ascii(um):
-        out = jnp.concatenate(
-            [um.astype(jnp.uint8), jnp.zeros((cap - cap_in,), jnp.uint8)])
-        return R.TranscodeResult(out, jnp.asarray(n, jnp.int32),
-                                 jnp.int32(R.STATUS_OK))
-
-    if not ascii_fastpath:
-        return general(um)
-    return jax.lax.cond(jnp.all(um < 0x80), ascii, general, um)
+    """Fused UTF-8 -> UTF-16 (the (utf8, utf16) matrix cell)."""
+    return transcode_fused(b, n_valid, src="utf8", dst="utf16",
+                           validate=validate, errors=errors,
+                           interpret=interpret,
+                           ascii_fastpath=ascii_fastpath)
 
 
 def utf16_to_utf8_fused(u, n_valid=None, *, validate: bool = True,
                         errors: str = "strict", interpret=None,
                         ascii_fastpath: bool = True):
-    """Fused two-pass UTF-16 -> UTF-8 transcode.
-
-    Returns ``TranscodeResult(byte_buffer[uint8, capacity=3*len(u)],
-    count, status)`` — under ``errors="strict"`` bit-identical in
-    ``buffer[:count]``/``count`` to the block-parallel strategy, with
-    ``status`` carrying the unit offset of the first unpaired surrogate
-    (-1 = valid); under ``errors="replace"`` every unpaired half encodes
-    as U+FFFD (EF BF BD), CPython ``errors="replace"`` semantics.
-    """
-    _check_errors(errors)
-    u = jnp.asarray(u)
-    if u.dtype != jnp.uint16:
-        u = u.astype(jnp.uint16)
-    n = u.shape[0] if n_valid is None else n_valid
-    return _utf16_to_utf8_impl(
-        u, jnp.asarray(n, jnp.int32), validate,
-        runtime.resolve_interpret(interpret), ascii_fastpath,
-        n_valid is not None, errors)
+    """Fused UTF-16 -> UTF-8 (the (utf16, utf8) matrix cell)."""
+    return transcode_fused(u, n_valid, src="utf16", dst="utf8",
+                           validate=validate, errors=errors,
+                           interpret=interpret,
+                           ascii_fastpath=ascii_fastpath)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "masked"))
-def _utf16_scan_impl(u, n, interpret, masked):
-    cap_in = u.shape[0]
-    idx = jnp.arange(cap_in)
-    um = jnp.where(idx < n, u, 0).astype(jnp.uint16) if masked else u
-    _u3, _nblk, totals, errs, ferrs = _count16_call(
-        um, n, "strict", True, interpret)
-    return jnp.sum(totals), _status(errs, ferrs, True)
+def utf8_scan_fused(b, n_valid=None, *, interpret=None):
+    """Single-scan UTF-8 validation + UTF-16 length: (count, status)."""
+    return scan_fused(b, n_valid, src="utf8", dst="utf16",
+                      interpret=interpret)
 
 
 def utf16_scan_fused(u, n_valid=None, *, interpret=None):
-    """Single-scan UTF-16 validation + UTF-8 length: (count, status).
-
-    One counting-pass read of the units yields the UTF-8 byte length a
-    transcode would produce and a status that is -1 for valid streams,
-    else the unit offset of the first unpaired surrogate half.
-    """
-    u = jnp.asarray(u)
-    if u.dtype != jnp.uint16:
-        u = u.astype(jnp.uint16)
-    n = u.shape[0] if n_valid is None else n_valid
-    return _utf16_scan_impl(u, jnp.asarray(n, jnp.int32),
-                            runtime.resolve_interpret(interpret),
-                            n_valid is not None)
+    """Single-scan UTF-16 validation + UTF-8 length: (count, status)."""
+    return scan_fused(u, n_valid, src="utf16", dst="utf8",
+                      interpret=interpret)

@@ -1,44 +1,38 @@
-"""Ragged packed-batch transcode: one Pallas launch for a whole batch.
+"""Ragged packed-batch transcode: one Pallas launch for a whole batch,
+any cell of the codec matrix.
 
 The padded-vmap batch path (``data/pipeline.py`` ``strategy="vmap"``)
 maps the single-document fused pipeline over a ``[B, L]`` buffer: B
 separate grid dispatches, and every document — however short — scans all
 ``ceil(L/1024)`` of its tiles.  The packed path removes both costs.
 Documents are concatenated into ONE tile-aligned narrow buffer
-(``repro.core.packing``), and the *same* fused count/write tile bodies
-(``repro.kernels.fused_transcode.count8_tile`` / ``write8_stage`` /
-``count16_tile`` / ``write16_stage``) run as a single grid launch over
-the packed stream.  Per-document bookkeeping is all per-tile scalars:
+(``repro.core.packing``), and the *same* generic count/write tile bodies
+(``repro.kernels.stages.driver``) run as a single grid launch over the
+packed stream.  Per-document bookkeeping is all per-tile scalars:
 
   Ownership map    ``packing.tile_ownership`` (on device): tile ->
                    owning document (a searchsorted over the [B+1] offset
                    vector), the tile's document-end offset (the live
-                   mask), and same-document neighbour flags.  Offsets
-                   are tile-aligned, so every tile has exactly one
-                   owner and the map is three int32 scalars per tile.
+                   mask), and same-document neighbour flags.
 
   Count pass       One grid launch over all tiles of all documents.
                    The kernels differ from the single-stream ones in
                    precisely two multiplies: neighbour-tile inflow is
                    zeroed when the neighbour belongs to a different
-                   document (``bp * same_prev`` / ``bn * same_next`` —
-                   a character must never claim bytes across a document
-                   boundary), and the live mask compares against the
-                   tile's own document end instead of a global ``n``.
+                   document (``xp * same_prev`` / ``xn * same_next`` —
+                   a character must never claim elements across a
+                   document boundary), and the live mask compares
+                   against the tile's own document end.
 
   Segment scan     The per-tile totals feed the SAME nblk-element
                    exclusive cumsum as the single-stream pipeline
                    (``compaction.tile_base_offsets``): because documents
                    are packed in order, the dense global scan IS the
-                   per-document segment scan — document d's output
-                   base is the cumsum at its first tile, and the output
-                   is a dense packed stream with a derived [B+1] output
-                   offset vector (``cumsum(counts)``).
+                   per-document segment scan.
 
   Write pass       One grid launch; each tile compacts in VMEM and
                    stores at ``base[tile]`` exactly as the single-stream
-                   writer.  In-order grid steps make window slack
-                   self-healing across document boundaries too.
+                   writer.
 
   Per-doc reduce   counts = segment_sum(totals), error flags
                    segment_max, first-error offsets segment_min (the
@@ -49,13 +43,9 @@ the packed stream.  Per-document bookkeeping is all per-tile scalars:
                    ``status_from_first`` fold as the single-doc path.
 
 Status/errors semantics are exactly :class:`repro.core.result.
-TranscodeResult`'s, per document: ``errors="strict"`` leaves the
-speculative transcode in the buffer and reports the first invalid
-offset *relative to the document start*; ``errors="replace"`` emits one
-U+FFFD per maximal subpart (CPython semantics) at full speed.  Every
-document's output slice is bit-identical to running the single-document
-fused transcoder on that document alone (pinned by
-``tests/test_differential.py``).
+TranscodeResult`'s, per document.  Every document's output slice is
+bit-identical to running the single-document fused transcoder on that
+document alone (pinned by ``tests/test_differential.py``).
 """
 
 from __future__ import annotations
@@ -70,9 +60,10 @@ from jax.experimental import pallas as pl
 
 from repro.core import compaction, packing
 from repro.core import result as R
-from repro.core import tables as T
 from repro.kernels import fused_transcode as ft
 from repro.kernels import runtime
+from repro.kernels import stages
+from repro.kernels.stages import driver as sdrv
 
 ROWS = ft.ROWS
 LANES = ft.LANES
@@ -82,7 +73,6 @@ STAGE8 = ft.STAGE8
 
 _IMAX = R.NO_ERR_SENTINEL
 
-_TABLE_SPEC = ft._TABLE_SPEC
 _PER_TILE_SPEC = ft._PER_TILE_SPEC
 _tile_spec = ft._tile_spec
 
@@ -129,91 +119,101 @@ def _doc_reduce(totals, errs, ferrs, tile_doc, offsets, validate):
 
 
 # ---------------------------------------------------------------------------
-# UTF-8 -> UTF-16
+# Generic ragged kernels: the single-stream generic bodies plus the
+# ownership masking (cross-document neighbour inflow zeroed).
 
 
-def _rcount8_kernel(t1h_ref, t1l_ref, t2h_ref, end_ref, sp_ref, sn_ref,
-                    bp_ref, b_ref, bn_ref, tot_ref, err_ref, ferr_ref, *,
-                    errors, validate):
-    b = b_ref[...].astype(jnp.int32)
+def _rcount_kernel(*refs, src, dst, errors, validate):
+    codec_s, codec_d = stages.get_codec(src), stages.get_codec(dst)
+    nt = len(codec_s.tables)
+    table_refs = refs[:nt]
+    (end_ref, sp_ref, sn_ref, xp_ref, x_ref, xn_ref,
+     tot_ref, err_ref, ferr_ref) = refs[nt:]
+    x = x_ref[...].astype(jnp.int32)
     # Ownership masking: inflow from a neighbour tile of a DIFFERENT
     # document reads as zeros, exactly like the zero boundary tiles of
     # the single-stream pipeline.
-    bp = bp_ref[...].astype(jnp.int32) * sp_ref[0]
-    bn = bn_ref[...].astype(jnp.int32) * sn_ref[0]
-    gidx = ft._gidx(b.shape)
-    tot_ref[0], err_ref[0], ferr_ref[0] = ft.count8_tile(
-        b, bp, bn, gidx < end_ref[0], gidx,
-        t1h_ref[...], t1l_ref[...], t2h_ref[...],
-        errors=errors, validate=validate)
+    xp = xp_ref[...].astype(jnp.int32) * sp_ref[0]
+    xn = xn_ref[...].astype(jnp.int32) * sn_ref[0]
+    gidx = ft._gidx(x.shape)
+    tot_ref[0], err_ref[0], ferr_ref[0] = sdrv.count_tile(
+        codec_s, codec_d, x, xp, xn, gidx < end_ref[0], gidx,
+        tuple(t[...] for t in table_refs), errors=errors, validate=validate)
 
 
-def _rwrite8_kernel(end_ref, sp_ref, sn_ref, base_ref,
-                    bp_ref, b_ref, bn_ref, out_ref, *, errors):
-    b = b_ref[...].astype(jnp.int32)
-    bp = bp_ref[...].astype(jnp.int32) * sp_ref[0]
-    bn = bn_ref[...].astype(jnp.int32) * sn_ref[0]
-    stage = ft.write8_stage(b, bp, bn, ft._gidx(b.shape) < end_ref[0],
-                            errors=errors)
-    out_ref[pl.ds(base_ref[0], STAGE16)] = stage.astype(jnp.uint16)
+def _rwrite_kernel(end_ref, sp_ref, sn_ref, base_ref,
+                   xp_ref, x_ref, xn_ref, out_ref, *, src, dst, errors):
+    codec_s, codec_d = stages.get_codec(src), stages.get_codec(dst)
+    width = stages.stage_width(codec_s, codec_d)
+    x = x_ref[...].astype(jnp.int32)
+    xp = xp_ref[...].astype(jnp.int32) * sp_ref[0]
+    xn = xn_ref[...].astype(jnp.int32) * sn_ref[0]
+    stage = sdrv.write_stage(codec_s, codec_d, x, xp, xn,
+                             ft._gidx(x.shape) < end_ref[0], errors=errors)
+    out_ref[pl.ds(base_ref[0], width)] = stage.astype(codec_d.dtype)
 
 
-def _rcount8_call(data, offsets, lengths, errors, validate, interpret):
+def _rcount_call(data, offsets, lengths, src, dst, errors, validate,
+                 interpret):
+    codec_s = stages.get_codec(src)
     nblk = _nblk(data.shape[0])
     tile_doc, tile_end, same_prev, same_next = packing.tile_ownership(
         offsets, lengths, nblk, BLOCK)
     dm = _mask_to_docs(data, tile_end, nblk)
     d3, _ = runtime.tile_with_boundaries(dm, ROWS, LANES, boundary_tiles=2)
-    kernel = functools.partial(_rcount8_kernel, errors=errors,
-                               validate=validate)
+    kernel = functools.partial(_rcount_kernel, src=src, dst=dst,
+                               errors=errors, validate=validate)
     per_tile = jax.ShapeDtypeStruct((nblk,), jnp.int32)
     totals, errs, ferrs = pl.pallas_call(
         kernel,
         grid=(nblk,),
-        in_specs=[_TABLE_SPEC, _TABLE_SPEC, _TABLE_SPEC,
-                  _PER_TILE_SPEC, _PER_TILE_SPEC, _PER_TILE_SPEC,
-                  _tile_spec(0), _tile_spec(1), _tile_spec(2)],
+        in_specs=ft._table_specs(codec_s) + [
+            _PER_TILE_SPEC, _PER_TILE_SPEC, _PER_TILE_SPEC,
+            _tile_spec(0), _tile_spec(1), _tile_spec(2)],
         out_specs=[_PER_TILE_SPEC, _PER_TILE_SPEC, _PER_TILE_SPEC],
         out_shape=[per_tile, per_tile, per_tile],
         interpret=interpret,
-    )(jnp.asarray(T.BYTE_1_HIGH), jnp.asarray(T.BYTE_1_LOW),
-      jnp.asarray(T.BYTE_2_HIGH), tile_end, same_prev, same_next,
-      d3, d3, d3)
+    )(*[jnp.asarray(t) for t in codec_s.tables],
+      tile_end, same_prev, same_next, d3, d3, d3)
     return nblk, d3, tile_doc, tile_end, same_prev, same_next, \
         totals, errs, ferrs
 
 
-@functools.partial(jax.jit, static_argnames=("validate", "interpret",
-                                             "errors"))
-def _ragged8_impl(data, offsets, lengths, validate, interpret, errors):
+@functools.partial(jax.jit, static_argnames=("src", "dst", "validate",
+                                             "interpret", "errors"))
+def _ragged_impl(data, offsets, lengths, src, dst, validate, interpret,
+                 errors):
+    codec_s, codec_d, factor = stages.get_pair(src, dst)
+    width = stages.stage_width(codec_s, codec_d)
     nblk, d3, tile_doc, tile_end, same_prev, same_next, totals, errs, \
-        ferrs = _rcount8_call(data, offsets, lengths, errors, validate,
-                              interpret)
+        ferrs = _rcount_call(data, offsets, lengths, src, dst, errors,
+                             validate, interpret)
     base, total = compaction.tile_base_offsets(totals)
     outp = pl.pallas_call(
-        functools.partial(_rwrite8_kernel, errors=errors),
+        functools.partial(_rwrite_kernel, src=src, dst=dst, errors=errors),
         grid=(nblk,),
         in_specs=[_PER_TILE_SPEC, _PER_TILE_SPEC, _PER_TILE_SPEC,
                   _PER_TILE_SPEC,
                   _tile_spec(0), _tile_spec(1), _tile_spec(2)],
-        out_specs=pl.BlockSpec((nblk * STAGE16,), lambda i: (0,)),
-        out_shape=jax.ShapeDtypeStruct((nblk * STAGE16,), jnp.uint16),
+        out_specs=pl.BlockSpec((nblk * width,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((nblk * width,), codec_d.dtype),
         interpret=interpret,
     )(tile_end, same_prev, same_next, base, d3, d3, d3)
     # Same capacity budget per document as the padded-vmap path (its
     # tile span); clear the write-window slack after the last tile.
-    cap = nblk * BLOCK
+    cap = factor * nblk * BLOCK
     outp = outp[:cap]
-    outp = jnp.where(jnp.arange(cap) < total, outp, 0)
+    outp = jnp.where(jnp.arange(cap) < total, outp,
+                     jnp.zeros((), codec_d.dtype))
     counts, out_offsets, statuses = _doc_reduce(
         totals, errs, ferrs, tile_doc, offsets, validate)
     return R.RaggedTranscodeResult(outp, out_offsets, counts, statuses)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def _ragged8_scan_impl(data, offsets, lengths, interpret):
-    _nb, _d3, tile_doc, _te, _sp, _sn, totals, errs, ferrs = _rcount8_call(
-        data, offsets, lengths, "strict", True, interpret)
+@functools.partial(jax.jit, static_argnames=("src", "dst", "interpret"))
+def _ragged_scan_impl(data, offsets, lengths, src, dst, interpret):
+    _nb, _d3, tile_doc, _te, _sp, _sn, totals, errs, ferrs = _rcount_call(
+        data, offsets, lengths, src, dst, "strict", True, interpret)
     counts, _oo, statuses = _doc_reduce(
         totals, errs, ferrs, tile_doc, offsets, True)
     return counts, statuses
@@ -258,132 +258,70 @@ def _as_packed(data, offsets, lengths, dtype):
     return data, offsets, lengths
 
 
-def utf8_to_utf16_ragged(data, offsets, lengths, *, validate: bool = True,
-                         errors: str = "strict", interpret=None):
-    """Ragged packed-batch UTF-8 -> UTF-16: one launch per pass.
+def transcode_ragged(data, offsets, lengths, *, src: str, dst: str,
+                     validate: bool = True, errors: str = "strict",
+                     interpret=None):
+    """Ragged packed-batch transcode for any (src, dst) matrix cell.
 
     ``data``/``offsets``/``lengths`` is the tile-aligned packed layout of
     :func:`repro.core.packing.pack_documents`.  Returns a
-    :class:`repro.core.result.RaggedTranscodeResult`: a dense uint16
-    output stream plus per-document ``(offsets, counts, statuses)`` —
-    each document's slice is bit-identical to the single-document fused
-    transcoder's ``buffer[:count]`` / ``count`` / ``status``.
+    :class:`repro.core.result.RaggedTranscodeResult`: a dense output
+    stream in the destination's narrow dtype plus per-document
+    ``(offsets, counts, statuses)`` — each document's slice is
+    bit-identical to the single-document fused transcoder's
+    ``buffer[:count]`` / ``count`` / ``status``.
     """
     _check_errors(errors)
-    data, offsets, lengths = _as_packed(data, offsets, lengths, jnp.uint8)
-    return _ragged8_impl(data, offsets, lengths, validate,
-                         runtime.resolve_interpret(interpret), errors)
+    codec_s, _codec_d, _f = stages.get_pair(src, dst)
+    data, offsets, lengths = _as_packed(data, offsets, lengths,
+                                        codec_s.dtype)
+    return _ragged_impl(data, offsets, lengths, src, dst, validate,
+                        runtime.resolve_interpret(interpret), errors)
 
 
-def utf8_scan_ragged(data, offsets, lengths, *, interpret=None):
+def scan_ragged(data, offsets, lengths, *, src: str, dst: str,
+                interpret=None):
     """Counting pass only, per document: ``(counts, statuses)``.
 
-    One read of the packed batch yields every document's UTF-16 capacity
-    and first-error status — the multi-request ingestion-boundary query
-    (serve ingress validates a whole wave of prompts with one launch).
+    One read of the packed batch yields every document's destination
+    capacity and first-error status — the multi-request
+    ingestion-boundary query (serve ingress validates a whole wave of
+    prompts with one launch).
     """
-    data, offsets, lengths = _as_packed(data, offsets, lengths, jnp.uint8)
-    return _ragged8_scan_impl(data, offsets, lengths,
-                              runtime.resolve_interpret(interpret))
+    codec_s, _codec_d, _f = stages.get_pair(src, dst)
+    data, offsets, lengths = _as_packed(data, offsets, lengths,
+                                        codec_s.dtype)
+    return _ragged_scan_impl(data, offsets, lengths, src, dst,
+                             runtime.resolve_interpret(interpret))
 
 
 # ---------------------------------------------------------------------------
-# UTF-16 -> UTF-8
+# Thin per-pair instantiations (the pre-matrix public API).
 
 
-def _rcount16_kernel(end_ref, sp_ref, sn_ref, up_ref, u_ref, un_ref,
-                     tot_ref, err_ref, ferr_ref, *, errors, validate):
-    u = u_ref[...].astype(jnp.int32)
-    up = up_ref[...].astype(jnp.int32) * sp_ref[0]
-    un = un_ref[...].astype(jnp.int32) * sn_ref[0]
-    gidx = ft._gidx(u.shape)
-    tot_ref[0], err_ref[0], ferr_ref[0] = ft.count16_tile(
-        u, up, un, gidx < end_ref[0], gidx, errors=errors,
-        validate=validate)
+def utf8_to_utf16_ragged(data, offsets, lengths, *, validate: bool = True,
+                         errors: str = "strict", interpret=None):
+    """Ragged packed-batch UTF-8 -> UTF-16: one launch per pass."""
+    return transcode_ragged(data, offsets, lengths, src="utf8", dst="utf16",
+                            validate=validate, errors=errors,
+                            interpret=interpret)
 
 
-def _rwrite16_kernel(end_ref, sp_ref, sn_ref, base_ref,
-                     up_ref, u_ref, un_ref, out_ref, *, errors):
-    u = u_ref[...].astype(jnp.int32)
-    up = up_ref[...].astype(jnp.int32) * sp_ref[0]
-    un = un_ref[...].astype(jnp.int32) * sn_ref[0]
-    stage = ft.write16_stage(u, up, un, ft._gidx(u.shape) < end_ref[0],
-                             errors=errors)
-    out_ref[pl.ds(base_ref[0], STAGE8)] = stage.astype(jnp.uint8)
-
-
-def _rcount16_call(data, offsets, lengths, errors, validate, interpret):
-    nblk = _nblk(data.shape[0])
-    tile_doc, tile_end, same_prev, same_next = packing.tile_ownership(
-        offsets, lengths, nblk, BLOCK)
-    um = _mask_to_docs(data, tile_end, nblk)
-    u3, _ = runtime.tile_with_boundaries(um, ROWS, LANES, boundary_tiles=2)
-    kernel = functools.partial(_rcount16_kernel, errors=errors,
-                               validate=validate)
-    per_tile = jax.ShapeDtypeStruct((nblk,), jnp.int32)
-    totals, errs, ferrs = pl.pallas_call(
-        kernel,
-        grid=(nblk,),
-        in_specs=[_PER_TILE_SPEC, _PER_TILE_SPEC, _PER_TILE_SPEC,
-                  _tile_spec(0), _tile_spec(1), _tile_spec(2)],
-        out_specs=[_PER_TILE_SPEC, _PER_TILE_SPEC, _PER_TILE_SPEC],
-        out_shape=[per_tile, per_tile, per_tile],
-        interpret=interpret,
-    )(tile_end, same_prev, same_next, u3, u3, u3)
-    return nblk, u3, tile_doc, tile_end, same_prev, same_next, \
-        totals, errs, ferrs
-
-
-@functools.partial(jax.jit, static_argnames=("validate", "interpret",
-                                             "errors"))
-def _ragged16_impl(data, offsets, lengths, validate, interpret, errors):
-    nblk, u3, tile_doc, tile_end, same_prev, same_next, totals, errs, \
-        ferrs = _rcount16_call(data, offsets, lengths, errors, validate,
-                               interpret)
-    base, total = compaction.tile_base_offsets(totals)
-    outp = pl.pallas_call(
-        functools.partial(_rwrite16_kernel, errors=errors),
-        grid=(nblk,),
-        in_specs=[_PER_TILE_SPEC, _PER_TILE_SPEC, _PER_TILE_SPEC,
-                  _PER_TILE_SPEC,
-                  _tile_spec(0), _tile_spec(1), _tile_spec(2)],
-        out_specs=pl.BlockSpec((nblk * STAGE8,), lambda i: (0,)),
-        out_shape=jax.ShapeDtypeStruct((nblk * STAGE8,), jnp.uint8),
-        interpret=interpret,
-    )(tile_end, same_prev, same_next, base, u3, u3, u3)
-    cap = 3 * nblk * BLOCK
-    outp = outp[:cap]
-    outp = jnp.where(jnp.arange(cap) < total, outp, 0)
-    counts, out_offsets, statuses = _doc_reduce(
-        totals, errs, ferrs, tile_doc, offsets, validate)
-    return R.RaggedTranscodeResult(outp, out_offsets, counts, statuses)
-
-
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def _ragged16_scan_impl(data, offsets, lengths, interpret):
-    _nb, _u3, tile_doc, _te, _sp, _sn, totals, errs, ferrs = \
-        _rcount16_call(data, offsets, lengths, "strict", True, interpret)
-    counts, _oo, statuses = _doc_reduce(
-        totals, errs, ferrs, tile_doc, offsets, True)
-    return counts, statuses
+def utf8_scan_ragged(data, offsets, lengths, *, interpret=None):
+    """Counting pass only, per document: ``(counts, statuses)``."""
+    return scan_ragged(data, offsets, lengths, src="utf8", dst="utf16",
+                       interpret=interpret)
 
 
 def utf16_to_utf8_ragged(data, offsets, lengths, *, validate: bool = True,
                          errors: str = "strict", interpret=None):
-    """Ragged packed-batch UTF-16 -> UTF-8: one launch per pass.
-
-    Packed analogue of ``utf16_to_utf8_fused`` — dense uint8 output
-    stream plus per-document ``(offsets, counts, statuses)``, each
-    document bit-identical to the single-document fused transcoder.
-    """
-    _check_errors(errors)
-    data, offsets, lengths = _as_packed(data, offsets, lengths, jnp.uint16)
-    return _ragged16_impl(data, offsets, lengths, validate,
-                          runtime.resolve_interpret(interpret), errors)
+    """Ragged packed-batch UTF-16 -> UTF-8: one launch per pass."""
+    return transcode_ragged(data, offsets, lengths, src="utf16", dst="utf8",
+                            validate=validate, errors=errors,
+                            interpret=interpret)
 
 
 def utf16_scan_ragged(data, offsets, lengths, *, interpret=None):
     """Counting pass only, per document: ``(counts, statuses)``."""
-    data, offsets, lengths = _as_packed(data, offsets, lengths, jnp.uint16)
-    return _ragged16_scan_impl(data, offsets, lengths,
-                               runtime.resolve_interpret(interpret))
+    return scan_ragged(data, offsets, lengths, src="utf16", dst="utf8",
+                       interpret=interpret)

@@ -1,0 +1,108 @@
+"""Codec stages: per-format decode/encode tile bodies + the generic
+count/write driver (DESIGN.md §8).
+
+The registry below is the single source of truth for which formats the
+fused/ragged Pallas pipelines speak.  Every (src, dst) pair with
+``src != dst`` is a valid composition of :func:`driver.count_tile` /
+:func:`driver.write_stage`; the classic UTF-8→UTF-16 and UTF-16→UTF-8
+kernels are just two cells of this matrix.
+"""
+
+from __future__ import annotations
+
+from repro.core import tables as T
+from repro.kernels import utf8_validate as kval
+from repro.kernels.stages import driver
+from repro.kernels.stages import latin1 as s_latin1
+from repro.kernels.stages import utf16 as s_utf16
+from repro.kernels.stages import utf32 as s_utf32
+from repro.kernels.stages import utf8 as s_utf8
+from repro.kernels.stages.driver import (  # noqa: F401  (re-export)
+    BLOCK, LANES, ROWS, Codec, count_tile, stage_units, stage_width,
+    write_stage)
+
+import jax.numpy as jnp
+
+
+def _kl_extra_err(b, bp, t1h, t1l, t2h):
+    """Keiser-Lemire nibble-table detector (UTF-8 only, rides along with
+    the maximal-subpart locator in the count pass's validation)."""
+    return kval.kl_error_tile(b, bp, t1h, t1l, t2h)
+
+
+UTF8 = Codec(
+    name="utf8",
+    dtype=jnp.uint8,
+    itemsize=1,
+    decode=s_utf8.speculative_decode,
+    analyze=s_utf8.analyze_tile,
+    unit_len=s_utf8.unit_len,
+    encode=s_utf8.encode_units,
+    max_speculative_cp=s_utf8.MAX_SPECULATIVE_CP,
+    py_unit_len=s_utf8.py_unit_len,
+    tables=(T.BYTE_1_HIGH, T.BYTE_1_LOW, T.BYTE_2_HIGH),
+    extra_err=_kl_extra_err,
+)
+
+UTF16 = Codec(
+    name="utf16",
+    dtype=jnp.uint16,
+    itemsize=2,
+    decode=s_utf16.speculative_decode,
+    analyze=s_utf16.analyze_tile,
+    unit_len=s_utf16.unit_len,
+    encode=s_utf16.encode_units,
+    max_speculative_cp=s_utf16.MAX_SPECULATIVE_CP,
+    py_unit_len=s_utf16.py_unit_len,
+)
+
+UTF32 = Codec(
+    name="utf32",
+    dtype=jnp.uint32,
+    itemsize=4,
+    decode=s_utf32.speculative_decode,
+    analyze=s_utf32.analyze_tile,
+    unit_len=s_utf32.unit_len,
+    encode=s_utf32.encode_units,
+    max_speculative_cp=s_utf32.MAX_SPECULATIVE_CP,
+    py_unit_len=s_utf32.py_unit_len,
+)
+
+LATIN1 = Codec(
+    name="latin1",
+    dtype=jnp.uint8,
+    itemsize=1,
+    decode=s_latin1.speculative_decode,
+    analyze=s_latin1.analyze_tile,
+    unit_len=s_latin1.unit_len,
+    encode=s_latin1.encode_units,
+    max_speculative_cp=s_latin1.MAX_SPECULATIVE_CP,
+    py_unit_len=s_latin1.py_unit_len,
+    encode_bad=s_latin1.encode_bad,
+)
+
+CODECS = {c.name: c for c in (UTF8, UTF16, UTF32, LATIN1)}
+
+# Output capacity per input element: the single definition lives next to
+# the public dispatch (``repro.core.transcode``); the kernel registry and
+# the block-parallel reference share it so their static buffer
+# conventions can never drift apart.
+from repro.core.transcode import CAP_FACTOR, PAIRS  # noqa: E402,F401
+
+
+def get_codec(name: str) -> Codec:
+    try:
+        return CODECS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown format {name!r}; supported: {sorted(CODECS)}")
+
+
+def get_pair(src: str, dst: str):
+    """Resolve a (src, dst) format pair to ``(src_codec, dst_codec,
+    cap_factor)``; rejects src == dst and unknown names."""
+    if (src, dst) not in CAP_FACTOR:
+        raise ValueError(
+            f"unsupported format pair {src!r} -> {dst!r}; "
+            f"supported pairs: {list(PAIRS)}")
+    return CODECS[src], CODECS[dst], CAP_FACTOR[(src, dst)]

@@ -1,0 +1,26 @@
+"""Shared tile-context helpers for the codec stages.
+
+Every decode stage sees its VMEM tile plus the two neighbour tiles and
+derives lane-shifted views of the flat element stream from them; the two
+helpers below are the single definition of that convention (previously
+duplicated per kernel module).  All stage bodies treat their arguments as
+row-major flat streams of int32 lanes.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def shift_left_flat(cur, nxt, n):
+    """``cur[i + n]`` with elements flowing in from the next tile."""
+    c = cur.reshape(-1)
+    x = nxt.reshape(-1)
+    return jnp.concatenate([c[n:], x[:n]]).reshape(cur.shape)
+
+
+def shift_right_flat(cur, prev, n):
+    """``cur[i - n]`` with elements flowing in from the previous tile."""
+    c = cur.reshape(-1)
+    p = prev.reshape(-1)
+    return jnp.concatenate([p[-n:], c[:-n]]).reshape(cur.shape)

@@ -1,0 +1,153 @@
+"""Generic decode×encode tile driver: one count body, one write body,
+any (source, destination) format pair.
+
+The paper's pipeline — validate → decode to code points → re-encode →
+compact — is format-symmetric; this module is that symmetry made
+executable.  A :class:`Codec` bundles one format's personality on both
+sides of the code-point intermediate:
+
+  decode side   ``decode``  (speculative: every lane treated as a lead,
+                returns per-lane candidate code point + lead mask) and
+                ``analyze`` (maximal-subpart classification: unit starts,
+                validity, replacement code points, error map — CPython
+                ``UnicodeDecodeError.start`` / ``errors="replace"``
+                semantics), plus optional VMEM-resident validation
+                ``tables`` with an ``extra_err`` detector (the
+                Keiser-Lemire nibble tables ride along for UTF-8).
+  encode side   ``unit_len`` / ``encode`` (candidate unit planes per code
+                point, paper §5), plus optional ``encode_bad`` for
+                destinations that cannot represent every scalar (Latin-1).
+
+:func:`count_tile` and :func:`write_stage` compose any pair of codecs
+into the fused pipeline's two passes (DESIGN.md §5/§8); the per-pair tile
+bodies that previously hardwired UTF-8→UTF-16 and UTF-16→UTF-8 are now
+thin instantiations of these two functions.
+
+Stage windows are sized from first principles instead of per-pair
+constants: the speculative worst case is ``dst.py_unit_len(src.
+max_speculative_cp)`` units per source lane (:func:`stage_units`).  This
+derivation fixed a real overflow of the hand-sized UTF-16→UTF-8 bound —
+garbage dense in high surrogates folds to pair code points above
+U+10000 at *every* lane (4 candidate bytes each, 4·BLOCK total), past the
+old ``3*BLOCK + 1`` stage.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import compaction
+
+ROWS = 8
+LANES = 128
+BLOCK = ROWS * LANES
+
+# Sentinel for per-tile first-error min-reduction (int32 max; matches
+# repro.core.result.NO_ERR_SENTINEL — re-declared here to keep the stages
+# package import-light inside kernel bodies).
+_IMAX = 2**31 - 1
+
+
+class Codec(NamedTuple):
+    """One format's decode/encode personality over the code-point
+    intermediate (see module docstring)."""
+
+    name: str
+    dtype: Any                # narrow storage dtype (uint8/uint16/uint32)
+    itemsize: int             # bytes per storage unit
+    decode: Callable          # (x, xp, xn) -> (cp, is_lead)
+    analyze: Callable         # (x, xp, xn) -> {starts, valid, cp, err}
+    unit_len: Callable        # cp -> int32 units per code point
+    encode: Callable          # cp -> tuple of candidate unit planes
+    max_speculative_cp: int   # largest cp the speculative decode fabricates
+    py_unit_len: Callable     # host-side unit_len (static stage sizing)
+    tables: Tuple = ()        # VMEM-resident validation tables (np arrays)
+    extra_err: Optional[Callable] = None   # (x, xp, *tables) -> bool map
+    encode_bad: Optional[Callable] = None  # cp -> bool (unencodable)
+
+
+def stage_units(src: Codec, dst: Codec) -> int:
+    """Speculative worst-case destination units per source lane."""
+    return int(dst.py_unit_len(src.max_speculative_cp))
+
+
+def stage_width(src: Codec, dst: Codec) -> int:
+    """Per-tile staging window width for the (src, dst) write pass."""
+    return BLOCK * stage_units(src, dst)
+
+
+def _encode_err(dst: Codec, a, live):
+    """Encode-side error map over analyzed unit starts (Latin-1 egress)."""
+    if dst.encode_bad is None:
+        return a["err"] & live
+    return (a["err"] | (dst.encode_bad(a["cp"]) & a["starts"])) & live
+
+
+def count_tile(src: Codec, dst: Codec, x, xp, xn, live, gidx, tables, *,
+               errors: str, validate: bool):
+    """One counting/validating scan of a VMEM tile, any format pair.
+
+    ``live`` is the caller's in-stream mask (single stream: ``gidx < n``;
+    ragged: ``gidx < doc_end``); ``tables`` are ``src.tables`` as
+    VMEM-resident arrays.  Returns the three per-tile scalars
+    ``(total, err_flag, first_err_gidx)`` — first-error offsets are in
+    *global* stream coordinates (callers subtract the document start).
+    """
+    need_analysis = validate or errors == "replace"
+    a = src.analyze(x, xp, xn) if need_analysis else None
+    if errors == "replace":
+        tot = jnp.sum(jnp.where(a["starts"] & live, dst.unit_len(a["cp"]), 0))
+    else:
+        cp, is_lead = src.decode(x, xp, xn)
+        tot = jnp.sum(jnp.where(is_lead & live, dst.unit_len(cp), 0))
+
+    if validate:
+        # Fused validation, one scan: the maximal-subpart map locates the
+        # first decode error at its lead (Python exc.start semantics) and
+        # the destination's encode_bad map folds in unencodable scalars.
+        # An extra detector (the paper-faithful Keiser-Lemire nibble
+        # tables for UTF-8) rides along deliberately: it feeds only the
+        # flag, so a defect in either detector degrades to a located (or
+        # offset-0) error rather than a silently accepted invalid stream.
+        sub = _encode_err(dst, a, live)
+        err = sub
+        if src.extra_err is not None:
+            err = err | (src.extra_err(x, xp, *tables) & live)
+        err_flag = jnp.max(err.astype(jnp.int32))
+        ferr = jnp.min(jnp.where(sub, gidx, _IMAX))
+    else:
+        err_flag = jnp.int32(0)
+        ferr = jnp.int32(_IMAX)
+    return tot, err_flag, ferr
+
+
+def write_stage(src: Codec, dst: Codec, x, xp, xn, instream, *,
+                errors: str):
+    """Decode + in-tile compaction of one tile: the write-pass body.
+
+    ``instream`` is the caller's in-stream mask of ``x``'s shape.
+    Returns the compact int32 stage window (``stage_width(src, dst)``
+    lanes); the caller stores it at the tile's base offset.
+    """
+    if errors == "replace":
+        a = src.analyze(x, xp, xn)
+        cp = a["cp"]
+        live = (a["starts"] & instream).reshape(-1)
+    else:
+        cp, is_lead = src.decode(x, xp, xn)
+        live = (is_lead & instream).reshape(-1)
+    eff = jnp.where(live, dst.unit_len(cp).reshape(-1), 0)
+    rank, _tot = compaction.tile_exclusive_scan(eff, rows=ROWS)
+    cands = dst.encode(cp)
+    width = stage_width(src, dst)
+    # In-register compress-store (vpcompressb analogue): scatter the
+    # 1..stage_units candidate units of each live lane to base-relative
+    # rank inside VMEM; lanes shorter than the plane index drop out.
+    stage = jnp.zeros((width,), jnp.int32)
+    for j, plane in enumerate(cands):
+        sel = live if j == 0 else live & (eff >= j + 1)
+        stage = stage.at[jnp.where(sel, rank + j, width)].set(
+            plane.reshape(-1), mode="drop")
+    return stage

@@ -1,0 +1,52 @@
+"""Latin-1 codec stages.
+
+Decode side: every byte is a valid code point (a widening copy that can
+never fail — the analysis is all-valid by construction).  Encode side:
+``repro.core.latin1.encode_candidates`` — one byte per code point, with
+CPython's ``?`` substitution for values above U+00FF (the offender's
+offset still surfaces in ``status`` via the driver's encode-error map).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import latin1 as l1core
+
+MAX_SPECULATIVE_CP = 0xFF
+
+
+def speculative_decode(x, xp, xn):
+    del xp, xn
+    return x, jnp.ones(x.shape, bool)
+
+
+def analyze_tile(x, xp, xn):
+    del xp, xn
+    ones = jnp.ones(x.shape, bool)
+    return {
+        "starts": ones,
+        "valid": ones,
+        "cp": x,
+        "err": jnp.zeros(x.shape, bool),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Encode side.
+
+
+def unit_len(cp):
+    return jnp.ones(cp.shape, jnp.int32)
+
+
+def py_unit_len(cp: int) -> int:
+    return 1
+
+
+def encode_units(cp):
+    _len, byte, _bad = l1core.encode_candidates(cp)
+    return (byte,)
+
+
+encode_bad = l1core.encode_bad

@@ -1,0 +1,59 @@
+"""UTF-32 codec stages.
+
+UTF-32 is the codepoint intermediate itself, so both stages are nearly
+free: decoding is a per-lane scalar-range check (surrogates, > U+10FFFF,
+negatives can never be characters), encoding is the identity.  The strict
+decode substitutes U+FFFD for invalid scalars *in the buffer* — exactly
+what errors="replace" would emit — so the speculative output is a
+well-defined narrow value in every strategy while ``status`` still
+reports the first offender's offset (CPython raises there; only the
+location is oracle-pinned).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.utf32 import invalid_scalar
+
+# Encodes nothing larger than a real scalar after FFFD substitution, but
+# the *speculative* lane value is arbitrary 32-bit input; stage widths
+# must assume the widest destination class.
+MAX_SPECULATIVE_CP = 0x7FFFFFFF
+
+
+def speculative_decode(x, xp, xn):
+    """Decode-stage entry: every lane is a lead; invalid scalars carry
+    U+FFFD (see module docstring)."""
+    del xp, xn
+    cp = jnp.where(invalid_scalar(x), 0xFFFD, x)
+    return cp, jnp.ones(x.shape, bool)
+
+
+def analyze_tile(x, xp, xn):
+    """Unit analysis: each lane is its own unit; invalid scalars are
+    ill-formed units replaced by U+FFFD."""
+    del xp, xn
+    bad = invalid_scalar(x)
+    return {
+        "starts": jnp.ones(x.shape, bool),
+        "valid": ~bad,
+        "cp": jnp.where(bad, 0xFFFD, x),
+        "err": bad,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Encode side: identity.
+
+
+def unit_len(cp):
+    return jnp.ones(cp.shape, jnp.int32)
+
+
+def py_unit_len(cp: int) -> int:
+    return 1
+
+
+def encode_units(cp):
+    return (cp,)

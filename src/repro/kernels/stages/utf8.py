@@ -1,0 +1,175 @@
+"""UTF-8 codec stages: tile decode (source side) + candidate-byte encode
+(destination side).
+
+The decode side is the speculative block-parallel decode of DESIGN.md §3
+(every byte treated as a lead, paper Figs. 2-4 bit surgery) plus the
+maximal-subpart analysis shared verbatim with the pure-jnp reference
+(``repro.core.utf8.analyze_subparts``).  The encode side is the paper §5
+candidate-byte production: per code point, the four candidate UTF-8 bytes
+and the 1..4 byte length.  Both sides are pure functions of VMEM-resident
+int32 lanes, so the generic count/write driver
+(``repro.kernels.stages.driver``) can compose them with any other format's
+stages.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import utf8 as u8mod
+from repro.kernels.stages.common import shift_left_flat, shift_right_flat
+
+# Largest code point the speculative decode can fabricate from garbage
+# input: a 4-byte assembly with every data bit set ((0x07<<18)|...).
+# The generic driver sizes per-tile stage windows from this.
+MAX_SPECULATIVE_CP = 0x1FFFFF
+
+
+def _seq_len(b):
+    """Sequence length from the lead byte, as a where-tree.
+
+    The paper uses a 32-entry L1 table keyed by ``b >> 3``; on the TPU VPU a
+    four-node compare/select tree is cheaper than a gather, so the table is
+    *computed* (DESIGN.md §3: the paper's own compute-vs-lookup observation,
+    with the tradeoff flipped).
+    """
+    return jnp.where(
+        b < 0x80, 1,
+        jnp.where(b < 0xC0, 0,
+        jnp.where(b < 0xE0, 2,
+        jnp.where(b < 0xF0, 3,
+        jnp.where(b < 0xF8, 4, 0)))))
+
+
+def decode_tile(b, bp, bn):
+    """Speculatively decode one tile given its two neighbour tiles.
+
+    All three arguments are int32 arrays of identical (arbitrary) shape;
+    the shift helpers treat them as row-major flat byte streams.  Returns
+    ``(cp, is_lead, units, err_map)`` of the same shape: candidate code
+    point, lead-position flag (bool), UTF-16 code units emitted by the
+    character (0 at non-leads), and a per-position structural/range error
+    map (bool).  Shared between the legacy standalone decode kernel and
+    the generic fused driver.
+    """
+    b1 = shift_left_flat(b, bn, 1)
+    b2 = shift_left_flat(b, bn, 2)
+    b3 = shift_left_flat(b, bn, 3)
+
+    seq_len = _seq_len(b)
+    is_cont = (b & 0xC0) == 0x80
+    is_lead = seq_len > 0
+
+    # Branch-free bit surgery (paper Figs. 2-4).
+    cp1 = b
+    cp2 = ((b & 0x1F) << 6) | (b1 & 0x3F)
+    cp3 = ((b & 0x0F) << 12) | ((b1 & 0x3F) << 6) | (b2 & 0x3F)
+    cp4 = (
+        ((b & 0x07) << 18)
+        | ((b1 & 0x3F) << 12)
+        | ((b2 & 0x3F) << 6)
+        | (b3 & 0x3F)
+    )
+    cp = jnp.where(
+        seq_len == 1,
+        cp1,
+        jnp.where(seq_len == 2, cp2, jnp.where(seq_len == 3, cp3, cp4)),
+    )
+    cp = jnp.where(is_lead, cp, 0)
+
+    # Structural self-validation: expected-continuation bookkeeping.
+    seq_len_prev = _seq_len(bp)
+    sl_p1 = shift_right_flat(seq_len, seq_len_prev, 1)
+    sl_p2 = shift_right_flat(seq_len, seq_len_prev, 2)
+    sl_p3 = shift_right_flat(seq_len, seq_len_prev, 3)
+    exp_cont = (sl_p1 >= 2) | (sl_p2 >= 3) | (sl_p3 >= 4)
+    struct_err = (exp_cont != is_cont) | (b >= 0xF8)
+
+    # Scalar-range validation (overlong / surrogate / too-large).
+    # MIN_CP_FOR_LEN as a select tree (same compute-over-lookup adaptation).
+    min_cp = jnp.where(seq_len == 2, 0x80,
+             jnp.where(seq_len == 3, 0x800,
+             jnp.where(seq_len == 4, 0x10000, 0)))
+    range_err = is_lead & (
+        (cp < min_cp) | ((cp >= 0xD800) & (cp < 0xE000)) | (cp > 0x10FFFF)
+    )
+
+    units = jnp.where(is_lead, 1 + (cp >= 0x10000).astype(jnp.int32), 0)
+    return cp, is_lead, units, struct_err | range_err
+
+
+def speculative_decode(b, bp, bn):
+    """Decode-stage entry for the generic driver: ``(cp, is_lead)``."""
+    cp, is_lead, _units, _err = decode_tile(b, bp, bn)
+    return cp, is_lead
+
+
+def analyze_tile(b, bp, bn):
+    """Maximal-subpart analysis of one tile given its neighbour tiles.
+
+    Same shift convention as :func:`decode_tile`; the body is the shared
+    :func:`repro.core.utf8.analyze_subparts`, so the fused pipeline's
+    error location and errors="replace" semantics are bit-identical to
+    the pure-jnp block-parallel reference.  Returns the analysis dict
+    (``starts`` / ``valid`` / ``cp`` / ``units`` / ``err``).
+    """
+    return u8mod.analyze_subparts(
+        b,
+        shift_left_flat(b, bn, 1),
+        shift_left_flat(b, bn, 2),
+        shift_left_flat(b, bn, 3),
+        shift_right_flat(b, bp, 1),
+        shift_right_flat(b, bp, 2),
+        shift_right_flat(b, bp, 3),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Encode side: code points -> candidate UTF-8 bytes (paper §5).
+
+
+def unit_len(cp):
+    """Encoded UTF-8 length per code point (1..4)."""
+    return (
+        1
+        + (cp >= 0x80).astype(jnp.int32)
+        + (cp >= 0x800).astype(jnp.int32)
+        + (cp >= 0x10000).astype(jnp.int32)
+    )
+
+
+def py_unit_len(cp: int) -> int:
+    """Host-side :func:`unit_len` for static stage-width computation."""
+    return 1 + (cp >= 0x80) + (cp >= 0x800) + (cp >= 0x10000)
+
+
+def utf8_candidates(cp):
+    """Candidate UTF-8 bytes + length for per-lane code points.
+
+    Pure function of ``cp`` (paper Fig. 1 bit layout): returns
+    ``(b0, b1, b2, b3, L)`` where ``L`` in 1..4 is the encoded length.
+    Shared by the strict speculative path and the errors="replace" path
+    (where U+FFFD lanes encode as EF BF BD).
+    """
+    c0 = cp & 0x3F
+    c1 = (cp >> 6) & 0x3F
+    c2 = (cp >> 12) & 0x3F
+    c3 = (cp >> 18) & 0x07
+    L = unit_len(cp)
+    z = jnp.zeros_like(cp)
+    b0 = jnp.where(L == 1, cp,
+         jnp.where(L == 2, 0xC0 | (cp >> 6),
+         jnp.where(L == 3, 0xE0 | (cp >> 12), 0xF0 | c3)))
+    b1 = jnp.where(L == 2, 0x80 | c0,
+         jnp.where(L == 3, 0x80 | c1,
+         jnp.where(L == 4, 0x80 | c2, z)))
+    b2 = jnp.where(L == 3, 0x80 | c0,
+         jnp.where(L == 4, 0x80 | c1, z))
+    b3 = jnp.where(L == 4, 0x80 | c0, z)
+    return b0, b1, b2, b3, L
+
+
+def encode_units(cp):
+    """Encode-stage entry for the generic driver: candidate unit planes."""
+    b0, b1, b2, b3, _L = utf8_candidates(cp)
+    return (b0, b1, b2, b3)

@@ -1,25 +1,18 @@
 """Pallas TPU kernel: UTF-16 -> UTF-8 candidate-byte production (paper §5).
 
-One grid step processes a BLOCK-unit VMEM tile of UTF-16 code units.  Per
-lane we classify the unit (ASCII / 2-byte / 3-byte / surrogate half), fold
-surrogate pairs into supplementary code points using one unit of lookahead
-from the next tile (and one unit of lookbehind from the previous tile to
-identify trailing halves), and emit the four candidate UTF-8 bytes plus a
-per-lane byte length — exactly the state the paper's pshufb compress-store
-consumes.  Global stream compaction (cumsum + scatter over the whole
-buffer) happens outside the kernel in XLA.
+One grid step processes a BLOCK-unit VMEM tile of UTF-16 code units,
+classifying units, folding surrogate pairs and emitting the four
+candidate UTF-8 bytes plus a per-lane byte length — exactly the state
+the paper's pshufb compress-store consumes.  Global stream compaction
+(cumsum + scatter over the whole buffer) happens outside the kernel in
+XLA.
 
-The per-tile encode body lives in :func:`encode_tile` so that the fused
-two-pass pipeline (``repro.kernels.fused_transcode``, DESIGN.md §5) can
-re-run it inside its counting and writer kernels without shipping the four
-full-capacity candidate arrays through HBM.
-
-The paper's Algorithm 4 branches per 16-byte register on the maximal range
-class.  TPU tiles are 1024 lanes and branching per tile would flush the
-whole pipeline, so the kernel is branch-free: every lane computes all four
-candidate encodings and selects by range (lane-parallel `where` trees are
-one VPU op per node).  Surrogate-pair validation is fused (err flag per
-tile), mirroring the paper's "validation at near-zero cost" claim.
+Since the codec-matrix refactor the per-tile bodies live in
+:mod:`repro.kernels.stages`: the UTF-16 decode stage and the UTF-8
+encode stage compose into ``encode_tile`` (re-exported here together
+with ``analyze_tile`` and ``utf8_candidates`` for older import sites).
+This module keeps only the standalone full-output kernel — the
+pre-fusion contrast path of ``repro.kernels.ops``.
 """
 
 from __future__ import annotations
@@ -30,100 +23,18 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core import utf16 as u16core
 from repro.kernels import runtime
+from repro.kernels.stages.utf16 import (  # noqa: F401  (re-export shims)
+    analyze_tile, encode_tile)
+from repro.kernels.stages.utf8 import (  # noqa: F401  (re-export shim)
+    utf8_candidates)
+from repro.kernels.stages.common import (  # noqa: F401  (re-export shims)
+    shift_left_flat as _shift_left_flat,
+    shift_right_flat as _shift_right_flat)
 
 ROWS = 8
 LANES = 128
 BLOCK = ROWS * LANES
-
-
-def _shift_left_flat(cur, nxt, n):
-    c = cur.reshape(-1)
-    x = nxt.reshape(-1)
-    return jnp.concatenate([c[n:], x[:n]]).reshape(cur.shape)
-
-
-def _shift_right_flat(cur, prev, n):
-    c = cur.reshape(-1)
-    p = prev.reshape(-1)
-    return jnp.concatenate([p[-n:], c[:-n]]).reshape(cur.shape)
-
-
-def utf8_candidates(cp):
-    """Candidate UTF-8 bytes + length for per-lane code points.
-
-    Pure function of ``cp`` (paper Fig. 1 bit layout): returns
-    ``(b0, b1, b2, b3, L)`` where ``L`` in 1..4 is the encoded length.
-    Shared by the strict speculative path and the errors="replace" path
-    (where U+FFFD lanes encode as EF BF BD).
-    """
-    c0 = cp & 0x3F
-    c1 = (cp >> 6) & 0x3F
-    c2 = (cp >> 12) & 0x3F
-    c3 = (cp >> 18) & 0x07
-    L = (
-        1
-        + (cp >= 0x80).astype(jnp.int32)
-        + (cp >= 0x800).astype(jnp.int32)
-        + (cp >= 0x10000).astype(jnp.int32)
-    )
-    z = jnp.zeros_like(cp)
-    b0 = jnp.where(L == 1, cp,
-         jnp.where(L == 2, 0xC0 | (cp >> 6),
-         jnp.where(L == 3, 0xE0 | (cp >> 12), 0xF0 | c3)))
-    b1 = jnp.where(L == 2, 0x80 | c0,
-         jnp.where(L == 3, 0x80 | c1,
-         jnp.where(L == 4, 0x80 | c2, z)))
-    b2 = jnp.where(L == 3, 0x80 | c0,
-         jnp.where(L == 4, 0x80 | c1, z))
-    b3 = jnp.where(L == 4, 0x80 | c0, z)
-    return b0, b1, b2, b3, L
-
-
-def analyze_tile(u, up, un):
-    """Unit analysis of one tile given its neighbour tiles.
-
-    The body is the shared :func:`repro.core.utf16.analyze_units` (one
-    unit of context each way), so the fused pipeline's unpaired-surrogate
-    location and errors="replace" semantics match the pure-jnp reference
-    bit for bit.  Returns the analysis dict (``starts`` / ``valid`` /
-    ``cp`` / ``err``).
-    """
-    return u16core.analyze_units(
-        u, _shift_left_flat(u, un, 1), _shift_right_flat(u, up, 1))
-
-
-def encode_tile(u, up, un):
-    """Encode one tile of UTF-16 units given its two neighbour tiles.
-
-    All arguments are int32 arrays of identical (arbitrary) shape, treated
-    as row-major flat unit streams by the shift helpers.  Returns
-    ``(b0, b1, b2, b3, L, err_map)`` of the same shape: the four candidate
-    UTF-8 bytes, the per-lane byte length (0 at non-lead trailing surrogate
-    halves), and a per-position unpaired-surrogate error map (bool).
-    Shared between :func:`utf16_encode_kernel` and the fused pipeline.
-    """
-    top6 = u >> 10
-    is_hi = top6 == 0x36
-    is_lo = top6 == 0x37
-
-    nxt = _shift_left_flat(u, un, 1)
-    prv = _shift_right_flat(u, up, 1)
-    nxt_is_lo = (nxt >> 10) == 0x37
-    prv_is_hi = (prv >> 10) == 0x36
-
-    # Fold surrogate pairs (paper Fig. 4 surrogate construction, inverted).
-    pair_cp = 0x10000 + ((u - 0xD800) << 10) + (nxt - 0xDC00)
-    cp = jnp.where(is_hi, pair_cp, u)
-    is_lead = ~(is_lo & prv_is_hi)
-
-    b0, b1, b2, b3, L = utf8_candidates(cp)
-    L = jnp.where(is_lead, L, 0)
-
-    # Fused UTF-16 validation: unpaired surrogate halves.
-    err_map = (is_hi & ~nxt_is_lo) | (is_lo & ~prv_is_hi)
-    return b0, b1, b2, b3, L, err_map
 
 
 def utf16_encode_kernel(u_prev_ref, u_cur_ref, u_next_ref,

@@ -8,20 +8,14 @@ the real characters.  Cross-tile context (3 bytes on each side) comes from
 also mapping the previous and next tiles into VMEM; the array is padded
 with a zero tile at each end.
 
-Outputs per position: candidate code point, is-lead flag, and the number
-of UTF-16 code units the character needs (0 for non-leads) — everything
-global stream compaction (an XLA cumsum+scatter over the whole buffer)
-needs to finish the transcode.  A per-tile structural-error flag fuses the
-decoder's own validation.
-
-The per-tile decode body lives in :func:`decode_tile` so that the fused
-two-pass pipeline (``repro.kernels.fused_transcode``, DESIGN.md §5) can
-re-run exactly the same speculative decode inside its counting and writer
-kernels without materializing these full-capacity outputs in HBM.
-
-This kernel deliberately contains no loop and no branch: it is pure VPU
-arithmetic on (8, 128) tiles, the TPU-native answer to the paper's point
-that transcoding should be straight-line SIMD work.
+Since the codec-matrix refactor the per-tile bodies (``decode_tile``,
+``analyze_tile``) live in :mod:`repro.kernels.stages.utf8` — the UTF-8
+decode stage of the generic decode×encode driver — and are re-exported
+here for the legacy per-position kernel below and for older import
+sites.  This module keeps only what the stages package does not cover:
+the standalone full-output kernel (per-position cp/lead/units arrays
+through HBM, the pre-fusion contrast path of ``repro.kernels.ops``) and
+the ``tail_lead_err`` wrapper check.
 """
 
 from __future__ import annotations
@@ -32,118 +26,16 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core import utf8 as u8mod
 from repro.kernels import runtime
+from repro.kernels.stages.utf8 import (  # noqa: F401  (re-export shims)
+    _seq_len, analyze_tile, decode_tile)
+from repro.kernels.stages.common import (  # noqa: F401  (re-export shims)
+    shift_left_flat as _shift_left_flat,
+    shift_right_flat as _shift_right_flat)
 
 ROWS = 8
 LANES = 128
 BLOCK = ROWS * LANES
-
-
-def _shift_left_flat(cur, nxt, n):
-    """cur[i+n] with bytes flowing in from the next tile."""
-    c = cur.reshape(-1)
-    x = nxt.reshape(-1)
-    return jnp.concatenate([c[n:], x[:n]]).reshape(cur.shape)
-
-
-def _shift_right_flat(cur, prev, n):
-    c = cur.reshape(-1)
-    p = prev.reshape(-1)
-    return jnp.concatenate([p[-n:], c[:-n]]).reshape(cur.shape)
-
-
-def _seq_len(b):
-    """Sequence length from the lead byte, as a where-tree.
-
-    The paper uses a 32-entry L1 table keyed by ``b >> 3``; on the TPU VPU a
-    four-node compare/select tree is cheaper than a gather, so the table is
-    *computed* (DESIGN.md §3: the paper's own compute-vs-lookup observation,
-    with the tradeoff flipped).
-    """
-    return jnp.where(
-        b < 0x80, 1,
-        jnp.where(b < 0xC0, 0,
-        jnp.where(b < 0xE0, 2,
-        jnp.where(b < 0xF0, 3,
-        jnp.where(b < 0xF8, 4, 0)))))
-
-
-def decode_tile(b, bp, bn):
-    """Speculatively decode one tile given its two neighbour tiles.
-
-    All three arguments are int32 arrays of identical (arbitrary) shape;
-    the shift helpers treat them as row-major flat byte streams.  Returns
-    ``(cp, is_lead, units, err_map)`` of the same shape: candidate code
-    point, lead-position flag (bool), UTF-16 code units emitted by the
-    character (0 at non-leads), and a per-position structural/range error
-    map (bool).  Shared between :func:`utf8_decode_kernel` and the fused
-    pipeline's kernels.
-    """
-    b1 = _shift_left_flat(b, bn, 1)
-    b2 = _shift_left_flat(b, bn, 2)
-    b3 = _shift_left_flat(b, bn, 3)
-
-    seq_len = _seq_len(b)
-    is_cont = (b & 0xC0) == 0x80
-    is_lead = seq_len > 0
-
-    # Branch-free bit surgery (paper Figs. 2-4).
-    cp1 = b
-    cp2 = ((b & 0x1F) << 6) | (b1 & 0x3F)
-    cp3 = ((b & 0x0F) << 12) | ((b1 & 0x3F) << 6) | (b2 & 0x3F)
-    cp4 = (
-        ((b & 0x07) << 18)
-        | ((b1 & 0x3F) << 12)
-        | ((b2 & 0x3F) << 6)
-        | (b3 & 0x3F)
-    )
-    cp = jnp.where(
-        seq_len == 1,
-        cp1,
-        jnp.where(seq_len == 2, cp2, jnp.where(seq_len == 3, cp3, cp4)),
-    )
-    cp = jnp.where(is_lead, cp, 0)
-
-    # Structural self-validation: expected-continuation bookkeeping.
-    seq_len_prev = _seq_len(bp)
-    sl_p1 = _shift_right_flat(seq_len, seq_len_prev, 1)
-    sl_p2 = _shift_right_flat(seq_len, seq_len_prev, 2)
-    sl_p3 = _shift_right_flat(seq_len, seq_len_prev, 3)
-    exp_cont = (sl_p1 >= 2) | (sl_p2 >= 3) | (sl_p3 >= 4)
-    struct_err = (exp_cont != is_cont) | (b >= 0xF8)
-
-    # Scalar-range validation (overlong / surrogate / too-large).
-    # MIN_CP_FOR_LEN as a select tree (same compute-over-lookup adaptation).
-    min_cp = jnp.where(seq_len == 2, 0x80,
-             jnp.where(seq_len == 3, 0x800,
-             jnp.where(seq_len == 4, 0x10000, 0)))
-    range_err = is_lead & (
-        (cp < min_cp) | ((cp >= 0xD800) & (cp < 0xE000)) | (cp > 0x10FFFF)
-    )
-
-    units = jnp.where(is_lead, 1 + (cp >= 0x10000).astype(jnp.int32), 0)
-    return cp, is_lead, units, struct_err | range_err
-
-
-def analyze_tile(b, bp, bn):
-    """Maximal-subpart analysis of one tile given its neighbour tiles.
-
-    Same shift convention as :func:`decode_tile`; the body is the shared
-    :func:`repro.core.utf8.analyze_subparts`, so the fused pipeline's
-    error location and errors="replace" semantics are bit-identical to
-    the pure-jnp block-parallel reference.  Returns the analysis dict
-    (``starts`` / ``valid`` / ``cp`` / ``units`` / ``err``).
-    """
-    return u8mod.analyze_subparts(
-        b,
-        _shift_left_flat(b, bn, 1),
-        _shift_left_flat(b, bn, 2),
-        _shift_left_flat(b, bn, 3),
-        _shift_right_flat(b, bp, 1),
-        _shift_right_flat(b, bp, 2),
-        _shift_right_flat(b, bp, 3),
-    )
 
 
 def tail_lead_err(b, n):

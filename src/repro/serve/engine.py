@@ -1,6 +1,7 @@
 """Batched serving engine with transcode ingress/egress.
 
-Requests arrive as raw UTF-8 or UTF-16LE byte strings.  The engine:
+Requests arrive as raw UTF-8, UTF-16LE, UTF-32LE or Latin-1 byte strings
+(the full codec matrix, DESIGN.md §8).  The engine:
 
   1. **ingress** — *packed multi-request* validation through the ragged
      pipeline (the paper's validation running at the API boundary,
@@ -11,9 +12,10 @@ Requests arrive as raw UTF-8 or UTF-16LE byte strings.  The engine:
      ragged counting-scan launch (``ragged_scan_utf8``: fused
      validation + per-document error location, no write pass) yields
      every prompt's verdict at once — one kernel dispatch per wave
-     instead of one per request.  UTF-16LE prompts group per ``errors=``
-     policy and run one ragged transcode to UTF-8 per group, whose
-     counting pass carries the same fused validation.  Under
+     instead of one per request.  Unit-encoded prompts (UTF-16LE,
+     UTF-32LE, Latin-1) group per (encoding, ``errors=``) policy and run
+     one ragged transcode to UTF-8 per group through that matrix cell,
+     whose counting pass carries the same fused validation.  Under
      ``errors="strict"`` invalid prompts are rejected with the offset of
      the first bad byte/unit surfaced in ``Result.error_offset``; under
      ``errors="replace"`` malformed prompts are sanitized (U+FFFD per
@@ -21,9 +23,10 @@ Requests arrive as raw UTF-8 or UTF-16LE byte strings.  The engine:
      the first substitution offset still reported.
   2. batches admitted requests into fixed decode slots (padded prefill,
      per-row cursors), runs the jitted prefill + decode loop;
-  3. **egress** — detokenizes to UTF-8 or UTF-16 through the vectorized
-     encoder (``utf32_to_utf8`` / ``utf32_to_utf16``), so a Java/.NET
-     client can request UTF-16 at no extra host cost.
+  3. **egress** — detokenizes to any matrix format (UTF-8 / UTF-16LE /
+     UTF-32LE / Latin-1) through the vectorized encoders, so a Java/.NET
+     client can request UTF-16 — or a legacy system Latin-1 — at no
+     extra host cost.
 
 Wave-based continuous batching: a wave admits up to ``max_batch``
 requests; finished rows (EOS / max_new) are masked out and their slots
@@ -51,8 +54,9 @@ from repro.serve import kvcache, serve_step
 class Request:
     prompt_bytes: bytes
     max_new: int = 32
-    out_encoding: str = "utf-8"     # "utf-8" | "utf-16-le"
-    in_encoding: str = "utf-8"      # "utf-8" | "utf-16-le"
+    # "utf-8" | "utf-16-le" | "utf-32-le" | "latin-1" (full codec matrix)
+    out_encoding: str = "utf-8"
+    in_encoding: str = "utf-8"
     errors: str = "strict"          # "strict" | "replace"
 
 
@@ -97,11 +101,34 @@ class Engine:
         """Tiles per packed ingress slot (covers ``max_prompt``)."""
         return max(1, -(-self.max_prompt // packing.TILE))
 
+    # Unit widths and packed dtypes per non-UTF-8 ingress encoding; the
+    # wire bytes split into units with an EXPLICIT little-endian dtype
+    # ('<u2'/'<u4', host-endianness-independent — unlike a native-order
+    # ``.view(np.uint16)``, whose meaning flips on a big-endian host).
+    # The jnp byte-math twins (``tc.utf16le_bytes_to_units`` /
+    # ``tc.utf32le_bytes_to_cps``) serve device-resident buffers; this
+    # is the host-side pre-pack path, where a device round trip per
+    # prompt would be pure overhead.
+    _UNIT_INGRESS = {
+        "utf-16-le": (2, np.uint16, "utf16", "unit"),
+        "utf-32-le": (4, np.uint32, "utf32", "code point"),
+        "latin-1": (1, np.uint8, "latin1", "byte"),
+    }
+
+    @staticmethod
+    def _wire_units(raw: np.ndarray, width: int, np_dtype) -> np.ndarray:
+        if width == 1:
+            return raw.astype(np_dtype)
+        le = np.frombuffer(raw.tobytes(), np.dtype(f"<u{width}"))
+        return le.astype(np_dtype)
+
     def _ingress_batch(self, requests: List[Request], results):
         """Validate/transcode every prompt; rejections are written into
         ``results`` and admitted entries return in request order."""
         utf8_members = []           # (idx, req, raw bytes)
-        utf16_members: dict = {}    # errors policy -> [(idx, req, units)]
+        # (encoding, errors policy) -> [(idx, req, units)] — each group
+        # runs as ONE ragged transcode launch through its matrix cell.
+        unit_members: dict = {}
         for i, req in enumerate(requests):
             if req.errors not in ("strict", "replace"):
                 # Reject per-request rather than raising mid-batch: one
@@ -110,19 +137,24 @@ class Engine:
                     ok=False, error=f"unknown errors policy: {req.errors}")
                 continue
             raw = np.frombuffer(req.prompt_bytes, np.uint8)
-            if req.in_encoding == "utf-16-le":
-                if len(raw) % 2:
+            if req.in_encoding in self._UNIT_INGRESS:
+                width, np_dtype, src, _noun = \
+                    self._UNIT_INGRESS[req.in_encoding]
+                if len(raw) % width:
                     results[i] = Result(
-                        ok=False, error="odd utf-16-le prompt byte length")
+                        ok=False,
+                        error=(f"odd {req.in_encoding} prompt byte length"
+                               if width == 2 else
+                               f"{req.in_encoding} prompt byte length not "
+                               f"a multiple of {width}"))
                     continue
-                units = raw.view(np.uint16) if raw.size \
-                    else np.zeros(0, np.uint16)
+                units = self._wire_units(raw, width, np_dtype)
                 if len(units) == 0 or len(units) > self.max_prompt:
                     results[i] = Result(
                         ok=False, error="empty or oversize prompt")
                     continue
-                utf16_members.setdefault(req.errors, []).append(
-                    (i, req, units))
+                unit_members.setdefault((req.in_encoding, req.errors),
+                                        []).append((i, req, units))
             elif req.in_encoding == "utf-8":
                 if len(raw) == 0 or len(raw) > self.max_prompt - 1:
                     results[i] = Result(
@@ -135,8 +167,9 @@ class Engine:
                     error=f"unknown in_encoding: {req.in_encoding}")
         admitted: dict = {}
         self._ingress_utf8_group(utf8_members, results, admitted)
-        for policy, members in utf16_members.items():
-            self._ingress_utf16_group(policy, members, results, admitted)
+        for (encoding, policy), members in unit_members.items():
+            self._ingress_unit_group(encoding, policy, members, results,
+                                     admitted)
         return [admitted[i] for i in sorted(admitted)]
 
     def _ingress_utf8_group(self, members, results, admitted):
@@ -190,18 +223,24 @@ class Engine:
         ids = np.concatenate([[BOS_ID], clean.astype(np.int32) + N_SPECIAL])
         return (i, req, ids, off, bytes(clean))
 
-    def _ingress_utf16_group(self, policy, members, results, admitted):
-        """One ragged transcode launch per ``max_batch`` UTF-16 prompts
-        (grouped per ``errors=`` policy — the policy is a static kernel
-        switch): the counting pass validates + locates per document, the
-        write pass produces the UTF-8 the byte tokenizer consumes."""
+    def _ingress_unit_group(self, encoding, policy, members, results,
+                            admitted):
+        """One ragged transcode launch per ``max_batch`` unit-encoded
+        prompts (grouped per (encoding, ``errors=``) — the pair and the
+        policy are static kernel switches): the counting pass validates +
+        locates per document through that matrix cell, the write pass
+        produces the UTF-8 the byte tokenizer consumes.  Covers
+        utf-16-le, utf-32-le and latin-1 ingress (latin-1 can never
+        reject — every byte is a code point)."""
+        _width, np_dtype, src, noun = self._UNIT_INGRESS[encoding]
         for g0 in range(0, len(members), self.max_batch):
             chunk = members[g0: g0 + self.max_batch]
             pk = packing.pack_documents(
-                [u for _, _, u in chunk], dtype=np.uint16,
+                [u for _, _, u in chunk], dtype=np_dtype,
                 doc_tiles=self._doc_tiles, pad_to_docs=self.max_batch)
-            res = tc.ragged_utf16_to_utf8(pk.data, pk.offsets, pk.lengths,
-                                          errors=policy)
+            res = tc.ragged_transcode(pk.data, pk.offsets, pk.lengths,
+                                      src_format=src, dst_format="utf8",
+                                      errors=policy)
             outs = packing.unpack_results(res.buffer, res.offsets,
                                           res.counts)
             statuses = np.asarray(res.statuses)
@@ -210,7 +249,7 @@ class Engine:
                 if policy != "replace" and off >= 0:
                     results[i] = Result(
                         ok=False,
-                        error=f"invalid UTF-16 prompt at unit {off}",
+                        error=f"invalid {encoding} prompt at {noun} {off}",
                         error_offset=off)
                     continue
                 b8 = np.asarray(outs[k]).astype(np.uint8)
@@ -227,18 +266,31 @@ class Engine:
     def _egress(self, token_ids: np.ndarray, encoding: str) -> bytes:
         byte_vals = token_ids - N_SPECIAL
         byte_vals = byte_vals[(byte_vals >= 0) & (byte_vals < 256)]
+        if encoding == "utf-8" or len(byte_vals) == 0:
+            return bytes(byte_vals.astype(np.uint8))
         b = jnp.asarray(byte_vals.astype(np.int32))
+        # Pinned to the eager pure-jnp strategy: egress buffers have a
+        # new length per response, and the fused Pallas pipeline would
+        # recompile per distinct shape.  Wire bytes come from the
+        # explicit-LE jnp helpers, never a host ``.view()``.
         if encoding == "utf-16-le":
-            if len(byte_vals) == 0:
-                return b""
-            # Pinned to the eager pure-jnp strategy: egress buffers have a
-            # new length per response, and the fused Pallas pipeline would
-            # recompile per distinct shape.
             out, count, _status = tc.transcode_utf8_to_utf16(
                 b, len(byte_vals), strategy="blockparallel")
-            units = np.asarray(out)[: int(count)].astype(np.uint16)
-            return units.tobytes()
-        return bytes(byte_vals.astype(np.uint8))
+            wire = tc.units_to_utf16le_bytes(out[: int(count)])
+        elif encoding == "utf-32-le":
+            out, count, _status = tc.utf8_to_utf32(
+                b, len(byte_vals), strategy="blockparallel")
+            wire = tc.cps_to_utf32le_bytes(out[: int(count)])
+        elif encoding == "latin-1":
+            # A byte-LM can emit code points above U+00FF: substitute
+            # CPython-style ('?') rather than fail the response.
+            out, count, _status = tc.utf8_to_latin1(
+                b, len(byte_vals), errors="replace",
+                strategy="blockparallel")
+            wire = out[: int(count)]
+        else:
+            raise ValueError(f"unknown out_encoding: {encoding}")
+        return bytes(np.asarray(wire).astype(np.uint8))
 
     # ------------------------------------------------------------------
     def serve(self, requests: List[Request]) -> List[Result]:

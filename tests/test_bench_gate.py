@@ -131,3 +131,71 @@ def test_unreadable_file_is_diagnosed(tmp_path):
     rc = bench_gate.main(
         ["--fresh", fp, "--baseline", str(tmp_path / "missing.json")])
     assert rc == bench_gate.EXIT_MALFORMED
+
+
+# ---------------------------------------------------------------------------
+# Schema-versioned table skipping (the "schema" key, bench-report v2+)
+
+
+def _report_v(cells, schema=None):
+    r = _report(cells)
+    if schema is not None:
+        r["schema"] = schema
+    return r
+
+
+def test_matrix_schema_newer_fresh_table_skipped(tmp_path, capsys):
+    """A newer-schema fresh run introducing a new table (table_matrix)
+    must pass against an older baseline, with a warning — shared tables
+    still gate."""
+    fresh = dict(BASE)
+    fresh[("table_matrix", "utf8->utf32")] = {"fused": 1.0,
+                                              "blockparallel": 0.5}
+    assert _run(tmp_path, _report_v(BASE, 1), _report_v(fresh, 2)) == 0
+    assert "skipping table 'table_matrix'" in capsys.readouterr().err
+
+
+def test_matrix_schema_newer_baseline_table_skipped(tmp_path, capsys):
+    """The mirror case: an older-schema fresh run (e.g. a long-lived
+    branch) against a newer committed baseline warns-and-skips the
+    baseline-only table instead of failing on missing cells."""
+    base = dict(BASE)
+    base[("table_matrix", "utf8->utf32")] = {"fused": 1.0,
+                                             "blockparallel": 0.5}
+    assert _run(tmp_path, _report_v(base, 2), _report_v(BASE, 1)) == 0
+    assert "skipping table 'table_matrix'" in capsys.readouterr().err
+
+
+def test_matrix_schema_shared_table_still_gates_across_versions(tmp_path):
+    """Version skew never waives regressions in tables both sides know."""
+    fresh = {k: dict(d) for k, d in BASE.items()}
+    fresh[("table_matrix", "utf8->utf32")] = {"fused": 1.0,
+                                              "blockparallel": 0.5}
+    fresh[("table5", "latin")]["fused"] = 0.1   # real regression
+    assert _run(tmp_path, _report_v(BASE, 1), _report_v(fresh, 2)) == 1
+
+
+def test_matrix_schema_same_version_missing_cell_still_fails(tmp_path):
+    """Without version skew, a dropped table is a regression, not a
+    format evolution."""
+    base = dict(BASE)
+    base[("table_matrix", "utf8->utf32")] = {"fused": 1.0,
+                                             "blockparallel": 0.5}
+    assert _run(tmp_path, _report_v(base, 2), _report_v(BASE, 2)) == 1
+
+
+def test_matrix_schema_must_be_positive_int(tmp_path, capsys):
+    assert _run(tmp_path, _report_v(BASE, 0), _report_v(BASE, 2)) \
+        == bench_gate.EXIT_MALFORMED
+    bad = _report(BASE)
+    bad["schema"] = "two"
+    assert _run(tmp_path, bad, _report_v(BASE, 2)) \
+        == bench_gate.EXIT_MALFORMED
+
+
+def test_matrix_schema_disjoint_tables_never_pass_vacuously(tmp_path, capsys):
+    """If schema skew leaves NO shared table, the gate must fail rather
+    than pass with zero gated cells."""
+    renamed = {("table_5", lang): d for (t, lang), d in BASE.items()}
+    assert _run(tmp_path, _report_v(BASE, 2), _report_v(renamed, 3)) == 1
+    assert "nothing gated" in capsys.readouterr().err

@@ -398,6 +398,223 @@ def test_boundary_probes_also_hit_single_doc_strategies():
 
 
 # ---------------------------------------------------------------------------
+# Codec-matrix cells: every new (src, dst) pair vs CPython codecs.
+#
+# The oracle is CPython end to end: decode with the source codec, encode
+# with the destination codec.  Status semantics: the first input-element
+# offset where a substitution would occur — a decode error
+# (``UnicodeDecodeError.start`` scaled to units) or, for Latin-1 egress,
+# an unencodable code point (``UnicodeEncodeError.start`` mapped back to
+# source elements through the strictly-decodable prefix).
+
+_CODEC = {"utf8": "utf-8", "utf16": "utf-16-le", "utf32": "utf-32-le",
+          "latin1": "latin-1"}
+# Explicit little-endian dtypes: the oracle's wire form must not depend
+# on host endianness.
+_WIRE_DT = {"utf8": np.dtype(np.uint8), "utf16": np.dtype("<u2"),
+            "utf32": np.dtype("<u4"), "latin1": np.dtype(np.uint8)}
+
+MATRIX_NEW_PAIRS = [("utf8", "utf32"), ("utf32", "utf8"),
+                    ("utf16", "utf32"), ("utf32", "utf16"),
+                    ("latin1", "utf8"), ("utf8", "latin1")]
+
+
+def _wire_bytes(src, arr):
+    return np.ascontiguousarray(arr).astype(_WIRE_DT[src]).tobytes()
+
+
+def _from_text(fmt, text):
+    return np.frombuffer(text.encode(_CODEC[fmt]), _WIRE_DT[fmt])
+
+
+def _expected_status(src, dst, arr):
+    """Our status semantics from CPython oracles (see section comment)."""
+    raw = _wire_bytes(src, arr)
+    width = _WIRE_DT[src].itemsize
+    try:
+        text = raw.decode(_CODEC[src])
+        dec_pos = -1
+    except UnicodeDecodeError as e:
+        text = raw[: e.start].decode(_CODEC[src])  # strictly-valid prefix
+        dec_pos = e.start // width
+    if dst == "latin1":
+        for j, ch in enumerate(text):
+            if ord(ch) > 0xFF:
+                return len(text[:j].encode(_CODEC[src])) // width
+    return dec_pos
+
+
+CAPM = 1280   # fixed matrix-cell capacity: one compilation per cell
+
+
+def _matrix_transcode(src, dst, arr, strategy, errors):
+    buf = np.zeros(max(CAPM, len(arr)), _WIRE_DT[src])
+    buf[: len(arr)] = arr
+    x = jnp.asarray(buf) if strategy == "fused" \
+        else jnp.asarray(buf.astype(np.int64).astype(np.int32))
+    return tc.transcode(x, dst, src_format=src, n_valid=len(arr),
+                        strategy=strategy, errors=errors)
+
+
+def _check_matrix_cell(src, dst, arr, strategy):
+    raw = _wire_bytes(src, arr)
+    want_pos = _expected_status(src, dst, arr)
+
+    # strict: byte-exact on valid streams, status always; the
+    # speculative invalid-stream output is defined cross-strategy.
+    out, cnt, status = _matrix_transcode(src, dst, arr, strategy, "strict")
+    assert int(status) == want_pos, (src, dst, strategy, int(status))
+    got = np.asarray(out)[: min(int(cnt), out.shape[0])]
+    if want_pos < 0:
+        want = _from_text(dst, raw.decode(_CODEC[src]))
+        assert int(cnt) == len(want), (src, dst, strategy)
+        assert np.array_equal(got.astype(np.int64), want), \
+            (src, dst, strategy)
+    else:
+        ref = _matrix_transcode(src, dst, arr, "blockparallel", "strict")
+        assert int(cnt) == int(ref.count), (src, dst, strategy)
+        assert np.array_equal(
+            got.astype(np.int64),
+            np.asarray(ref.buffer)[: len(got)].astype(np.int64)), \
+            (src, dst, strategy)
+
+    # replace: byte-exact vs CPython's chained replace semantics.
+    want = _from_text(dst, raw.decode(_CODEC[src], "replace")) \
+        if dst != "latin1" else np.frombuffer(
+            raw.decode(_CODEC[src], "replace")
+            .encode("latin-1", "replace"), np.uint8)
+    out, cnt, status = _matrix_transcode(src, dst, arr, strategy, "replace")
+    assert int(status) == want_pos, (src, dst, strategy)
+    assert int(cnt) == len(want), (src, dst, strategy)
+    assert np.array_equal(
+        np.asarray(out)[: int(cnt)].astype(np.int64), want), \
+        (src, dst, strategy)
+
+
+def _matrix_case(src, rng, trial, cap):
+    """One seeded source buffer for a matrix-cell fuzz trial."""
+    if src == "utf8":
+        buf, n = _utf8_case(rng, trial, cap=cap)
+        return buf[:n]
+    if src == "utf16":
+        buf, n = _utf16_case(rng, trial, cap=cap)
+        return buf[:n]
+    if src == "utf32":
+        n = int(rng.integers(1, cap))
+        kind = trial % 3
+        if kind == 0:   # valid code points from a corpus
+            text = bytes(synthetic.utf8_array(
+                LANGS[trial % len(LANGS)], 400,
+                seed=SEED + trial)).decode("utf-8")[:n]
+            return np.array([ord(c) for c in text], np.uint32)
+        cps = rng.integers(0, 0x110000, n).astype(np.uint32)
+        if kind == 2:   # sprinkle surrogates / too-large / huge garbage
+            k = int(rng.integers(1, 6))
+            where = rng.integers(0, n, k)
+            cps[where] = rng.choice(
+                np.array([0xD800, 0xDFFF, 0x110000, 0xFFFFFFFF, 0xDC00],
+                         np.uint32), k)
+        return cps
+    # latin1: any byte stream is valid
+    n = int(rng.integers(1, cap))
+    return rng.integers(0, 256, n).astype(np.uint8)
+
+
+@pytest.mark.parametrize("src,dst", MATRIX_NEW_PAIRS)
+@pytest.mark.parametrize("strategy", ["fused", "blockparallel"])
+def test_differential_matrix_cells(src, dst, strategy):
+    rng = np.random.default_rng(SEED + 8)
+    for trial in range(8):
+        arr = _matrix_case(src, rng, trial, cap=CAPM)
+        _check_matrix_cell(src, dst, arr, strategy)
+
+
+def test_differential_matrix_boundary_adversarial():
+    """Matrix cells with errors engineered to straddle the 1024-lane
+    VMEM tile boundary (the cross-tile claimed-byte chain must agree
+    with CPython at every offset, for every endpoint)."""
+    probes8 = [b"\xf0\x9f\x92", b"\xc3", b"\xed\xa0\x80", b"\xc3\xa9"]
+    for probe in probes8:
+        for pos in (1021, 1022, 1023, 1024):
+            buf = np.full(2048, 0x41, np.uint8)
+            buf[pos: pos + len(probe)] = np.frombuffer(probe, np.uint8)
+            for dst in ("utf32", "latin1"):
+                _check_matrix_cell("utf8", dst, buf, "fused")
+    # utf32 source: a bad scalar at the tile boundary
+    for bad in (0xD800, 0x110000):
+        cps = np.full(1100, 0x41, np.uint32)
+        cps[1023] = bad
+        for dst in ("utf8", "utf16"):
+            _check_matrix_cell("utf32", dst, cps, "fused")
+    # latin1 source: high bytes straddling the boundary widen to 2-byte
+    # UTF-8 sequences across it
+    b = np.full(1100, 0x41, np.uint8)
+    b[1020:1028] = 0xE9
+    _check_matrix_cell("latin1", "utf8", b, "fused")
+    # utf8 -> latin1: an unencodable (but valid UTF-8) char at the
+    # boundary must locate at its lead byte
+    s = "A" * 1022 + "中" + "B" * 64
+    arr = np.frombuffer(s.encode("utf-8"), np.uint8)
+    _check_matrix_cell("utf8", "latin1", arr, "fused")
+
+
+@pytest.mark.parametrize("src,dst", [("utf8", "utf32"), ("latin1", "utf8"),
+                                     ("utf8", "latin1")])
+@pytest.mark.parametrize("errors", ["strict", "replace"])
+def test_differential_matrix_ragged(src, dst, errors):
+    """Ragged matrix cells: per-document parity with the single-document
+    fused transcoder and with the CPython oracle."""
+    rng = np.random.default_rng(SEED + 9)
+    docs = [_matrix_case(src, rng, t, cap=1200) for t in range(5)]
+    docs.insert(1, np.zeros(0, _WIRE_DT[src]))           # empty mixed in
+    docs.insert(3, np.full(80, 0x41, _WIRE_DT[src]))     # all-ASCII
+    pk = packing.pack_documents(docs, dtype=_WIRE_DT[src])
+    res = tc.ragged_transcode(pk.data, pk.offsets, pk.lengths,
+                              src_format=src, dst_format=dst,
+                              errors=errors)
+    factor = tc.CAP_FACTOR[(src, dst)]
+    for d, doc in enumerate(docs):
+        want_pos = _expected_status(src, dst, doc)
+        assert int(res.statuses[d]) == want_pos, d
+        lo = int(res.offsets[d])
+        got = np.asarray(res.buffer)[lo: lo + int(res.counts[d])]
+        span = max(int(pk.offsets[d + 1] - pk.offsets[d]), 1)
+        buf = np.zeros(span, _WIRE_DT[src])
+        buf[: len(doc)] = doc
+        single = ft.transcode_fused(jnp.asarray(buf), len(doc), src=src,
+                                    dst=dst, errors=errors)
+        assert int(res.counts[d]) == int(single.count), d
+        assert int(res.statuses[d]) == int(single.status), d
+        k = min(int(single.count), factor * span)
+        assert np.array_equal(got[:k], np.asarray(single.buffer)[:k]), d
+
+
+@pytest.mark.parametrize("src,dst", MATRIX_NEW_PAIRS)
+def test_parity_matrix_interpret_vs_compiled(src, dst):
+    """Matrix cells: interpreter kernels vs the XLA-compiled
+    blockparallel reference (and Mosaic vs interpreter on TPU)."""
+    rng = np.random.default_rng(SEED + 10)
+    for trial in range(4):
+        arr = _matrix_case(src, rng, trial, cap=1280)
+        interp = ft.transcode_fused(jnp.asarray(arr), len(arr), src=src,
+                                    dst=dst, interpret=True)
+        ref = _matrix_transcode(src, dst, arr, "blockparallel", "strict")
+        assert int(interp.count) == int(ref.count), (src, dst, trial)
+        assert int(interp.status) == int(ref.status), (src, dst, trial)
+        k = int(interp.count)
+        assert np.array_equal(
+            np.asarray(interp.buffer)[:k].astype(np.int64),
+            np.asarray(ref.buffer)[:k].astype(np.int64)), (src, dst, trial)
+        if _on_tpu():   # pragma: no cover - TPU-only branch
+            comp = ft.transcode_fused(jnp.asarray(arr), len(arr), src=src,
+                                      dst=dst, interpret=False)
+            assert int(comp.count) == int(interp.count)
+            assert int(comp.status) == int(interp.status)
+            assert np.array_equal(np.asarray(comp.buffer),
+                                  np.asarray(interp.buffer))
+
+
+# ---------------------------------------------------------------------------
 # Interpret-vs-compiled parity (the CI parity job runs `-k parity`).
 #
 # On CPU there is no Mosaic: parity means the Pallas INTERPRETER kernels

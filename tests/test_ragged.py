@@ -291,23 +291,23 @@ def test_batch_entries_replace_policy_threads_through():
 
 def test_batch_cache_keyed_per_capacity_and_bounded():
     pipeline._BATCH_CACHE.clear()
-    f1 = pipeline._batched("8to16", "fused", True, "strict", 1024)
-    f2 = pipeline._batched("8to16", "fused", True, "strict", 1024)
+    f1 = pipeline._batched("utf8", "utf16", "fused", True, "strict", 1024)
+    f2 = pipeline._batched("utf8", "utf16", "fused", True, "strict", 1024)
     assert f1 is f2                       # same capacity -> cached callable
-    f3 = pipeline._batched("8to16", "fused", True, "strict", 2048)
+    f3 = pipeline._batched("utf8", "utf16", "fused", True, "strict", 2048)
     assert f3 is not f1                   # capacity is part of the key
     assert len(pipeline._BATCH_CACHE) == 2
     for cap in range(3 * pipeline._BATCH_CACHE_MAX):
-        pipeline._batched("8to16", "fused", True, "strict", 4096 + cap)
+        pipeline._batched("utf8", "utf16", "fused", True, "strict", 4096 + cap)
     assert len(pipeline._BATCH_CACHE) <= pipeline._BATCH_CACHE_MAX
 
 
 def test_batch_cache_lru_keeps_hot_entries():
     pipeline._BATCH_CACHE.clear()
-    hot = pipeline._batched("8to16", "fused", True, "strict", 1024)
+    hot = pipeline._batched("utf8", "utf16", "fused", True, "strict", 1024)
     for cap in range(pipeline._BATCH_CACHE_MAX - 1):
-        pipeline._batched("8to16", "fused", True, "strict", 2048 + cap)
+        pipeline._batched("utf8", "utf16", "fused", True, "strict", 2048 + cap)
     # Touch the hot entry, then overflow: the hot entry must survive.
-    assert pipeline._batched("8to16", "fused", True, "strict", 1024) is hot
-    pipeline._batched("8to16", "fused", True, "strict", 9999)
-    assert ("8to16", "fused", True, "strict", 1024) in pipeline._BATCH_CACHE
+    assert pipeline._batched("utf8", "utf16", "fused", True, "strict", 1024) is hot
+    pipeline._batched("utf8", "utf16", "fused", True, "strict", 9999)
+    assert ("utf8", "utf16", "fused", True, "strict", 1024) in pipeline._BATCH_CACHE

@@ -154,3 +154,59 @@ def test_state_bytes_planner():
     _, cfg_mamba, _ = registry.get("falcon-mamba-7b")
     m = kvcache.state_bytes(cfg_mamba, batch=1, context_len=524288)
     assert m < 1e9       # SSM state independent of context
+
+
+def test_matrix_utf32le_ingress(engine):
+    """UTF-32LE prompts: validated/transcoded through the (utf32, utf8)
+    matrix cell; identical tokens to the UTF-8 twin."""
+    s = "hé🎉"
+    r8 = engine.serve([Request(s.encode("utf-8"))])[0]
+    r32 = engine.serve([Request(s.encode("utf-32-le"),
+                                in_encoding="utf-32-le")])[0]
+    assert r8.ok and r32.ok
+    assert r8.text_bytes == r32.text_bytes
+    # invalid scalar (lone surrogate) rejects with its code-point offset
+    bad = np.array([0x41, 0xD800, 0x42], "<u4").tobytes()
+    res = engine.serve([Request(bad, in_encoding="utf-32-le")])[0]
+    assert not res.ok and "invalid" in res.error
+    assert res.error_offset == 1
+    # ...and serves sanitized under errors="replace"
+    res = engine.serve([Request(bad, in_encoding="utf-32-le",
+                                errors="replace")])[0]
+    assert res.ok and res.error_offset == 1
+    assert res.sanitized_prompt == "A�B".encode("utf-8")
+    # ragged byte count rejects
+    res = engine.serve([Request(b"\x41\x00\x00", in_encoding="utf-32-le")])[0]
+    assert not res.ok and "multiple of 4" in res.error
+
+
+def test_matrix_latin1_ingress(engine):
+    """Latin-1 prompts can never be invalid; bytes >= 0x80 widen to
+    2-byte UTF-8 sequences before tokenization."""
+    s = "café ÿ"
+    r8 = engine.serve([Request(s.encode("utf-8"))])[0]
+    rl1 = engine.serve([Request(s.encode("latin-1"),
+                                in_encoding="latin-1")])[0]
+    assert r8.ok and rl1.ok
+    assert r8.text_bytes == rl1.text_bytes
+    # arbitrary bytes are a valid latin-1 prompt (incl. 0x80..0x9F)
+    res = engine.serve([Request(bytes(range(1, 40)) + b"\x80\xff",
+                                in_encoding="latin-1")])[0]
+    assert res.ok and res.error_offset == -1
+
+
+def test_matrix_egress_encodings(engine):
+    """Same generation in all four egress encodings: each wire form must
+    decode back to the same text (latin-1 may substitute '?')."""
+    res = {enc: engine.serve([Request(b"abc", out_encoding=enc)])[0]
+           for enc in ("utf-8", "utf-16-le", "utf-32-le", "latin-1")}
+    assert all(r.ok for r in res.values())
+    if res["utf-8"].text_bytes:
+        try:
+            s8 = res["utf-8"].text_bytes.decode("utf-8")
+        except UnicodeDecodeError:
+            return  # untrained byte model may emit invalid sequences
+        assert res["utf-16-le"].text_bytes.decode("utf-16-le") == s8
+        assert res["utf-32-le"].text_bytes.decode("utf-32-le") == s8
+        want_l1 = s8.encode("latin-1", "replace")
+        assert res["latin-1"].text_bytes == want_l1
