@@ -18,8 +18,12 @@ import sys
 # Bench-report schema version (see scripts/bench_gate.py): bumped when a
 # run starts emitting tables an older committed baseline cannot know
 # about, so the gate warns-and-skips unshared tables across schema
-# versions instead of failing on them.  v2 added ``table_matrix``.
-SCHEMA = 2
+# versions instead of failing on them.  v2 added ``table_matrix``; v3
+# added ``table_ascii_runs`` and the ``onepass`` strategy column to the
+# existing sweeps (new strategies in a shared table are additive — the
+# gate only compares its gated strategy — but the new table needs the
+# version bump for the cross-version warn-and-skip rule).
+SCHEMA = 3
 
 
 def _records(table: str, rows):
@@ -75,11 +79,28 @@ def main(argv=None) -> None:
     report["records"] += _records("table9", t9)
 
     # The codec matrix rides in every mode (incl. --smoke: it is the
-    # acceptance surface for the decode×encode stage composition).
-    tm = tb.table_matrix(n_chars=1 << 13 if (quick or smoke) else n,
-                         reps=4 if (quick or smoke) else tb.REPS)
+    # acceptance surface for the decode×encode stage composition AND for
+    # the one-pass pipeline — the utf8->utf16 row is the headline cell
+    # where onepass must beat the two-pass fused baseline).
+    # 16k chars / reps=10 even in the reduced modes: the micro-sized
+    # cells otherwise sit in the ~0.5 ms regime where shared-machine
+    # noise swamps both the onepass-vs-fused ordering (~10-15%) and the
+    # fused/blockparallel ratio the CI gate tracks.
+    tm = tb.table_matrix(n_chars=1 << 14 if (quick or smoke) else n,
+                         reps=10 if (quick or smoke) else tb.REPS)
     tb.print_rows("Codec matrix: all format pairs (Gchars/s)", tm)
     report["records"] += _records("table_matrix", tm)
+
+    # Mostly-ASCII documents with occasional multibyte spans: the
+    # per-tile ASCII skip's acceptance surface (rides in every mode;
+    # 64k chars keeps the ASCII fast paths out of the noise floor).
+    ta = tb.table_ascii_runs(n_chars=1 << 16 if (quick or smoke) else n,
+                             reps=8 if (quick or smoke) else tb.REPS,
+                             spans=(0, 4) if (quick or smoke)
+                             else (0, 1, 8, 64))
+    tb.print_rows("ASCII runs: mostly-ASCII with multibyte spans "
+                  "(Gchars/s)", ta)
+    report["records"] += _records("table_ascii_runs", ta)
 
     if not smoke:
         tr = tb.table_replace(n_chars=n)

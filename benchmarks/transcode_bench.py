@@ -73,6 +73,8 @@ def table5(langs=LIPSUM_LANGS, n_chars=N_CHARS):
         nch = n_chars
         b8, _ = _prep_narrow(lang, n_chars)
         fns = {
+            "onepass": (jax.jit(lambda x: tc.transcode_utf8_to_utf16(
+                x, None, strategy="onepass", validate=False)), b8),
             "fused": (jax.jit(lambda x: tc.transcode_utf8_to_utf16(
                 x, None, strategy="fused", validate=False)), b8),
             "blockparallel": (jax.jit(lambda x: tc.utf8_to_utf16(
@@ -97,6 +99,8 @@ def table6(langs=LIPSUM_LANGS, n_chars=N_CHARS, with_scalar=True):
         b8, _ = _prep_narrow(lang, n_chars)
         raw = bytes(np.asarray(b8))
         fns = {
+            "onepass": (jax.jit(lambda x: tc.transcode_utf8_to_utf16(
+                x, None, strategy="onepass", validate=True)), b8),
             "fused": (jax.jit(lambda x: tc.transcode_utf8_to_utf16(
                 x, None, strategy="fused", validate=True)), b8),
             "blockparallel": (jax.jit(lambda x: tc.utf8_to_utf16(
@@ -128,6 +132,8 @@ def table9(langs=LIPSUM_LANGS, n_chars=N_CHARS):
         _, u16 = _prep_narrow(lang, n_chars)
         raw16 = np.asarray(u16).tobytes()
         fns = {
+            "onepass": (jax.jit(lambda x: tc.transcode_utf16_to_utf8(
+                x, None, strategy="onepass", validate=True)), u16),
             "fused": (jax.jit(lambda x: tc.transcode_utf16_to_utf8(
                 x, None, strategy="fused", validate=True)), u16),
             "blockparallel": (jax.jit(lambda x: tc.utf16_to_utf8(
@@ -183,16 +189,17 @@ def table_replace(langs=("latin", "arabic", "emoji"), n_chars=N_CHARS,
 def table_ragged(batch_sizes=(8, 64), n_chars=2048, reps=6):
     """Beyond-paper: ragged packed batches vs padded vmap.
 
-    A batch of B documents transcodes either as ONE Pallas launch over a
-    tile-aligned packed stream (``strategy="packed"``: per-document
-    bookkeeping is per-tile scalars, no padding tiles scanned) or as a
-    ``vmap`` of the single-document fused pipeline over a padded [B, L]
-    buffer (the reference): every document pays all of L.  Two length
-    mixes per batch size: ``uniform`` (every document the same length —
-    vmap's best case) and ``skewed`` (one long document per 8, the rest
-    1/8th of its length — the serving-traffic shape, where padding
-    dominates the vmap cost).  Speeds are total gigacharacters of the
-    batch per second.
+    A batch of B documents transcodes either as ONE grid launch over a
+    tile-aligned packed stream (``onepass``: single-pass kernel, segment
+    scan carried in SMEM; ``fused``: the two-launch count/cumsum/write
+    reference — per-document bookkeeping is per-tile scalars either way,
+    no padding tiles scanned) or as a ``vmap`` of the single-document
+    pipeline over a padded [B, L] buffer (the reference): every document
+    pays all of L.  Two length mixes per batch size: ``uniform`` (every
+    document the same length — vmap's best case) and ``skewed`` (one
+    long document per 8, the rest 1/8th of its length — the
+    serving-traffic shape, where padding dominates the vmap cost).
+    Speeds are total gigacharacters of the batch per second.
     """
     from repro.core import packing
     from repro.data import pipeline
@@ -212,8 +219,6 @@ def table_ragged(batch_sizes=(8, 64), n_chars=2048, reps=6):
             pdata, poffs, plens = (jnp.asarray(pk.data),
                                    jnp.asarray(pk.offsets),
                                    jnp.asarray(pk.lengths))
-            packed_fn = jax.jit(
-                lambda d, o, l: tc.ragged_utf8_to_utf16(d, o, l))
 
             cap = -(-max(len(d) for d in docs) // packing.TILE) \
                 * packing.TILE
@@ -225,16 +230,55 @@ def table_ragged(batch_sizes=(8, 64), n_chars=2048, reps=6):
                                            np.int32))
 
             row = {"lang": f"b{b}/{skew}"}
-            jax.block_until_ready(packed_fn(pdata, poffs, plens))
-            row["packed"] = _gcps(nch, _time_min(
-                lambda: jax.block_until_ready(
-                    packed_fn(pdata, poffs, plens)), reps=reps))
+            for strat in ("onepass", "fused"):
+                packed_fn = jax.jit(
+                    lambda d, o, l, s=strat: tc.ragged_utf8_to_utf16(
+                        d, o, l, strategy=s))
+                jax.block_until_ready(packed_fn(pdata, poffs, plens))
+                row[strat] = _gcps(nch, _time_min(
+                    lambda packed_fn=packed_fn: jax.block_until_ready(
+                        packed_fn(pdata, poffs, plens)), reps=reps))
             vmap_fn = lambda: jax.block_until_ready(
                 pipeline.batch_utf8_to_utf16(vdocs, vlens,
                                              strategy="vmap"))
             vmap_fn()  # warmup/compile
             row["vmap"] = _gcps(nch, _time_min(vmap_fn, reps=reps))
             rows.append(row)
+    return rows
+
+
+def table_ascii_runs(n_chars=N_CHARS, reps=REPS, spans=(0, 1, 8, 64)):
+    """Beyond-paper: mostly-ASCII documents with occasional multibyte
+    spans — the per-tile ASCII fast path's acceptance surface.
+
+    A document of ``n_chars`` ASCII bytes gets ``k`` three-byte CJK
+    spans scattered through it (one per contaminated VMEM tile).  With
+    ``k = 0`` every strategy's whole-buffer ASCII cond short-circuits;
+    with ``k >= 1`` the whole-buffer cond fails and the two-pass fused
+    pipeline decodes EVERY tile twice, while the one-pass kernel's
+    per-tile skip (DESIGN.md §9) still reduces each untouched tile to a
+    widening copy.  Rows are ``ascii+k`` spans; speeds in Gchars/s.
+    """
+    rows = []
+    for k in spans:
+        base = np.full(n_chars, 0x61, np.uint8)   # 'a' * n_chars
+        if k:
+            # One span per contaminated tile, spread across the buffer.
+            stride = max(n_chars // k, 1024)
+            cjk = np.frombuffer("中".encode("utf-8"), np.uint8)
+            for j in range(k):
+                pos = min(j * stride + 17, n_chars - 3)
+                base[pos: pos + 3] = cjk
+        nch = n_chars - 2 * k          # each 3-byte char replaces 3 ASCII
+        b8 = jnp.asarray(base)
+        row = {"lang": f"ascii+{k}spans"}
+        for strat in ("onepass", "fused", "blockparallel"):
+            f = jax.jit(lambda x, s=strat: tc.transcode_utf8_to_utf16(
+                x, None, strategy=s))
+            jax.block_until_ready(f(b8))
+            row[strat] = _gcps(nch, _time_min(
+                lambda f=f: jax.block_until_ready(f(b8)), reps=reps))
+        rows.append(row)
     return rows
 
 
@@ -266,7 +310,7 @@ def table_matrix(n_chars=N_CHARS, lang="arabic", reps=REPS):
         }[src](t)
         x = jnp.asarray(wire)
         row = {"lang": f"{src}->{dst}"}
-        for strat in ("fused", "blockparallel"):
+        for strat in ("onepass", "fused", "blockparallel"):
             f = jax.jit(lambda v, s=src, d=dst, st=strat: tc.transcode(
                 v, d, src_format=s, strategy=st))
             jax.block_until_ready(f(x))  # warmup/compile

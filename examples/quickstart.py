@@ -27,12 +27,27 @@ def main():
     show("validate_utf8(surrogate U+D800)", bool(tc.validate_utf8(bad, 3)))
 
     # --- UTF-8 -> UTF-16 (all strategies) -------------------------------
-    for strat in ("fused", "blockparallel", "windowed"):
+    # "onepass" (the default) is the single-launch pipeline: one read +
+    # one decode of the input, inter-tile offsets carried in SMEM
+    # (DESIGN.md §9); "fused" is the two-launch kernel reference it is
+    # pinned bit-for-bit against.
+    for strat in ("onepass", "fused", "blockparallel", "windowed"):
         out, cnt, err = tc.transcode_utf8_to_utf16(
             jnp.asarray(utf8), len(utf8), strategy=strat)
         got = np.asarray(out)[: int(cnt)].astype(np.uint16)
         ok = np.array_equal(got, utf16.astype(np.uint16))
         show(f"utf8->utf16 [{strat}] matches python", ok)
+
+    # Explicit one-pass call on a mixed mostly-ASCII document: the
+    # per-tile ASCII skip keeps clean tiles on the fast path even though
+    # the buffer as a whole is not ASCII.
+    mixed = ("The quick brown fox. " * 120 + "速い茶色の狐。").encode("utf-8")
+    out, cnt, status = tc.transcode(
+        jnp.asarray(np.frombuffer(mixed, np.uint8)), "utf16",
+        src_format="utf8", strategy="onepass")
+    show("transcode(..., strategy='onepass') round-trips",
+         bytes(np.asarray(out)[: int(cnt)].astype(np.uint16).tobytes())
+         .decode("utf-16-le") == mixed.decode("utf-8"))
 
     # --- UTF-16 -> UTF-8 ------------------------------------------------
     out, cnt, err = tc.transcode_utf16_to_utf8(jnp.asarray(utf16), len(utf16))

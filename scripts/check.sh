@@ -31,7 +31,7 @@ python - "$fresh" <<'PY'
 import json, sys
 report = json.load(open(sys.argv[1]))
 strategies = {r["strategy"] for r in report["records"]}
-need = {"fused", "blockparallel", "windowed(paper)"}
+need = {"onepass", "fused", "blockparallel", "windowed(paper)"}
 missing = need - strategies
 assert not missing, f"bench JSON missing strategies: {missing}"
 tables = {r["table"] for r in report["records"]}

@@ -34,9 +34,15 @@ Error policy (the ``errors=`` kwarg; full table in DESIGN.md §4):
 
 Strategies (the ``strategy=`` kwarg; full decision table in DESIGN.md §5):
 
-  * ``fused`` (matrix + per-doc default) -- two-pass Pallas pipeline with
-    hierarchical in-kernel compaction and narrow (uint8/uint16/uint32)
-    I/O; validation is folded into the counting scan.
+  * ``onepass`` (matrix + per-doc default) -- single-launch Pallas
+    pipeline (DESIGN.md §9): one read + one decode of the input, with
+    the inter-tile output offsets carried as a scalar in SMEM across the
+    sequential grid and a per-tile ASCII fast path.  Bit-identical to
+    ``fused``.
+  * ``fused``  -- two-pass Pallas pipeline (count launch + inter-launch
+    cumsum + write launch) with hierarchical in-kernel compaction and
+    narrow (uint8/uint16/uint32) I/O; validation is folded into the
+    counting scan.  The kernel reference ``onepass`` is pinned against.
   * ``blockparallel``    -- speculative per-position decode + global XLA
     cumsum compaction; fully branch-free, pure-jnp (no Pallas), the
     portable beyond-paper form and the semantic reference.
@@ -103,6 +109,15 @@ CAP_FACTOR = {
 }
 
 PAIRS = tuple(sorted(CAP_FACTOR))
+
+# The strategy registry: every name `transcode` dispatches, in preference
+# order.  `onepass` is the default (single launch, single decode);
+# `fused` stays selectable as the two-pass kernel reference; the scan
+# entry points accept the same names (onepass/fused share one counting
+# kernel there).
+STRATEGIES = ("onepass", "fused", "blockparallel", "windowed")
+
+DEFAULT_STRATEGY = "onepass"
 
 
 def normalize_format(name: str) -> str:
@@ -253,7 +268,7 @@ def _blockparallel_count(x, n_valid, src: str, dst: str):
     return count, _first_error_status(err_map, n)
 
 
-def scan_utf8(b, n_valid=None, *, strategy: str = "fused"):
+def scan_utf8(b, n_valid=None, *, strategy: str = DEFAULT_STRATEGY):
     """Single-scan UTF-8 validation + UTF-16 capacity: ``(count, status)``.
 
     ``status`` is -1 for valid streams, else the byte offset of the first
@@ -267,14 +282,14 @@ def scan_utf8(b, n_valid=None, *, strategy: str = "fused"):
                 strategy=strategy)
 
 
-def scan_utf16(u, n_valid=None, *, strategy: str = "fused"):
+def scan_utf16(u, n_valid=None, *, strategy: str = DEFAULT_STRATEGY):
     """Single-scan UTF-16 validation + UTF-8 capacity: ``(count, status)``."""
     return scan(u, "utf8", src_format="utf16", n_valid=n_valid,
                 strategy=strategy)
 
 
 def scan(x, dst_format, *, src_format: str = "utf8", n_valid=None,
-         strategy: str = "fused"):
+         strategy: str = DEFAULT_STRATEGY):
     """Single-scan validation + destination capacity for any matrix cell.
 
     One read of the input yields ``(count, status)``: the number of
@@ -284,7 +299,10 @@ def scan(x, dst_format, *, src_format: str = "utf8", n_valid=None,
     src = normalize_format(src_format)
     dst = normalize_format(dst_format)
     _check_pair(src, dst)
-    if strategy == "fused":
+    if strategy in ("onepass", "fused"):
+        # The counting pass is already single-launch/single-read — the
+        # one-pass strategy's scan IS the fused scan (see
+        # repro.kernels.onepass_transcode.scan_onepass).
         from repro.kernels import fused_transcode
         return fused_transcode.scan_fused(x, n_valid, src=src, dst=dst)
     if strategy != "blockparallel":
@@ -485,10 +503,10 @@ def cps_to_utf32le_bytes(cp):
 
 
 # ---------------------------------------------------------------------------
-# Strategy dispatch (fused = Pallas two-pass, windowed = paper-faithful;
-# both imported lazily to avoid circular imports).
-
-DEFAULT_STRATEGY = "fused"
+# Strategy dispatch (onepass = single-launch Pallas, fused = two-pass
+# Pallas, windowed = paper-faithful; kernels imported lazily to avoid
+# circular imports).  The STRATEGIES registry and DEFAULT_STRATEGY live
+# next to the format registry above.
 
 # The serial paper baseline exists for the paper's own two directions.
 _WINDOWED_PAIRS = {("utf8", "utf16"), ("utf16", "utf8")}
@@ -509,7 +527,11 @@ def transcode(src, dst_format, *, src_format: str = "utf8", n_valid=None,
     s = normalize_format(src_format)
     d = normalize_format(dst_format)
     _check_pair(s, d)
-    if strategy == "fused":
+    if strategy == "onepass":
+        from repro.kernels import onepass_transcode
+        return onepass_transcode.transcode_onepass(
+            src, n_valid, src=s, dst=d, validate=validate, errors=errors)
+    elif strategy == "fused":
         from repro.kernels import fused_transcode
         return fused_transcode.transcode_fused(
             src, n_valid, src=s, dst=d, validate=validate, errors=errors)
@@ -530,7 +552,8 @@ def transcode(src, dst_format, *, src_format: str = "utf8", n_valid=None,
                                                    validate=validate)
         return windowed.utf16_to_utf8_windowed(src, n_valid,
                                                validate=validate)
-    raise ValueError(f"unknown strategy: {strategy}")
+    raise ValueError(
+        f"unknown strategy: {strategy} (supported: {list(STRATEGIES)})")
 
 
 def transcode_utf8_to_utf16(b, n_valid=None, *, strategy: str = DEFAULT_STRATEGY,
@@ -553,21 +576,26 @@ def transcode_utf16_to_utf8(u, n_valid=None, *, strategy: str = DEFAULT_STRATEGY
 
 def ragged_transcode(data, offsets, lengths, *, src_format: str = "utf8",
                      dst_format: str = "utf16", validate: bool = True,
-                     errors: str = "strict"):
-    """Ragged packed-batch transcode for any matrix cell: one launch per
-    pass over a :func:`repro.core.packing.pack_documents` layout.
+                     errors: str = "strict",
+                     strategy: str = DEFAULT_STRATEGY):
+    """Ragged packed-batch transcode for any matrix cell: ONE launch per
+    batch over a :func:`repro.core.packing.pack_documents` layout.
 
     Returns a :class:`repro.core.result.RaggedTranscodeResult` whose
     per-document slices are bit-identical to the single-document fused
     transcoder; ``errors=`` carries the usual strict/replace policy per
     document.  This is the padding-tax-free batch path (DESIGN.md §7) —
     the padded ``vmap`` form survives in ``repro.data.pipeline`` as the
-    reference.
+    reference.  ``strategy="onepass"`` (default) is the single-pass
+    launch with the segment scan carried in SMEM (DESIGN.md §9);
+    ``strategy="fused"`` keeps the two-launch kernel reference.
     """
+    # Strategy validation lives in ONE layer (the kernel dispatch below).
     from repro.kernels import ragged_transcode as rt
     return rt.transcode_ragged(
         data, offsets, lengths, src=normalize_format(src_format),
-        dst=normalize_format(dst_format), validate=validate, errors=errors)
+        dst=normalize_format(dst_format), validate=validate, errors=errors,
+        strategy=strategy)
 
 
 def ragged_scan(data, offsets, lengths, *, src_format: str = "utf8",
@@ -580,19 +608,21 @@ def ragged_scan(data, offsets, lengths, *, src_format: str = "utf8",
 
 
 def ragged_utf8_to_utf16(data, offsets, lengths, *, validate: bool = True,
-                         errors: str = "strict"):
+                         errors: str = "strict",
+                         strategy: str = DEFAULT_STRATEGY):
     """Ragged packed-batch UTF-8 -> UTF-16 (the (utf8, utf16) cell)."""
     return ragged_transcode(data, offsets, lengths, src_format="utf8",
                             dst_format="utf16", validate=validate,
-                            errors=errors)
+                            errors=errors, strategy=strategy)
 
 
 def ragged_utf16_to_utf8(data, offsets, lengths, *, validate: bool = True,
-                         errors: str = "strict"):
+                         errors: str = "strict",
+                         strategy: str = DEFAULT_STRATEGY):
     """Ragged packed-batch UTF-16 -> UTF-8 (see ``ragged_utf8_to_utf16``)."""
     return ragged_transcode(data, offsets, lengths, src_format="utf16",
                             dst_format="utf8", validate=validate,
-                            errors=errors)
+                            errors=errors, strategy=strategy)
 
 
 def ragged_scan_utf8(data, offsets, lengths):

@@ -47,17 +47,19 @@ from repro.data.tokenizer import BOS_ID, EOS_ID, PAD_ID, ByteTokenizer
 #   * ``strategy="packed"`` (default) — the ragged packed path: the
 #     [B, L] buffer is reinterpreted as ONE tile-aligned packed stream
 #     (row-major flattening IS the packed layout once L is padded to a
-#     tile multiple) and the fused count/write kernels run as a single
-#     grid launch for the whole batch (DESIGN.md §7); the dense ragged
-#     output is re-padded to the [B, cap] contract with one gather.
-#     Callers that can consume the dense layout directly should use
-#     ``tc.ragged_utf8_to_utf16`` on a ``packing.pack_documents`` batch
-#     and skip both the padding and the re-pad gather.
+#     tile multiple) and the single-pass kernel runs as ONE grid launch
+#     for the whole batch (DESIGN.md §7/§9 — the default ragged strategy
+#     is "onepass": one read + one decode, segment scan carried in
+#     SMEM); the dense ragged output is re-padded to the [B, cap]
+#     contract with one gather.  Callers that can consume the dense
+#     layout directly should use ``tc.ragged_utf8_to_utf16`` on a
+#     ``packing.pack_documents`` batch and skip both the padding and the
+#     re-pad gather.
 #   * ``strategy="vmap"`` — the padded reference: ``jax.vmap`` of the
-#     single-document fused transcoder over the document axis (B grid
-#     dispatches, every document scans all of L).  A per-document
-#     strategy name ("fused" / "blockparallel" / "windowed") selects
-#     that transcoder under vmap, as before.
+#     single-document default (one-pass) transcoder over the document
+#     axis (B grid dispatches, every document scans all of L).  A
+#     per-document strategy name ("onepass" / "fused" / "blockparallel"
+#     / "windowed") selects that transcoder under vmap, as before.
 #
 # The ``errors=`` policy threads through both, so a batch of partially-
 # malformed documents can ingest losslessly (errors="replace": U+FFFD
@@ -138,10 +140,10 @@ def batch_transcode(docs, lengths, *, in_encoding: str = "utf8",
     TranscodeResult([B, cap_factor*L], [B], [B]).
 
     ``strategy="packed"`` (default) reinterprets the row-major batch as
-    ONE tile-aligned packed stream and runs a single ragged launch;
-    ``strategy="vmap"`` maps the single-document fused transcoder over
-    the document axis (a per-document strategy name selects that
-    transcoder under vmap instead).
+    ONE tile-aligned packed stream and runs a single ragged one-pass
+    launch; ``strategy="vmap"`` maps the single-document default
+    (one-pass) transcoder over the document axis (a per-document
+    strategy name selects that transcoder under vmap instead).
     """
     src = tc.normalize_format(in_encoding)
     dst = tc.normalize_format(out_encoding)

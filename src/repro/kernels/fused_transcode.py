@@ -195,38 +195,58 @@ def _status(errs, ferrs, validate):
     return R.status_from_first(first, jnp.max(errs, initial=0) > 0)
 
 
+# The single-document wrapper contract, defined ONCE and shared with the
+# one-pass pipeline (repro.kernels.onepass_transcode) so the two Pallas
+# strategies cannot drift on padding-mask, drop-at-capacity or
+# whole-buffer-ASCII semantics (they are pinned bit-identical).
+
+
+def _mask_padding(x, n, dtype, masked):
+    """Zero the lanes at/past ``n`` when an explicit n_valid was given."""
+    if not masked:
+        return x
+    idx = jnp.arange(x.shape[0])
+    return jnp.where(idx < n, x, 0).astype(dtype)
+
+
+def _ascii_copy_result(xm, n, cap, dst_dtype):
+    """Paper Algorithm 3 whole-buffer fast path: ASCII values are
+    numerically identical in every matrix format — a widening copy."""
+    out = xm.astype(dst_dtype)
+    if cap > xm.shape[0]:
+        out = jnp.concatenate(
+            [out, jnp.zeros((cap - xm.shape[0],), dst_dtype)])
+    return R.TranscodeResult(out, jnp.asarray(n, jnp.int32),
+                             jnp.int32(R.STATUS_OK))
+
+
+def _clip_to_cap(outp, cap, total, dst_dtype):
+    """Keep the first ``cap`` lanes (the cross-strategy drop-at-capacity
+    rule) and clear the write-window slack past ``total``."""
+    outp = outp[:cap]
+    return jnp.where(jnp.arange(cap) < total, outp,
+                     jnp.zeros((), dst_dtype))
+
+
 @functools.partial(jax.jit, static_argnames=("src", "dst", "validate",
                                              "interpret", "ascii_fastpath",
                                              "masked", "errors"))
 def _transcode_impl(x, n, src, dst, validate, interpret, ascii_fastpath,
                     masked, errors):
     codec_s, codec_d, factor = stages.get_pair(src, dst)
-    cap_in = x.shape[0]
-    cap = factor * cap_in
-    idx = jnp.arange(cap_in)
-    xm = jnp.where(idx < n, x, 0).astype(codec_s.dtype) if masked else x
+    cap = factor * x.shape[0]
+    xm = _mask_padding(x, n, codec_s.dtype, masked)
 
     def general(xm):
         x3, nblk, totals, errs, ferrs = _count_call(
             xm, n, src, dst, errors, validate, interpret)
         base, total = compaction.tile_base_offsets(totals)
         outp = _write_call(x3, nblk, base, n, src, dst, errors, interpret)
-        # Keep the first `cap` lanes (matching blockparallel's drop-at-
-        # capacity) and clear the write-window slack after the last tile.
-        outp = outp[:cap]
-        outp = jnp.where(jnp.arange(cap) < total, outp,
-                         jnp.zeros((), codec_d.dtype))
+        outp = _clip_to_cap(outp, cap, total, codec_d.dtype)
         return R.TranscodeResult(outp, total, _status(errs, ferrs, validate))
 
     def ascii(xm):
-        # Paper Algorithm 3 fast path: ASCII values are numerically
-        # identical in every matrix format — a widening/narrowing copy.
-        out = xm.astype(codec_d.dtype)
-        if cap > cap_in:
-            out = jnp.concatenate(
-                [out, jnp.zeros((cap - cap_in,), codec_d.dtype)])
-        return R.TranscodeResult(out, jnp.asarray(n, jnp.int32),
-                                 jnp.int32(R.STATUS_OK))
+        return _ascii_copy_result(xm, n, cap, codec_d.dtype)
 
     if not ascii_fastpath:
         return general(xm)

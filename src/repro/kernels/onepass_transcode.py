@@ -1,0 +1,233 @@
+"""Single-pass Pallas transcode pipeline (strategy ``"onepass"``, the
+dispatch default): ONE grid launch, ONE decode per source tile.
+
+The fused two-pass pipeline (``repro.kernels.fused_transcode``) splits
+the transcode into a count launch, a host-visible ``nblk``-element
+cumsum, and a write launch that RE-decodes every tile — each byte is
+fetched and decoded twice and every transcode pays two launch overheads.
+The split existed only to materialize the inter-tile exclusive scan (a
+tile cannot know its output base before all earlier tiles have counted).
+On TPU, Pallas grid steps execute sequentially per core, so that scan
+does not need a launch boundary at all: it is a scalar **carry in SMEM
+scratch** (DESIGN.md §9).
+
+Each grid step of the single launch:
+
+  1. decodes/analyzes its VMEM tile ONCE (``stages.driver.decode_once``
+     — the same generic body the fused passes instantiate),
+  2. counts the tile's output units + fused validation scalars off the
+     decoded lanes (``count_decoded``),
+  3. reads the running output offset from the SMEM carry — the exclusive
+     scan, one scalar add per tile instead of an inter-launch cumsum —
+     and stores the compact stage window (``stage_decoded``, fed the
+     *already-decoded* tile) at that base,
+  4. advances the carry and folds the tile's error scalars into the
+     sticky (err_flag, first_error) carry; the final
+     ``(count, status)`` pair is emitted from the carry, so nothing
+     per-tile ever round-trips to the host.
+
+The whole-buffer ASCII ``lax.cond`` of the two-pass wrappers additionally
+becomes a **per-tile** ASCII fast path (paper Algorithm 3 at tile
+granularity, ``stages.driver.onepass_tile``): a pure-ASCII tile whose
+boundary inflow is pure ASCII reduces to a widening copy inside the
+kernel, so mostly-ASCII documents with occasional multibyte spans keep
+the fast path for every ASCII tile instead of falling off it globally.
+(The whole-buffer cond survives in front of the launch — when the entire
+buffer is ASCII, skipping the kernel dispatch outright is strictly
+cheaper than taking the skip tile by tile.)
+
+Results are bit-identical to ``strategy="fused"`` — (buffer, count,
+status) across every matrix cell × ``errors=`` policy (pinned by
+``tests/test_onepass.py`` and the differential fuzz) — and the whole
+transcode traces to exactly ONE ``pallas_call``.
+
+Sequential-grid assumption: the SMEM carry is only correct because grid
+steps run in order on one core.  That holds for Mosaic's TPU lowering
+(the grid is a sequential loop per core) and for the Pallas interpreter
+(which executes the grid as a sequential scan carrying scratch buffers);
+a parallel multi-core grid partition would need one carry per partition
+plus a final fix-up pass — see DESIGN.md §9.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import result as R
+from repro.kernels import fused_transcode as ft
+from repro.kernels import runtime
+from repro.kernels import stages
+from repro.kernels.stages import driver as sdrv
+
+ROWS = sdrv.ROWS
+LANES = sdrv.LANES
+BLOCK = sdrv.BLOCK
+
+_IMAX = R.NO_ERR_SENTINEL
+
+_check_errors = R.check_errors_policy
+
+# SMEM carry layout (int32 x 3), initialized at grid step 0:
+#   [0] running output offset  (the inter-tile exclusive scan)
+#   [1] sticky error flag      (max over tiles)
+#   [2] sticky first-error     (min over tiles; _IMAX = clean)
+_CARRY = 3
+
+
+def _onepass_kernel(*refs, src, dst, errors, validate, ascii_skip):
+    codec_s, codec_d = stages.get_codec(src), stages.get_codec(dst)
+    width = stages.stage_width(codec_s, codec_d)
+    nt = len(codec_s.tables)
+    table_refs = refs[:nt]
+    n_ref, xp_ref, x_ref, xn_ref, out_ref, fin_ref, carry = refs[nt:]
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry[0] = 0
+        carry[1] = 0
+        carry[2] = _IMAX
+
+    x = x_ref[...].astype(jnp.int32)
+    xp = xp_ref[...].astype(jnp.int32)
+    xn = xn_ref[...].astype(jnp.int32)
+    gidx = ft._gidx(x.shape)
+    tot, err, ferr, stage = sdrv.onepass_tile(
+        codec_s, codec_d, x, xp, xn, gidx < n_ref[0], gidx,
+        tuple(t[...] for t in table_refs), errors=errors,
+        validate=validate, ascii_skip=ascii_skip)
+
+    base = carry[0]
+    out_ref[pl.ds(base, width)] = stage.astype(codec_d.dtype)
+    carry[0] = base + tot
+    carry[1] = jnp.maximum(carry[1], err)
+    carry[2] = jnp.minimum(carry[2], ferr)
+    # Written every step; the grid is sequential, so the last write is
+    # the final (count, status) — no per-tile vectors leave the kernel.
+    fin_ref[0] = carry[0]
+    fin_ref[1] = R.status_from_first(carry[2], carry[1] > 0)
+
+
+def _onepass_call(xm, n, src, dst, errors, validate, ascii_skip, interpret):
+    """The single launch: returns ``(out_window, (count, status))``."""
+    codec_s, codec_d, _f = stages.get_pair(src, dst)
+    width = stages.stage_width(codec_s, codec_d)
+    x3, nblk = ft._tile(xm)
+    n1 = jnp.asarray(n, jnp.int32).reshape(1)
+    kernel = functools.partial(_onepass_kernel, src=src, dst=dst,
+                               errors=errors, validate=validate,
+                               ascii_skip=ascii_skip)
+    outp, fin = pl.pallas_call(
+        kernel,
+        grid=(nblk,),
+        in_specs=ft._table_specs(codec_s) + [
+            ft._SCALAR_SPEC, ft._tile_spec(0), ft._tile_spec(1),
+            ft._tile_spec(2)],
+        # The compact buffer is one revisited block (as in the fused
+        # write pass): each grid step stores its stage window at the
+        # carried, data-dependent base.  Sized so the store at the
+        # largest possible base fits.  The (2,) block is the final
+        # (count, status) pair off the carry.
+        out_specs=[pl.BlockSpec((nblk * width,), lambda i: (0,)),
+                   pl.BlockSpec((2,), lambda i: (0,))],
+        out_shape=[jax.ShapeDtypeStruct((nblk * width,), codec_d.dtype),
+                   jax.ShapeDtypeStruct((2,), jnp.int32)],
+        scratch_shapes=[pltpu.SMEM((_CARRY,), jnp.int32)],
+        interpret=interpret,
+    )(*[jnp.asarray(t) for t in codec_s.tables], n1, x3, x3, x3)
+    return outp, fin
+
+
+@functools.partial(jax.jit, static_argnames=("src", "dst", "validate",
+                                             "interpret", "ascii_fastpath",
+                                             "masked", "errors"))
+def _transcode_impl(x, n, src, dst, validate, interpret, ascii_fastpath,
+                    masked, errors):
+    codec_s, codec_d, factor = stages.get_pair(src, dst)
+    cap = factor * x.shape[0]
+    # Padding-mask / drop-at-capacity / whole-buffer-ASCII semantics are
+    # the fused module's helpers — ONE definition of the wrapper
+    # contract both Pallas strategies are pinned bit-identical on.
+    xm = ft._mask_padding(x, n, codec_s.dtype, masked)
+
+    def general(xm):
+        outp, fin = _onepass_call(xm, n, src, dst, errors, validate,
+                                  ascii_fastpath, interpret)
+        total = fin[0]
+        outp = ft._clip_to_cap(outp, cap, total, codec_d.dtype)
+        return R.TranscodeResult(outp, total, fin[1])
+
+    def ascii(xm):
+        # When EVERY tile would take the per-tile skip, skipping the
+        # launch itself is strictly cheaper.
+        return ft._ascii_copy_result(xm, n, cap, codec_d.dtype)
+
+    if not ascii_fastpath:
+        return general(xm)
+    return jax.lax.cond(jnp.all(xm < 0x80), ascii, general, xm)
+
+
+def transcode_onepass(x, n_valid=None, *, src: str, dst: str,
+                      validate: bool = True, errors: str = "strict",
+                      interpret=None, ascii_fastpath: bool = True):
+    """Single-pass transcode for any (src, dst) cell of the matrix.
+
+    Bit-identical to :func:`repro.kernels.fused_transcode.
+    transcode_fused` — same ``TranscodeResult`` buffer/count/status under
+    every ``errors=`` policy — but the input is read and decoded ONCE in
+    a single Pallas launch: the inter-tile output offsets are a scalar
+    SMEM carry across the sequential grid instead of an inter-launch
+    cumsum, and the count/status come off the carry rather than an
+    ``nblk``-vector round trip.  ``ascii_fastpath`` controls both the
+    whole-buffer cond and the per-tile ASCII skip.
+    """
+    _check_errors(errors)
+    codec_s, _codec_d, _f = stages.get_pair(src, dst)
+    x = jnp.asarray(x)
+    if x.dtype != codec_s.dtype:
+        x = x.astype(codec_s.dtype)
+    n = x.shape[0] if n_valid is None else n_valid
+    return _transcode_impl(
+        x, jnp.asarray(n, jnp.int32), src, dst, validate,
+        runtime.resolve_interpret(interpret), ascii_fastpath,
+        n_valid is not None, errors)
+
+
+def scan_onepass(x, n_valid=None, *, src: str, dst: str, interpret=None):
+    """Single-scan validation + capacity query: ``(count, status)``.
+
+    The fused pipeline's counting pass is ALREADY one launch over one
+    read of the input (there is no write pass to fuse away), so the
+    one-pass strategy's scan is the same kernel; this alias exists so
+    ``strategy="onepass"`` is total over the public API.
+    """
+    return ft.scan_fused(x, n_valid, src=src, dst=dst, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Thin per-pair instantiations (mirror the fused pipeline's public API).
+
+
+def utf8_to_utf16_onepass(b, n_valid=None, *, validate: bool = True,
+                          errors: str = "strict", interpret=None,
+                          ascii_fastpath: bool = True):
+    """Single-pass UTF-8 -> UTF-16 (the (utf8, utf16) matrix cell)."""
+    return transcode_onepass(b, n_valid, src="utf8", dst="utf16",
+                             validate=validate, errors=errors,
+                             interpret=interpret,
+                             ascii_fastpath=ascii_fastpath)
+
+
+def utf16_to_utf8_onepass(u, n_valid=None, *, validate: bool = True,
+                          errors: str = "strict", interpret=None,
+                          ascii_fastpath: bool = True):
+    """Single-pass UTF-16 -> UTF-8 (the (utf16, utf8) matrix cell)."""
+    return transcode_onepass(u, n_valid, src="utf16", dst="utf8",
+                             validate=validate, errors=errors,
+                             interpret=interpret,
+                             ascii_fastpath=ascii_fastpath)

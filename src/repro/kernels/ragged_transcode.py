@@ -46,6 +46,19 @@ Status/errors semantics are exactly :class:`repro.core.result.
 TranscodeResult`'s, per document.  Every document's output slice is
 bit-identical to running the single-document fused transcoder on that
 document alone (pinned by ``tests/test_differential.py``).
+
+The description above is the two-launch (``strategy="fused"``) form.
+The DEFAULT is now ``strategy="onepass"`` (DESIGN.md §9): the count and
+write bodies run in ONE grid launch off ONE decode per tile, with the
+inter-tile/segment scan carried as a scalar in SMEM scratch across the
+sequential grid — because documents are packed in order, the global
+running offset IS the per-document segment scan, and the per-document
+ownership masks (cross-document inflow zeroing + per-tile live ends) are
+exactly the "per-tile ownership resets" the carry needs.  Per-tile
+``(total, err, ferr)`` scalars still leave the kernel — they are the
+*product* (the per-document segment reductions consume them), not
+inter-pass coordination.  The per-tile ASCII fast path rides along, so
+an ASCII document packed next to a CJK document keeps its fast path.
 """
 
 from __future__ import annotations
@@ -57,6 +70,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import compaction, packing
 from repro.core import result as R
@@ -153,30 +167,120 @@ def _rwrite_kernel(end_ref, sp_ref, sn_ref, base_ref,
     out_ref[pl.ds(base_ref[0], width)] = stage.astype(codec_d.dtype)
 
 
-def _rcount_call(data, offsets, lengths, src, dst, errors, validate,
-                 interpret):
+def _launch_geometry(data, offsets, lengths, src):
+    """ONE definition of the ragged launch setup, shared by every ragged
+    kernel call (count/write/onepass): the ownership map, the masked +
+    boundary-tiled data, and the matching in_specs/operand prefix.
+    Desynchronizing these between the bodies would compute base offsets
+    on a different tiling than the writer stores with.
+    """
     codec_s = stages.get_codec(src)
     nblk = _nblk(data.shape[0])
     tile_doc, tile_end, same_prev, same_next = packing.tile_ownership(
         offsets, lengths, nblk, BLOCK)
     dm = _mask_to_docs(data, tile_end, nblk)
     d3, _ = runtime.tile_with_boundaries(dm, ROWS, LANES, boundary_tiles=2)
+    in_specs = ft._table_specs(codec_s) + [
+        _PER_TILE_SPEC, _PER_TILE_SPEC, _PER_TILE_SPEC,
+        _tile_spec(0), _tile_spec(1), _tile_spec(2)]
+    operands = (*[jnp.asarray(t) for t in codec_s.tables],
+                tile_end, same_prev, same_next, d3, d3, d3)
+    return nblk, tile_doc, tile_end, same_prev, same_next, in_specs, \
+        operands
+
+
+def _rcount_call(data, offsets, lengths, src, dst, errors, validate,
+                 interpret):
+    nblk, tile_doc, tile_end, same_prev, same_next, in_specs, operands = \
+        _launch_geometry(data, offsets, lengths, src)
     kernel = functools.partial(_rcount_kernel, src=src, dst=dst,
                                errors=errors, validate=validate)
     per_tile = jax.ShapeDtypeStruct((nblk,), jnp.int32)
     totals, errs, ferrs = pl.pallas_call(
         kernel,
         grid=(nblk,),
-        in_specs=ft._table_specs(codec_s) + [
-            _PER_TILE_SPEC, _PER_TILE_SPEC, _PER_TILE_SPEC,
-            _tile_spec(0), _tile_spec(1), _tile_spec(2)],
+        in_specs=in_specs,
         out_specs=[_PER_TILE_SPEC, _PER_TILE_SPEC, _PER_TILE_SPEC],
         out_shape=[per_tile, per_tile, per_tile],
         interpret=interpret,
-    )(*[jnp.asarray(t) for t in codec_s.tables],
-      tile_end, same_prev, same_next, d3, d3, d3)
+    )(*operands)
+    d3 = operands[-1]
     return nblk, d3, tile_doc, tile_end, same_prev, same_next, \
         totals, errs, ferrs
+
+
+# ---------------------------------------------------------------------------
+# Single-pass ragged kernel (strategy="onepass", the default): count +
+# write in one grid launch off one decode, base offsets carried in SMEM.
+
+
+def _ronepass_kernel(*refs, src, dst, errors, validate, ascii_skip):
+    codec_s, codec_d = stages.get_codec(src), stages.get_codec(dst)
+    width = stages.stage_width(codec_s, codec_d)
+    nt = len(codec_s.tables)
+    table_refs = refs[:nt]
+    (end_ref, sp_ref, sn_ref, xp_ref, x_ref, xn_ref,
+     out_ref, tot_ref, err_ref, ferr_ref, carry) = refs[nt:]
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry[0] = 0
+
+    x = x_ref[...].astype(jnp.int32)
+    # Ownership masking, exactly as the two-launch kernels: cross-
+    # document neighbour inflow reads as zeros.  (The zeroed inflow also
+    # lets the per-tile ASCII predicate pass at document starts — a
+    # document boundary is a clean inflow by construction.)
+    xp = xp_ref[...].astype(jnp.int32) * sp_ref[0]
+    xn = xn_ref[...].astype(jnp.int32) * sn_ref[0]
+    gidx = ft._gidx(x.shape)
+    tot, err, ferr, stage = sdrv.onepass_tile(
+        codec_s, codec_d, x, xp, xn, gidx < end_ref[0], gidx,
+        tuple(t[...] for t in table_refs), errors=errors,
+        validate=validate, ascii_skip=ascii_skip)
+
+    # Documents are packed in order, so the global running offset IS the
+    # per-document segment scan (dense output, no inter-doc padding).
+    base = carry[0]
+    out_ref[pl.ds(base, width)] = stage.astype(codec_d.dtype)
+    carry[0] = base + tot
+    # Per-tile scalars are the per-document reduction's INPUT (segment
+    # sum/min/max downstream), not inter-pass coordination.
+    tot_ref[0], err_ref[0], ferr_ref[0] = tot, err, ferr
+
+
+@functools.partial(jax.jit, static_argnames=("src", "dst", "validate",
+                                             "interpret", "errors"))
+def _ragged_onepass_impl(data, offsets, lengths, src, dst, validate,
+                         interpret, errors):
+    codec_s, codec_d, factor = stages.get_pair(src, dst)
+    width = stages.stage_width(codec_s, codec_d)
+    nblk, tile_doc, _tile_end, _sp, _sn, in_specs, operands = \
+        _launch_geometry(data, offsets, lengths, src)
+    kernel = functools.partial(_ronepass_kernel, src=src, dst=dst,
+                               errors=errors, validate=validate,
+                               ascii_skip=True)
+    per_tile = jax.ShapeDtypeStruct((nblk,), jnp.int32)
+    outp, totals, errs, ferrs = pl.pallas_call(
+        kernel,
+        grid=(nblk,),
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((nblk * width,), lambda i: (0,)),
+                   _PER_TILE_SPEC, _PER_TILE_SPEC, _PER_TILE_SPEC],
+        out_shape=[jax.ShapeDtypeStruct((nblk * width,), codec_d.dtype),
+                   per_tile, per_tile, per_tile],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(*operands)
+    total = jnp.sum(totals)
+    cap = factor * nblk * BLOCK
+    outp = outp[:cap]
+    outp = jnp.where(jnp.arange(cap) < total, outp,
+                     jnp.zeros((), codec_d.dtype))
+    counts, out_offsets, statuses = _doc_reduce(
+        totals, errs, ferrs, tile_doc, offsets, validate)
+    return R.RaggedTranscodeResult(outp, out_offsets, counts, statuses)
 
 
 @functools.partial(jax.jit, static_argnames=("src", "dst", "validate",
@@ -260,7 +364,7 @@ def _as_packed(data, offsets, lengths, dtype):
 
 def transcode_ragged(data, offsets, lengths, *, src: str, dst: str,
                      validate: bool = True, errors: str = "strict",
-                     interpret=None):
+                     interpret=None, strategy: str = "onepass"):
     """Ragged packed-batch transcode for any (src, dst) matrix cell.
 
     ``data``/``offsets``/``lengths`` is the tile-aligned packed layout of
@@ -270,11 +374,25 @@ def transcode_ragged(data, offsets, lengths, *, src: str, dst: str,
     ``(offsets, counts, statuses)`` — each document's slice is
     bit-identical to the single-document fused transcoder's
     ``buffer[:count]`` / ``count`` / ``status``.
+
+    ``strategy="onepass"`` (default) runs the batch as ONE grid launch
+    with the segment scan carried in SMEM (one read + one decode of the
+    packed stream); ``strategy="fused"`` keeps the two-launch
+    count/cumsum/write reference.  Both are bit-identical per document.
     """
     _check_errors(errors)
     codec_s, _codec_d, _f = stages.get_pair(src, dst)
     data, offsets, lengths = _as_packed(data, offsets, lengths,
                                         codec_s.dtype)
+    if strategy == "onepass":
+        return _ragged_onepass_impl(data, offsets, lengths, src, dst,
+                                    validate,
+                                    runtime.resolve_interpret(interpret),
+                                    errors)
+    if strategy != "fused":
+        raise ValueError(
+            f"transcode_ragged: unknown strategy {strategy!r} "
+            f"(expected 'onepass' or 'fused')")
     return _ragged_impl(data, offsets, lengths, src, dst, validate,
                         runtime.resolve_interpret(interpret), errors)
 
@@ -300,11 +418,12 @@ def scan_ragged(data, offsets, lengths, *, src: str, dst: str,
 
 
 def utf8_to_utf16_ragged(data, offsets, lengths, *, validate: bool = True,
-                         errors: str = "strict", interpret=None):
-    """Ragged packed-batch UTF-8 -> UTF-16: one launch per pass."""
+                         errors: str = "strict", interpret=None,
+                         strategy: str = "onepass"):
+    """Ragged packed-batch UTF-8 -> UTF-16: one launch per batch."""
     return transcode_ragged(data, offsets, lengths, src="utf8", dst="utf16",
                             validate=validate, errors=errors,
-                            interpret=interpret)
+                            interpret=interpret, strategy=strategy)
 
 
 def utf8_scan_ragged(data, offsets, lengths, *, interpret=None):
@@ -314,11 +433,12 @@ def utf8_scan_ragged(data, offsets, lengths, *, interpret=None):
 
 
 def utf16_to_utf8_ragged(data, offsets, lengths, *, validate: bool = True,
-                         errors: str = "strict", interpret=None):
-    """Ragged packed-batch UTF-16 -> UTF-8: one launch per pass."""
+                         errors: str = "strict", interpret=None,
+                         strategy: str = "onepass"):
+    """Ragged packed-batch UTF-16 -> UTF-8: one launch per batch."""
     return transcode_ragged(data, offsets, lengths, src="utf16", dst="utf8",
                             validate=validate, errors=errors,
-                            interpret=interpret)
+                            interpret=interpret, strategy=strategy)
 
 
 def utf16_scan_ragged(data, offsets, lengths, *, interpret=None):

@@ -18,7 +18,8 @@ from repro.kernels.stages import utf16 as s_utf16
 from repro.kernels.stages import utf32 as s_utf32
 from repro.kernels.stages import utf8 as s_utf8
 from repro.kernels.stages.driver import (  # noqa: F401  (re-export)
-    BLOCK, LANES, ROWS, Codec, count_tile, stage_units, stage_width,
+    BLOCK, LANES, ROWS, Codec, ascii_tile_pred, count_decoded, count_tile,
+    decode_once, onepass_tile, stage_decoded, stage_units, stage_width,
     write_stage)
 
 import jax.numpy as jnp

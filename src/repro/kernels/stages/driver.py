@@ -21,7 +21,13 @@ sides of the code-point intermediate:
 :func:`count_tile` and :func:`write_stage` compose any pair of codecs
 into the fused pipeline's two passes (DESIGN.md §5/§8); the per-pair tile
 bodies that previously hardwired UTF-8→UTF-16 and UTF-16→UTF-8 are now
-thin instantiations of these two functions.
+thin instantiations of these two functions.  Both are themselves thin
+compositions of three primitives — :func:`decode_once` (ONE speculative
+decode / maximal-subpart analysis of the tile), :func:`count_decoded`
+(lengths + fused validation over the decoded lanes) and
+:func:`stage_decoded` (in-tile compaction of the decoded lanes) — so the
+single-pass pipeline (:func:`onepass_tile`, DESIGN.md §9) can run count
+AND write off one decode instead of re-decoding the tile per pass.
 
 Stage windows are sized from first principles instead of per-pair
 constants: the speculative worst case is ``dst.py_unit_len(src.
@@ -36,6 +42,7 @@ from __future__ import annotations
 
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import compaction
@@ -85,24 +92,42 @@ def _encode_err(dst: Codec, a, live):
     return (a["err"] | (dst.encode_bad(a["cp"]) & a["starts"])) & live
 
 
-def count_tile(src: Codec, dst: Codec, x, xp, xn, live, gidx, tables, *,
-               errors: str, validate: bool):
-    """One counting/validating scan of a VMEM tile, any format pair.
+# How many trailing source units of the previous tile can still be part
+# of a character (or error subpart) that reaches into the current tile:
+# 3 bytes for UTF-8 (a 4-byte lead at the last position), 1 unit for
+# UTF-16 (a high surrogate), 0 for the fixed-width formats.  The per-tile
+# ASCII fast path checks this inflow window conservatively.
+_MAX_LOOKBACK = 3
 
-    ``live`` is the caller's in-stream mask (single stream: ``gidx < n``;
-    ragged: ``gidx < doc_end``); ``tables`` are ``src.tables`` as
-    VMEM-resident arrays.  Returns the three per-tile scalars
-    ``(total, err_flag, first_err_gidx)`` — first-error offsets are in
-    *global* stream coordinates (callers subtract the document start).
+
+def decode_once(src: Codec, x, xp, xn, *, errors: str, validate: bool):
+    """The ONE speculative decode / analysis of a tile.
+
+    Returns ``(a, cp, lead)``: the maximal-subpart analysis map (``None``
+    when neither validation nor replacement needs it), the per-lane code
+    point, and the unit-start mask the counting and staging primitives
+    consume.  Under ``errors="replace"`` the code points/starts come from
+    the analysis (replacement-substituted); under ``"strict"`` from the
+    raw speculative decode — exactly the historical count/write split,
+    now computed once per tile instead of once per pass.
     """
     need_analysis = validate or errors == "replace"
     a = src.analyze(x, xp, xn) if need_analysis else None
     if errors == "replace":
-        tot = jnp.sum(jnp.where(a["starts"] & live, dst.unit_len(a["cp"]), 0))
-    else:
-        cp, is_lead = src.decode(x, xp, xn)
-        tot = jnp.sum(jnp.where(is_lead & live, dst.unit_len(cp), 0))
+        return a, a["cp"], a["starts"]
+    cp, is_lead = src.decode(x, xp, xn)
+    return a, cp, is_lead
 
+
+def count_decoded(src: Codec, dst: Codec, a, cp, lead, x, xp, live, gidx,
+                  tables, *, validate: bool):
+    """Lengths + fused validation over an already-decoded tile.
+
+    Returns the three per-tile scalars ``(total, err_flag,
+    first_err_gidx)`` — first-error offsets are in *global* stream
+    coordinates (callers subtract the document start).
+    """
+    tot = jnp.sum(jnp.where(lead & live, dst.unit_len(cp), 0))
     if validate:
         # Fused validation, one scan: the maximal-subpart map locates the
         # first decode error at its lead (Python exc.start semantics) and
@@ -123,21 +148,13 @@ def count_tile(src: Codec, dst: Codec, x, xp, xn, live, gidx, tables, *,
     return tot, err_flag, ferr
 
 
-def write_stage(src: Codec, dst: Codec, x, xp, xn, instream, *,
-                errors: str):
-    """Decode + in-tile compaction of one tile: the write-pass body.
+def stage_decoded(src: Codec, dst: Codec, cp, lead, instream):
+    """In-tile compaction of an already-decoded tile: the staging body.
 
-    ``instream`` is the caller's in-stream mask of ``x``'s shape.
     Returns the compact int32 stage window (``stage_width(src, dst)``
     lanes); the caller stores it at the tile's base offset.
     """
-    if errors == "replace":
-        a = src.analyze(x, xp, xn)
-        cp = a["cp"]
-        live = (a["starts"] & instream).reshape(-1)
-    else:
-        cp, is_lead = src.decode(x, xp, xn)
-        live = (is_lead & instream).reshape(-1)
+    live = (lead & instream).reshape(-1)
     eff = jnp.where(live, dst.unit_len(cp).reshape(-1), 0)
     rank, _tot = compaction.tile_exclusive_scan(eff, rows=ROWS)
     cands = dst.encode(cp)
@@ -151,3 +168,92 @@ def write_stage(src: Codec, dst: Codec, x, xp, xn, instream, *,
         stage = stage.at[jnp.where(sel, rank + j, width)].set(
             plane.reshape(-1), mode="drop")
     return stage
+
+
+def count_tile(src: Codec, dst: Codec, x, xp, xn, live, gidx, tables, *,
+               errors: str, validate: bool):
+    """One counting/validating scan of a VMEM tile, any format pair.
+
+    ``live`` is the caller's in-stream mask (single stream: ``gidx < n``;
+    ragged: ``gidx < doc_end``); ``tables`` are ``src.tables`` as
+    VMEM-resident arrays.  Returns the three per-tile scalars
+    ``(total, err_flag, first_err_gidx)``.
+    """
+    a, cp, lead = decode_once(src, x, xp, xn, errors=errors,
+                              validate=validate)
+    return count_decoded(src, dst, a, cp, lead, x, xp, live, gidx, tables,
+                         validate=validate)
+
+
+def write_stage(src: Codec, dst: Codec, x, xp, xn, instream, *,
+                errors: str):
+    """Decode + in-tile compaction of one tile: the write-pass body.
+
+    ``instream`` is the caller's in-stream mask of ``x``'s shape.
+    """
+    _a, cp, lead = decode_once(src, x, xp, xn, errors=errors,
+                               validate=False)
+    return stage_decoded(src, dst, cp, lead, instream)
+
+
+def ascii_tile_pred(x, xp):
+    """Per-tile ASCII fast-path predicate (paper Algorithm 3 at tile
+    granularity).
+
+    True when every lane of the tile is plain ASCII AND the boundary
+    inflow — the trailing ``_MAX_LOOKBACK`` lanes of the previous tile,
+    which are the only lanes whose characters (or error subparts) can
+    reach into this tile — is pure ASCII too.  The inflow guard is
+    deliberately conservative: a previous tile ending in a lead or
+    continuation byte sends the tile down the general path even though a
+    pure-ASCII tile can never be claimed by it.  The lower bound matters:
+    lanes are int32 here, so a garbage UTF-32 scalar like 0xFFFFFFFF
+    wraps negative and must not ride the copy path.
+    """
+    tail = xp.reshape(-1)[-_MAX_LOOKBACK:]
+    return jnp.all((x >= 0) & (x < 0x80)) & \
+        jnp.all((tail >= 0) & (tail < 0x80))
+
+
+def onepass_tile(src: Codec, dst: Codec, x, xp, xn, live, gidx, tables, *,
+                 errors: str, validate: bool, ascii_skip: bool = True):
+    """Count + stage one tile off a single decode: the one-pass body.
+
+    Returns ``(total, err_flag, first_err_gidx, stage)`` — the count
+    pass's three per-tile scalars plus the write pass's compact stage
+    window, computed from ONE decode/analysis of the tile (the fused
+    two-pass pipeline decodes every tile twice).  With ``ascii_skip``
+    the whole body sits behind a per-tile ``lax.cond``: a pure-ASCII
+    tile with pure-ASCII boundary inflow (:func:`ascii_tile_pred`)
+    reduces to a widening copy — live lanes are a prefix of the tile and
+    dead lanes are already zero, so the copy IS the compact stage — and
+    mostly-ASCII documents with occasional multibyte spans no longer
+    fall off the fast path globally.
+    """
+    width = stage_width(src, dst)
+
+    def general(ops):
+        x, xp, xn = ops
+        a, cp, lead = decode_once(src, x, xp, xn, errors=errors,
+                                  validate=validate)
+        tot, err, ferr = count_decoded(src, dst, a, cp, lead, x, xp, live,
+                                       gidx, tables, validate=validate)
+        return tot, err, ferr, stage_decoded(src, dst, cp, lead, live)
+
+    if not ascii_skip:
+        return general((x, xp, xn))
+
+    def ascii(ops):
+        x, _xp, _xn = ops
+        # ASCII lanes are 1 destination unit in every matrix format and
+        # never claim (or get claimed by) a neighbour; dead lanes are
+        # zeros, so the flat tile is already the compact stage window.
+        tot = jnp.sum(live.astype(jnp.int32))
+        flat = x.reshape(-1)
+        if width > flat.shape[0]:
+            flat = jnp.concatenate(
+                [flat, jnp.zeros((width - flat.shape[0],), jnp.int32)])
+        return tot, jnp.int32(0), jnp.int32(_IMAX), flat
+
+    return jax.lax.cond(ascii_tile_pred(x, xp), ascii, general,
+                        (x, xp, xn))

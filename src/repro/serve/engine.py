@@ -14,8 +14,10 @@ Requests arrive as raw UTF-8, UTF-16LE, UTF-32LE or Latin-1 byte strings
      every prompt's verdict at once — one kernel dispatch per wave
      instead of one per request.  Unit-encoded prompts (UTF-16LE,
      UTF-32LE, Latin-1) group per (encoding, ``errors=``) policy and run
-     one ragged transcode to UTF-8 per group through that matrix cell,
-     whose counting pass carries the same fused validation.  Under
+     one ragged transcode to UTF-8 per group through that matrix cell —
+     a SINGLE single-pass launch per group (the default ragged strategy
+     is "onepass", DESIGN.md §9: one read + one decode of the packed
+     wave, validation fused into the same scan).  Under
      ``errors="strict"`` invalid prompts are rejected with the offset of
      the first bad byte/unit surfaced in ``Result.error_offset``; under
      ``errors="replace"`` malformed prompts are sanitized (U+FFFD per
@@ -204,10 +206,10 @@ class Engine:
                         admitted[i] = entry
 
     def _sanitize_utf8(self, i, req, raw, off):
-        """Dirty prompt under replace: sanitize via a fused
-        replace-transcode to UTF-16, then encode the now-valid units
-        back to UTF-8 for the byte tokenizer (dirty prompts are the rare
-        case, so this stays per-request)."""
+        """Dirty prompt under replace: sanitize via a single-pass
+        replace-transcode to UTF-16 (the default strategy), then encode
+        the now-valid units back to UTF-8 for the byte tokenizer (dirty
+        prompts are the rare case, so this stays per-request)."""
         buf = np.zeros(self.max_prompt, np.uint8)
         buf[: len(raw)] = raw
         u16, cu, _status = tc.transcode_utf8_to_utf16(
@@ -225,13 +227,13 @@ class Engine:
 
     def _ingress_unit_group(self, encoding, policy, members, results,
                             admitted):
-        """One ragged transcode launch per ``max_batch`` unit-encoded
+        """One ragged single-pass launch per ``max_batch`` unit-encoded
         prompts (grouped per (encoding, ``errors=``) — the pair and the
-        policy are static kernel switches): the counting pass validates +
-        locates per document through that matrix cell, the write pass
-        produces the UTF-8 the byte tokenizer consumes.  Covers
-        utf-16-le, utf-32-le and latin-1 ingress (latin-1 can never
-        reject — every byte is a code point)."""
+        policy are static kernel switches): the launch validates +
+        locates per document through that matrix cell AND produces the
+        UTF-8 the byte tokenizer consumes, off one decode of the packed
+        wave.  Covers utf-16-le, utf-32-le and latin-1 ingress (latin-1
+        can never reject — every byte is a code point)."""
         _width, np_dtype, src, noun = self._UNIT_INGRESS[encoding]
         for g0 in range(0, len(members), self.max_batch):
             chunk = members[g0: g0 + self.max_batch]

@@ -193,6 +193,26 @@ def test_matrix_schema_must_be_positive_int(tmp_path, capsys):
         == bench_gate.EXIT_MALFORMED
 
 
+def test_schema3_ascii_runs_table_and_onepass_column(tmp_path, capsys):
+    """The v3 bump (ISSUE 5): a schema-3 fresh run adds the
+    ``table_ascii_runs`` table and an ``onepass`` strategy column to the
+    existing sweeps.  Against a schema-2 baseline the new TABLE is
+    warned-and-skipped; the new strategy COLUMN inside shared tables is
+    additive (the gate only reads its gated strategy) and must not
+    affect the verdict either way."""
+    fresh = {k: dict(d) for k, d in BASE.items()}
+    for d in fresh.values():
+        d["onepass"] = d["fused"] * 1.25         # new column, shared table
+    fresh[("table_ascii_runs", "ascii+4spans")] = {
+        "onepass": 3.0, "fused": 1.0, "blockparallel": 0.5}
+    assert _run(tmp_path, _report_v(BASE, 2), _report_v(fresh, 3)) == 0
+    assert "skipping table 'table_ascii_runs'" in capsys.readouterr().err
+    # ...and a fused regression in a shared table still fails despite the
+    # healthy new column.
+    fresh[("table5", "latin")]["fused"] = 0.1
+    assert _run(tmp_path, _report_v(BASE, 2), _report_v(fresh, 3)) == 1
+
+
 def test_matrix_schema_disjoint_tables_never_pass_vacuously(tmp_path, capsys):
     """If schema skew leaves NO shared table, the gate must fail rather
     than pass with zero gated cells."""

@@ -2,8 +2,10 @@
 
 Seeded random + mutated corpora are checked **byte-exactly** against
 CPython's ``codecs`` machinery across every
-(direction x strategy x errors) cell, including the ragged packed-batch
-path with per-document statuses:
+(direction x strategy x errors) cell — the single-launch ``onepass``
+strategy (DESIGN.md §9) rides every sweep next to ``fused`` — including
+the ragged packed-batch path (both launch strategies) with per-document
+statuses:
 
   * valid streams: ``buffer[:count]`` must equal the CPython transcode
     bit for bit, ``status`` must be -1;
@@ -196,7 +198,8 @@ def boundary_documents16():
 
 def _check8_strict(buf, n, strategy):
     want, want_pos = _py8(bytes(buf[:n]))
-    x = jnp.asarray(buf if strategy == "fused" else buf.astype(np.int32))
+    x = jnp.asarray(buf if strategy in ("fused", "onepass")
+                    else buf.astype(np.int32))
     out, cnt, status = tc.transcode_utf8_to_utf16(x, n, strategy=strategy)
     assert int(status) == want_pos
     got = np.asarray(out)[: min(int(cnt), out.shape[0])]
@@ -216,7 +219,8 @@ def _check8_strict(buf, n, strategy):
 def _check8_replace(buf, n, strategy):
     want = _py8_replace(bytes(buf[:n]))
     _, want_pos = _py8(bytes(buf[:n]))
-    x = jnp.asarray(buf if strategy == "fused" else buf.astype(np.int32))
+    x = jnp.asarray(buf if strategy in ("fused", "onepass")
+                    else buf.astype(np.int32))
     out, cnt, status = tc.transcode_utf8_to_utf16(x, n, strategy=strategy,
                                                   errors="replace")
     assert int(status) == want_pos
@@ -224,7 +228,7 @@ def _check8_replace(buf, n, strategy):
     assert np.array_equal(np.asarray(out)[: int(cnt)], want)
 
 
-@pytest.mark.parametrize("strategy", ["fused", "blockparallel"])
+@pytest.mark.parametrize("strategy", ["onepass", "fused", "blockparallel"])
 def test_differential_utf8_to_utf16(strategy):
     rng = np.random.default_rng(SEED)
     for trial in range(20):
@@ -243,7 +247,8 @@ def test_differential_utf8_to_utf16_windowed():
 
 def _check16_strict(buf, n, strategy):
     want, want_pos = _py16(buf[:n])
-    x = jnp.asarray(buf if strategy == "fused" else buf.astype(np.int32))
+    x = jnp.asarray(buf if strategy in ("fused", "onepass")
+                    else buf.astype(np.int32))
     out, cnt, status = tc.transcode_utf16_to_utf8(x, n, strategy=strategy)
     assert int(status) == want_pos
     got = np.asarray(out)[: min(int(cnt), out.shape[0])]
@@ -259,7 +264,8 @@ def _check16_strict(buf, n, strategy):
 def _check16_replace(buf, n, strategy):
     want = _py16_replace(buf[:n])
     _, want_pos = _py16(buf[:n])
-    x = jnp.asarray(buf if strategy == "fused" else buf.astype(np.int32))
+    x = jnp.asarray(buf if strategy in ("fused", "onepass")
+                    else buf.astype(np.int32))
     out, cnt, status = tc.transcode_utf16_to_utf8(x, n, strategy=strategy,
                                                   errors="replace")
     assert int(status) == want_pos
@@ -267,7 +273,7 @@ def _check16_replace(buf, n, strategy):
     assert np.array_equal(np.asarray(out)[: int(cnt)], want)
 
 
-@pytest.mark.parametrize("strategy", ["fused", "blockparallel"])
+@pytest.mark.parametrize("strategy", ["onepass", "fused", "blockparallel"])
 def test_differential_utf16_to_utf8(strategy):
     rng = np.random.default_rng(SEED + 2)
     for trial in range(16):
@@ -287,10 +293,10 @@ def test_differential_utf16_to_utf8_windowed():
 # Ragged packed-batch cells: per-document statuses vs CPython
 
 
-def _check_ragged8(docs, errors):
+def _check_ragged8(docs, errors, strategy="onepass"):
     pk = packing.pack_documents(docs, dtype=np.uint8)
     res = tc.ragged_utf8_to_utf16(pk.data, pk.offsets, pk.lengths,
-                                  errors=errors)
+                                  errors=errors, strategy=strategy)
     for d, doc in enumerate(docs):
         raw = bytes(np.asarray(doc, np.uint8))
         _, want_pos = _py8(raw)
@@ -319,10 +325,10 @@ def _check_ragged8(docs, errors):
         assert np.array_equal(got[:k], np.asarray(single.buffer)[:k]), d
 
 
-def _check_ragged16(docs, errors):
+def _check_ragged16(docs, errors, strategy="onepass"):
     pk = packing.pack_documents(docs, dtype=np.uint16)
     res = tc.ragged_utf16_to_utf8(pk.data, pk.offsets, pk.lengths,
-                                  errors=errors)
+                                  errors=errors, strategy=strategy)
     for d, doc in enumerate(docs):
         u = np.asarray(doc, np.uint16)
         _, want_pos = _py16(u)
@@ -348,8 +354,9 @@ def _check_ragged16(docs, errors):
         assert np.array_equal(got[:k], np.asarray(single.buffer)[:k]), d
 
 
+@pytest.mark.parametrize("strategy", ["onepass", "fused"])
 @pytest.mark.parametrize("errors", ["strict", "replace"])
-def test_differential_ragged_utf8_fuzz(errors):
+def test_differential_ragged_utf8_fuzz(errors, strategy):
     rng = np.random.default_rng(SEED + 4)
     for batch in range(4):
         docs = []
@@ -358,11 +365,12 @@ def test_differential_ragged_utf8_fuzz(errors):
             docs.append(buf[:n])
         docs.insert(2, np.zeros(0, np.uint8))            # empty mixed in
         docs.insert(4, np.full(77, 0x41, np.uint8))      # all-ASCII
-        _check_ragged8(docs, errors)
+        _check_ragged8(docs, errors, strategy)
 
 
+@pytest.mark.parametrize("strategy", ["onepass", "fused"])
 @pytest.mark.parametrize("errors", ["strict", "replace"])
-def test_differential_ragged_utf16_fuzz(errors):
+def test_differential_ragged_utf16_fuzz(errors, strategy):
     rng = np.random.default_rng(SEED + 5)
     for batch in range(3):
         docs = []
@@ -370,17 +378,19 @@ def test_differential_ragged_utf16_fuzz(errors):
             buf, n = _utf16_case(rng, batch * 5 + t, cap=1200)
             docs.append(buf[:n])
         docs.insert(1, np.zeros(0, np.uint16))
-        _check_ragged16(docs, errors)
+        _check_ragged16(docs, errors, strategy)
 
 
+@pytest.mark.parametrize("strategy", ["onepass", "fused"])
 @pytest.mark.parametrize("errors", ["strict", "replace"])
-def test_differential_ragged_boundary_adversarial_utf8(errors):
-    _check_ragged8(boundary_documents8(), errors)
+def test_differential_ragged_boundary_adversarial_utf8(errors, strategy):
+    _check_ragged8(boundary_documents8(), errors, strategy)
 
 
+@pytest.mark.parametrize("strategy", ["onepass", "fused"])
 @pytest.mark.parametrize("errors", ["strict", "replace"])
-def test_differential_ragged_boundary_adversarial_utf16(errors):
-    _check_ragged16(boundary_documents16(), errors)
+def test_differential_ragged_boundary_adversarial_utf16(errors, strategy):
+    _check_ragged16(boundary_documents16(), errors, strategy)
 
 
 def test_boundary_probes_also_hit_single_doc_strategies():
@@ -392,7 +402,7 @@ def test_boundary_probes_also_hit_single_doc_strategies():
             continue
         buf = np.zeros(CAP8, np.uint8)
         buf[:n] = doc
-        for strategy in ("fused", "blockparallel"):
+        for strategy in ("onepass", "fused", "blockparallel"):
             _check8_strict(buf, n, strategy)
             _check8_replace(buf, n, strategy)
 
@@ -450,7 +460,7 @@ CAPM = 1280   # fixed matrix-cell capacity: one compilation per cell
 def _matrix_transcode(src, dst, arr, strategy, errors):
     buf = np.zeros(max(CAPM, len(arr)), _WIRE_DT[src])
     buf[: len(arr)] = arr
-    x = jnp.asarray(buf) if strategy == "fused" \
+    x = jnp.asarray(buf) if strategy in ("fused", "onepass") \
         else jnp.asarray(buf.astype(np.int64).astype(np.int32))
     return tc.transcode(x, dst, src_format=src, n_valid=len(arr),
                         strategy=strategy, errors=errors)
@@ -521,7 +531,7 @@ def _matrix_case(src, rng, trial, cap):
 
 
 @pytest.mark.parametrize("src,dst", MATRIX_NEW_PAIRS)
-@pytest.mark.parametrize("strategy", ["fused", "blockparallel"])
+@pytest.mark.parametrize("strategy", ["onepass", "fused", "blockparallel"])
 def test_differential_matrix_cells(src, dst, strategy):
     rng = np.random.default_rng(SEED + 8)
     for trial in range(8):
@@ -560,8 +570,9 @@ def test_differential_matrix_boundary_adversarial():
 
 @pytest.mark.parametrize("src,dst", [("utf8", "utf32"), ("latin1", "utf8"),
                                      ("utf8", "latin1")])
+@pytest.mark.parametrize("strategy", ["onepass", "fused"])
 @pytest.mark.parametrize("errors", ["strict", "replace"])
-def test_differential_matrix_ragged(src, dst, errors):
+def test_differential_matrix_ragged(src, dst, errors, strategy):
     """Ragged matrix cells: per-document parity with the single-document
     fused transcoder and with the CPython oracle."""
     rng = np.random.default_rng(SEED + 9)
@@ -571,7 +582,7 @@ def test_differential_matrix_ragged(src, dst, errors):
     pk = packing.pack_documents(docs, dtype=_WIRE_DT[src])
     res = tc.ragged_transcode(pk.data, pk.offsets, pk.lengths,
                               src_format=src, dst_format=dst,
-                              errors=errors)
+                              errors=errors, strategy=strategy)
     factor = tc.CAP_FACTOR[(src, dst)]
     for d, doc in enumerate(docs):
         want_pos = _expected_status(src, dst, doc)
@@ -676,6 +687,89 @@ def test_parity_utf16_interpret_vs_compiled(errors):
             assert int(comp.status) == int(interp.status)
             assert np.array_equal(np.asarray(comp.buffer),
                                   np.asarray(interp.buffer))
+
+
+@pytest.mark.parametrize("errors", ["strict", "replace"])
+def test_parity_onepass_interpret_vs_compiled(errors):
+    """One-pass kernels (single launch, SMEM carry): interpreter vs the
+    XLA-compiled blockparallel reference on CPU; on a TPU backend the
+    same test additionally pins the Mosaic-compiled kernel — whose
+    sequential-grid carry is the §9 correctness assumption — to the
+    interpreter."""
+    from repro.kernels import onepass_transcode as opk
+    rng = np.random.default_rng(SEED + 11)
+    for trial in range(8):
+        buf, n = _utf8_case(rng, trial)
+        interp = opk.utf8_to_utf16_onepass(jnp.asarray(buf), n,
+                                           errors=errors, interpret=True)
+        ref = tc.utf8_to_utf16(jnp.asarray(buf.astype(np.int32)), n,
+                               errors=errors)
+        assert int(interp.count) == int(ref.count), trial
+        assert int(interp.status) == int(ref.status), trial
+        k = min(int(interp.count), CAP8)
+        assert np.array_equal(np.asarray(interp.buffer)[:k],
+                              np.asarray(ref.buffer)[:k]), trial
+        if _on_tpu():   # pragma: no cover - TPU-only branch
+            comp = opk.utf8_to_utf16_onepass(jnp.asarray(buf), n,
+                                             errors=errors,
+                                             interpret=False)
+            assert int(comp.count) == int(interp.count)
+            assert int(comp.status) == int(interp.status)
+            assert np.array_equal(np.asarray(comp.buffer),
+                                  np.asarray(interp.buffer))
+
+
+@pytest.mark.parametrize("src,dst", MATRIX_NEW_PAIRS)
+def test_parity_onepass_matrix_interpret_vs_compiled(src, dst):
+    """Matrix cells through the one-pass kernel: interpreter vs the
+    compiled blockparallel reference (and Mosaic vs interpreter on
+    TPU)."""
+    from repro.kernels import onepass_transcode as opk
+    rng = np.random.default_rng(SEED + 12)
+    for trial in range(3):
+        arr = _matrix_case(src, rng, trial, cap=1280)
+        interp = opk.transcode_onepass(jnp.asarray(arr), len(arr), src=src,
+                                       dst=dst, interpret=True)
+        ref = _matrix_transcode(src, dst, arr, "blockparallel", "strict")
+        assert int(interp.count) == int(ref.count), (src, dst, trial)
+        assert int(interp.status) == int(ref.status), (src, dst, trial)
+        k = int(interp.count)
+        assert np.array_equal(
+            np.asarray(interp.buffer)[:k].astype(np.int64),
+            np.asarray(ref.buffer)[:k].astype(np.int64)), (src, dst, trial)
+        if _on_tpu():   # pragma: no cover - TPU-only branch
+            comp = opk.transcode_onepass(jnp.asarray(arr), len(arr),
+                                         src=src, dst=dst, interpret=False)
+            assert int(comp.count) == int(interp.count)
+            assert int(comp.status) == int(interp.status)
+            assert np.array_equal(np.asarray(comp.buffer),
+                                  np.asarray(interp.buffer))
+
+
+def test_parity_ragged_onepass_interpret_vs_compiled():
+    """Ragged one-pass launch: interpreter vs the per-document compiled
+    reference (and Mosaic vs interpreter on TPU)."""
+    from repro.kernels import ragged_transcode as rt
+    docs = boundary_documents8()
+    pk = packing.pack_documents(docs, dtype=np.uint8)
+    interp = rt.utf8_to_utf16_ragged(pk.data, pk.offsets, pk.lengths,
+                                     interpret=True, strategy="onepass")
+    for d, doc in enumerate(docs):
+        n = len(doc)
+        buf = np.zeros(max(n, 1), np.uint8)
+        buf[:n] = doc
+        ref = tc.utf8_to_utf16(jnp.asarray(buf.astype(np.int32)), n)
+        assert int(interp.counts[d]) == int(ref.count), d
+        assert int(interp.statuses[d]) == int(ref.status), d
+    if _on_tpu():   # pragma: no cover - TPU-only branch
+        comp = rt.utf8_to_utf16_ragged(pk.data, pk.offsets, pk.lengths,
+                                       interpret=False, strategy="onepass")
+        assert np.array_equal(np.asarray(comp.buffer),
+                              np.asarray(interp.buffer))
+        assert np.array_equal(np.asarray(comp.counts),
+                              np.asarray(interp.counts))
+        assert np.array_equal(np.asarray(comp.statuses),
+                              np.asarray(interp.statuses))
 
 
 def test_parity_ragged_interpret_vs_compiled():

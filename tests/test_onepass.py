@@ -1,0 +1,370 @@
+"""Single-pass pipeline tests (strategy="onepass", DESIGN.md §9).
+
+Three claims are pinned here:
+
+  1. **One launch.**  A one-pass transcode — single stream or a whole
+     ragged packed batch — traces to exactly ONE ``pallas_call``: the
+     SMEM offset carry replaced the count-launch / cumsum / write-launch
+     split of the fused pipeline.
+  2. **Bit identity.**  (buffer, count, status) are bit-identical to
+     ``strategy="fused"`` across every matrix cell × ``errors=`` policy,
+     including boundary-adversarial streams straddling VMEM tile and
+     packed-document boundaries (the carry must advance by exactly the
+     fused count pass's per-tile totals for the bases to agree).
+  3. **Per-tile ASCII skip.**  Mixed ASCII/multibyte documents where only
+     some tiles are non-ASCII stay correct (the skip may only fire on
+     tiles whose boundary inflow is clean), including a pure-ASCII tile
+     whose previous tile ends in lead/continuation bytes.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core import transcode as tc
+from repro.data import synthetic
+from repro.kernels import fused_transcode as ft
+from repro.kernels import onepass_transcode as op
+from repro.kernels import ragged_transcode as rt
+from repro.kernels import stages
+
+BLOCK = stages.BLOCK
+
+
+# ---------------------------------------------------------------------------
+# jaxpr helpers (shared shape with tests/test_fused_transcode.py)
+
+
+def _iter_eqns(jaxpr):
+    for eqn in jaxpr.eqns:
+        yield eqn
+        if eqn.primitive.name == "pallas_call":
+            continue
+        for v in eqn.params.values():
+            for sub in _sub_jaxprs(v):
+                yield from _iter_eqns(sub)
+
+
+def _sub_jaxprs(v):
+    if isinstance(v, jax.core.ClosedJaxpr):
+        yield v.jaxpr
+    elif isinstance(v, jax.core.Jaxpr):
+        yield v
+    elif isinstance(v, (tuple, list)):
+        for item in v:
+            yield from _sub_jaxprs(item)
+
+
+def _pallas_eqns(jaxpr):
+    return [e for e in _iter_eqns(jaxpr) if e.primitive.name == "pallas_call"]
+
+
+# ---------------------------------------------------------------------------
+# Claim 1: one launch.
+
+
+@pytest.mark.parametrize("src,dst,dt", [("utf8", "utf16", jnp.uint8),
+                                        ("utf16", "utf8", jnp.uint16),
+                                        ("utf32", "utf8", jnp.uint32),
+                                        ("latin1", "utf8", jnp.uint8)])
+def test_onepass_traces_to_one_pallas_call(src, dst, dt):
+    cap = 4096
+    for fastpath in (True, False):
+        jaxpr = jax.make_jaxpr(
+            lambda x, s=src, d=dst, a=fastpath: op.transcode_onepass(
+                x, cap - 5, src=s, dst=d, ascii_fastpath=a)
+        )(jnp.zeros((cap,), dt)).jaxpr
+        kernels = _pallas_eqns(jaxpr)
+        assert len(kernels) == 1, (src, dst, fastpath, len(kernels))
+
+
+def test_fused_still_traces_to_two_pallas_calls():
+    """The two-launch reference stays two-launch (the contrast)."""
+    cap = 4096
+    jaxpr = jax.make_jaxpr(
+        lambda x: ft.transcode_fused(x, cap - 5, src="utf8", dst="utf16",
+                                     ascii_fastpath=False)
+    )(jnp.zeros((cap,), jnp.uint8)).jaxpr
+    assert len(_pallas_eqns(jaxpr)) == 2
+
+
+def test_onepass_ragged_traces_to_one_pallas_call():
+    docs = [np.full(1500, 0x41, np.uint8), np.full(700, 0x41, np.uint8)]
+    pk = packing.pack_documents(docs, dtype=np.uint8)
+    jaxpr = jax.make_jaxpr(
+        lambda d, o, l: rt.transcode_ragged(d, o, l, src="utf8",
+                                            dst="utf16",
+                                            strategy="onepass")
+    )(jnp.asarray(pk.data), jnp.asarray(pk.offsets),
+      jnp.asarray(pk.lengths)).jaxpr
+    assert len(_pallas_eqns(jaxpr)) == 1
+
+
+def test_onepass_shares_the_generic_driver(monkeypatch):
+    """Tracing a one-pass cell must go through the stages package's
+    single ``onepass_tile`` body (itself composed of the same
+    decode_once/count_decoded/stage_decoded primitives count_tile and
+    write_stage wrap) — no per-pair kernel duplication."""
+    from repro.kernels.stages import driver as sdrv
+    calls = []
+    real = sdrv.onepass_tile
+
+    def spy(src, dst, *a, **k):
+        calls.append((src.name, dst.name))
+        return real(src, dst, *a, **k)
+
+    monkeypatch.setattr(sdrv, "onepass_tile", spy)
+    cap = 2048
+    for src, dst, dt in (("utf8", "utf16", jnp.uint8),
+                         ("utf32", "utf8", jnp.uint32)):
+        jax.make_jaxpr(
+            lambda x, s=src, d=dst: op.transcode_onepass(
+                x, cap - 5, src=s, dst=d, ascii_fastpath=False)
+        )(jnp.zeros((cap,), dt))
+        assert (src, dst) in calls, (src, dst, calls)
+
+
+# ---------------------------------------------------------------------------
+# Claim 2: bit identity with the fused reference.
+
+
+def _assert_identical(a, f, ctx):
+    assert int(a.count) == int(f.count), ctx
+    assert int(a.status) == int(f.status), ctx
+    assert np.array_equal(np.asarray(a.buffer), np.asarray(f.buffer)), ctx
+
+
+_GEN_HI = {1: 256, 2: 1 << 16, 4: 0x110000}
+
+
+@pytest.mark.parametrize("src,dst", tc.PAIRS)
+@pytest.mark.parametrize("errors", ["strict", "replace"])
+def test_onepass_bit_identical_to_fused_all_cells(src, dst, errors):
+    rng = np.random.default_rng(20260801)
+    dt = stages.get_codec(src).dtype
+    cap = 2 * BLOCK
+    for trial in range(4):
+        n = int(rng.integers(1, cap))
+        arr = rng.integers(0, _GEN_HI[stages.get_codec(src).itemsize],
+                           cap).astype(dt)
+        a = op.transcode_onepass(jnp.asarray(arr), n, src=src, dst=dst,
+                                 errors=errors)
+        f = ft.transcode_fused(jnp.asarray(arr), n, src=src, dst=dst,
+                               errors=errors)
+        _assert_identical(a, f, (src, dst, errors, trial))
+
+
+@pytest.mark.parametrize("errors", ["strict", "replace"])
+def test_onepass_boundary_straddling_characters(errors):
+    """Multi-byte characters and truncated leads at VMEM tile boundaries:
+    the SMEM carry's base must agree with the fused cumsum at every tile,
+    or outputs shear at exactly these positions."""
+    probes = [b"\xf0\x9f\x92\xa9", b"\xe4\xb8\xad", b"\xc3\xa9",
+              b"\xf0\x9f\x92", b"\xc3", b"\xed\xa0\x80"]
+    for probe in probes:
+        for pos in (BLOCK - 3, BLOCK - 2, BLOCK - 1, BLOCK, 2 * BLOCK - 1):
+            buf = np.full(3 * BLOCK, 0x41, np.uint8)
+            buf[pos: pos + len(probe)] = np.frombuffer(probe, np.uint8)
+            a = op.utf8_to_utf16_onepass(jnp.asarray(buf), len(buf),
+                                         errors=errors)
+            f = ft.utf8_to_utf16_fused(jnp.asarray(buf), len(buf),
+                                       errors=errors)
+            _assert_identical(a, f, (probe, pos, errors))
+
+
+@pytest.mark.parametrize("validate", [True, False])
+def test_onepass_validate_flag_and_scan(validate):
+    b = synthetic.utf8_array("arabic", 2000, seed=7)
+    buf = np.zeros(8192, np.uint8)
+    buf[: len(b)] = b
+    a = op.utf8_to_utf16_onepass(jnp.asarray(buf), len(b),
+                                 validate=validate)
+    f = ft.utf8_to_utf16_fused(jnp.asarray(buf), len(b), validate=validate)
+    _assert_identical(a, f, validate)
+    # scan: the one-pass strategy shares the fused counting kernel.
+    c1, s1 = tc.scan_utf8(jnp.asarray(buf), len(b), strategy="onepass")
+    c2, s2 = tc.scan_utf8(jnp.asarray(buf), len(b), strategy="fused")
+    assert int(c1) == int(c2) and int(s1) == int(s2)
+
+
+@pytest.mark.parametrize("errors", ["strict", "replace"])
+def test_onepass_ragged_bit_identical_to_fused(errors):
+    rng = np.random.default_rng(20260801 + 1)
+    docs = [synthetic.utf8_array(lang, n, seed=i) for i, (lang, n) in
+            enumerate([("latin", 1500), ("chinese", 900), ("emoji", 40),
+                       ("arabic", 2100), ("korean", 1024)])]
+    docs.insert(1, np.zeros(0, np.uint8))                  # empty
+    docs.insert(3, np.full(77, 0x41, np.uint8))            # all-ASCII
+    mutated = docs[4].copy()
+    mutated[rng.integers(0, len(mutated), 3)] = 0xFF       # invalid doc
+    docs[4] = mutated
+    pk = packing.pack_documents(docs, dtype=np.uint8)
+    a = rt.transcode_ragged(pk.data, pk.offsets, pk.lengths, src="utf8",
+                            dst="utf16", errors=errors, strategy="onepass")
+    f = rt.transcode_ragged(pk.data, pk.offsets, pk.lengths, src="utf8",
+                            dst="utf16", errors=errors, strategy="fused")
+    assert np.array_equal(np.asarray(a.buffer), np.asarray(f.buffer))
+    assert np.array_equal(np.asarray(a.offsets), np.asarray(f.offsets))
+    assert np.array_equal(np.asarray(a.counts), np.asarray(f.counts))
+    assert np.array_equal(np.asarray(a.statuses), np.asarray(f.statuses))
+
+
+def test_onepass_ragged_doc_pack_boundaries():
+    """Truncated leads ending EXACTLY at a packed document boundary whose
+    neighbour starts with the completing continuation bytes: the carry +
+    ownership resets must keep the documents independent."""
+    tile = packing.TILE
+    docs = []
+    for probe in (b"\xf0\x9f\x92", b"\xc3", b"\xe4\xb8"):
+        doc = np.full(tile, 0x41, np.uint8)
+        doc[tile - len(probe):] = np.frombuffer(probe, np.uint8)
+        docs.append(doc)
+        docs.append(np.frombuffer(b"\xa9\x80\x80 tail", np.uint8))
+    docs.append(np.zeros(0, np.uint8))
+    pk = packing.pack_documents(docs, dtype=np.uint8)
+    for errors in ("strict", "replace"):
+        res = rt.transcode_ragged(pk.data, pk.offsets, pk.lengths,
+                                  src="utf8", dst="utf16", errors=errors,
+                                  strategy="onepass")
+        for d, doc in enumerate(docs):
+            span = max(int(pk.offsets[d + 1] - pk.offsets[d]), 1)
+            buf = np.zeros(span, np.uint8)
+            buf[: len(doc)] = doc
+            single = ft.utf8_to_utf16_fused(jnp.asarray(buf), len(doc),
+                                            errors=errors)
+            assert int(res.counts[d]) == int(single.count), (d, errors)
+            assert int(res.statuses[d]) == int(single.status), (d, errors)
+            lo = int(res.offsets[d])
+            got = np.asarray(res.buffer)[lo: lo + int(res.counts[d])]
+            k = min(int(single.count), span)
+            assert np.array_equal(got[:k],
+                                  np.asarray(single.buffer)[:k]), (d, errors)
+
+
+def test_onepass_zero_length_and_n_valid_zero():
+    z = op.utf8_to_utf16_onepass(jnp.zeros((0,), jnp.uint8))
+    assert int(z.count) == 0 and int(z.status) == -1
+    b = synthetic.utf8_array("latin", 100, seed=0)
+    buf = np.zeros(2048, np.uint8)
+    buf[: len(b)] = b
+    r = op.utf8_to_utf16_onepass(jnp.asarray(buf), 0)
+    assert int(r.count) == 0 and int(r.status) == -1
+
+
+# ---------------------------------------------------------------------------
+# Claim 3: the per-tile ASCII skip.
+
+
+def test_onepass_single_nonascii_tile():
+    """A document where exactly ONE tile holds multibyte characters: the
+    whole-buffer cond fails, the skip fires on every other tile, and the
+    result is still bit-identical to fused and to the CPython oracle."""
+    n = 8 * BLOCK
+    buf = np.full(n, 0x61, np.uint8)
+    cjk = "中文データ処理".encode("utf-8")
+    pos = 3 * BLOCK + 100                    # interior of tile 3 only
+    buf[pos: pos + len(cjk)] = np.frombuffer(cjk, np.uint8)
+    a = op.utf8_to_utf16_onepass(jnp.asarray(buf), n)
+    f = ft.utf8_to_utf16_fused(jnp.asarray(buf), n)
+    _assert_identical(a, f, "single-nonascii-tile")
+    want = np.frombuffer(bytes(buf).decode("utf-8").encode("utf-16-le"),
+                         np.uint16)
+    assert int(a.count) == len(want)
+    assert np.array_equal(np.asarray(a.buffer)[: len(want)], want)
+
+
+@pytest.mark.parametrize("tail", [b"\xc3", b"\xf0\x9f\x92", b"\x80",
+                                  b"\xc3\xa9"])
+def test_onepass_ascii_tile_after_multibyte_inflow(tail):
+    """A pure-ASCII tile whose PREVIOUS tile ends in lead / continuation
+    bytes (the boundary-inflow cases that must NOT take the skip): the
+    conservative inflow guard sends the tile down the general path and
+    the result stays bit-identical to fused — including the error
+    located in the previous tile for the truncated leads."""
+    for errors in ("strict", "replace"):
+        buf = np.full(3 * BLOCK, 0x61, np.uint8)
+        buf[BLOCK - len(tail): BLOCK] = np.frombuffer(tail, np.uint8)
+        a = op.utf8_to_utf16_onepass(jnp.asarray(buf), len(buf),
+                                     errors=errors)
+        f = ft.utf8_to_utf16_fused(jnp.asarray(buf), len(buf),
+                                   errors=errors)
+        _assert_identical(a, f, (tail, errors))
+
+
+def test_onepass_ascii_skip_on_off_equivalence():
+    """ascii_fastpath=True (whole-buffer cond + per-tile skip) and False
+    (general path for every tile) must agree bit for bit on mixed and on
+    pure-ASCII buffers."""
+    mixed = np.full(4 * BLOCK, 0x61, np.uint8)
+    mixed[BLOCK + 5: BLOCK + 8] = np.frombuffer("中".encode("utf-8"),
+                                                np.uint8)
+    pure = np.full(4 * BLOCK, 0x41, np.uint8)
+    for buf in (mixed, pure):
+        for errors in ("strict", "replace"):
+            on = op.utf8_to_utf16_onepass(jnp.asarray(buf), len(buf) - 9,
+                                          errors=errors,
+                                          ascii_fastpath=True)
+            off = op.utf8_to_utf16_onepass(jnp.asarray(buf), len(buf) - 9,
+                                           errors=errors,
+                                           ascii_fastpath=False)
+            _assert_identical(on, off, errors)
+
+
+def test_onepass_ascii_skip_other_sources():
+    """The skip is format-generic: UTF-16/UTF-32/Latin-1 sources with
+    mostly-ASCII content and one contaminated tile."""
+    cases = [
+        ("utf16", "utf8", np.full(3 * BLOCK, 0x41, np.uint16)),
+        ("utf32", "utf8", np.full(3 * BLOCK, 0x41, np.uint32)),
+        ("latin1", "utf8", np.full(3 * BLOCK, 0x41, np.uint8)),
+    ]
+    cases[0][2][BLOCK + 3: BLOCK + 5] = [0xD83C, 0xDF89]   # surrogate pair
+    cases[1][2][BLOCK + 3] = 0x1F389                        # astral cp
+    cases[2][2][BLOCK + 3] = 0xE9                           # é high byte
+    for src, dst, arr in cases:
+        a = op.transcode_onepass(jnp.asarray(arr), len(arr), src=src,
+                                 dst=dst)
+        f = ft.transcode_fused(jnp.asarray(arr), len(arr), src=src,
+                               dst=dst)
+        _assert_identical(a, f, (src, dst))
+
+
+def test_onepass_utf32_garbage_does_not_ride_the_skip():
+    """int32-wrapped garbage (0xFFFFFFFF reads negative inside the
+    kernel) must not pass the per-tile ASCII predicate."""
+    arr = np.full(2 * BLOCK, 0x41, np.uint32)
+    arr[BLOCK + 1] = 0xFFFFFFFF
+    a = op.transcode_onepass(jnp.asarray(arr), len(arr), src="utf32",
+                             dst="utf8")
+    f = ft.transcode_fused(jnp.asarray(arr), len(arr), src="utf32",
+                           dst="utf8")
+    _assert_identical(a, f, "utf32-garbage")
+    assert int(a.status) == BLOCK + 1
+
+
+# ---------------------------------------------------------------------------
+# Dispatch plumbing.
+
+
+def test_default_strategy_is_onepass():
+    assert tc.DEFAULT_STRATEGY == "onepass"
+    assert "onepass" in tc.STRATEGIES
+    b = synthetic.utf8_array("arabic", 500, seed=3)
+    d = tc.transcode_utf8_to_utf16(jnp.asarray(b), len(b))
+    e = tc.transcode(jnp.asarray(b), "utf16", src_format="utf8",
+                     n_valid=len(b), strategy="onepass")
+    _assert_identical(d, e, "default-dispatch")
+
+
+def test_ragged_strategy_rejects_unknown():
+    docs = [np.full(10, 0x41, np.uint8)]
+    pk = packing.pack_documents(docs, dtype=np.uint8)
+    with pytest.raises(ValueError, match="strategy"):
+        rt.transcode_ragged(pk.data, pk.offsets, pk.lengths, src="utf8",
+                            dst="utf16", strategy="windowed")
+    with pytest.raises(ValueError, match="strategy"):
+        tc.ragged_transcode(pk.data, pk.offsets, pk.lengths,
+                            strategy="blockparallel")

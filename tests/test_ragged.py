@@ -221,20 +221,23 @@ def test_ragged_rejects_malformed_batch_args():
 
 
 def test_ragged_single_launch_per_pass_jaxpr():
-    """The whole batch must transcode in ONE count + ONE write launch
-    (the tentpole claim), vs one pair per document under vmap."""
+    """The whole batch must transcode in ONE launch under the default
+    (one-pass) strategy — and in ONE count + ONE write launch under the
+    two-pass fused reference — vs one pair per document under vmap."""
     import jax
     from tests.test_fused_transcode import _pallas_eqns
     pk = packing.pack_documents(_docs_mixed())
+    args = (jnp.asarray(pk.data), jnp.asarray(pk.offsets),
+            jnp.asarray(pk.lengths))
     jaxpr = jax.make_jaxpr(
-        lambda d, o, l: tc.ragged_utf8_to_utf16(d, o, l))(
-            jnp.asarray(pk.data), jnp.asarray(pk.offsets),
-            jnp.asarray(pk.lengths)).jaxpr
-    assert len(_pallas_eqns(jaxpr)) == 2      # count + write, batch-wide
+        lambda d, o, l: tc.ragged_utf8_to_utf16(d, o, l))(*args).jaxpr
+    assert len(_pallas_eqns(jaxpr)) == 1      # one-pass, batch-wide
+    jaxpr_fused = jax.make_jaxpr(
+        lambda d, o, l: tc.ragged_utf8_to_utf16(
+            d, o, l, strategy="fused"))(*args).jaxpr
+    assert len(_pallas_eqns(jaxpr_fused)) == 2  # count + write, batch-wide
     jaxpr_scan = jax.make_jaxpr(
-        lambda d, o, l: tc.ragged_scan_utf8(d, o, l))(
-            jnp.asarray(pk.data), jnp.asarray(pk.offsets),
-            jnp.asarray(pk.lengths)).jaxpr
+        lambda d, o, l: tc.ragged_scan_utf8(d, o, l))(*args).jaxpr
     assert len(_pallas_eqns(jaxpr_scan)) == 1  # count pass only
 
 
