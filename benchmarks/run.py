@@ -22,8 +22,9 @@ import sys
 # added ``table_ascii_runs`` and the ``onepass`` strategy column to the
 # existing sweeps (new strategies in a shared table are additive — the
 # gate only compares its gated strategy — but the new table needs the
-# version bump for the cross-version warn-and-skip rule).
-SCHEMA = 3
+# version bump for the cross-version warn-and-skip rule); v4 added
+# ``table_stream`` (chunked resumable streaming vs whole-buffer).
+SCHEMA = 4
 
 
 def _records(table: str, rows):
@@ -101,6 +102,19 @@ def main(argv=None) -> None:
     tb.print_rows("ASCII runs: mostly-ASCII with multibyte spans "
                   "(Gchars/s)", ta)
     report["records"] += _records("table_ascii_runs", ta)
+
+    # Streaming vs whole-buffer (rides in every mode incl. --smoke: the
+    # resumable path is an acceptance surface now — a regression in the
+    # per-chunk launch overhead shows up here first).  Capped at 32k
+    # chars even in full mode: the chunked run is launch-bound and
+    # scales linearly, while interpret-mode launches make the full-size
+    # sweep needlessly slow.
+    ts = tb.table_stream(n_chars=1 << 13 if (quick or smoke) else 1 << 15,
+                         chunk_sizes=(1024, 4096),
+                         reps=6 if (quick or smoke) else tb.REPS)
+    tb.print_rows("Streaming: chunked resumable vs whole-buffer "
+                  "UTF-8 -> UTF-16 (Gchars/s)", ts)
+    report["records"] += _records("table_stream", ts)
 
     if not smoke:
         tr = tb.table_replace(n_chars=n)

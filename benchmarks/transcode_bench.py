@@ -321,6 +321,42 @@ def table_matrix(n_chars=N_CHARS, lang="arabic", reps=REPS):
     return rows
 
 
+def table_stream(lang="arabic", n_chars=N_CHARS, chunk_sizes=(1024, 4096),
+                 reps=REPS):
+    """Beyond-paper: resumable streaming vs whole-buffer transcode.
+
+    The headline (utf8, utf16) cell fed chunk-by-chunk through
+    ``repro.core.stream`` (holdback + repeated single-pass launches,
+    DESIGN.md §10) against the whole-buffer strategies on the same
+    corpus — the cost of resumability is the per-chunk launch overhead,
+    so smaller chunks sit further below the whole-buffer line.
+    """
+    from repro.core import stream as cs
+    b = synthetic.utf8_array(lang, n_chars, 0)
+    nch = len(b.tobytes().decode("utf-8"))
+    x = jnp.asarray(b)
+    whole = {}
+    for strat in ("onepass", "fused", "blockparallel"):
+        f = jax.jit(lambda v, st=strat: tc.transcode(
+            v, "utf16", src_format="utf8", strategy=st))
+        jax.block_until_ready(f(x))  # warmup/compile
+        t_min = _time_min(lambda: jax.block_until_ready(f(x)), reps=reps)
+        whole[strat] = _gcps(nch, t_min)
+    rows = []
+    for size in chunk_sizes:
+        def run(size=size):
+            st = cs.stream_init("utf8", "utf16")
+            for i in range(0, len(b), size):
+                _, st = cs.transcode_stream_chunk(st, b[i: i + size])
+            cs.finalize(st)
+        run()                        # warmup/compile the chunk shapes
+        t_min = _time_min(run, reps=max(3, reps // 3))
+        row = {"lang": f"{lang}@{size}", "stream": _gcps(nch, t_min)}
+        row.update(whole)
+        rows.append(row)
+    return rows
+
+
 def table8_proxy(langs=("arabic", "latin", "chinese")):
     """Instructions-per-byte proxy (paper Table 8): jaxpr FLOPs/bytes per
     input byte for each strategy — the HLO-op analogue of instruction

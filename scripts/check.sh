@@ -13,6 +13,16 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# --chaos: run ONLY the robustness surface — the fault-injection chaos
+# suite plus every streaming test (module names test_faults/test_stream
+# and the test_stream_* incremental fuzz in test_differential) — with
+# the fixed fuzz seed CI pins.  Fast inner loop for robustness work.
+if [ "${1:-}" = "--chaos" ]; then
+    REPRO_FUZZ_SEED="${REPRO_FUZZ_SEED:-20260801}" \
+        python -m pytest tests -k "fault or stream" -q
+    exit $?
+fi
+
 # set -e would abort on a bare failing pytest too; capture and re-raise
 # the exact code explicitly so a future edit can't swallow it.
 pytest_rc=0
@@ -35,7 +45,8 @@ need = {"onepass", "fused", "blockparallel", "windowed(paper)"}
 missing = need - strategies
 assert not missing, f"bench JSON missing strategies: {missing}"
 tables = {r["table"] for r in report["records"]}
-assert {"table5", "table6", "table9"} <= tables, tables
+assert {"table5", "table6", "table9", "table_stream"} <= tables, tables
+assert "stream" in strategies, strategies
 print("bench smoke OK:", sorted(strategies), "across", sorted(tables))
 PY
 

@@ -80,12 +80,33 @@ def pack_documents(docs: Sequence, *, dtype=None, block: int = TILE,
     Returns a :class:`PackedDocs`; zero-filled slack between documents.
     """
     arrs = []
-    for d in docs:
+    for k, d in enumerate(docs):
         if isinstance(d, (bytes, bytearray, memoryview)):
             d = np.frombuffer(bytes(d), np.uint8)
-        arrs.append(np.asarray(d).reshape(-1))
+        a = np.asarray(d)
+        if a.ndim != 1:
+            raise ValueError(
+                f"pack_documents: document {k} must be 1-D, got shape "
+                f"{a.shape} (pack one row per document, not a batch)")
+        if not np.issubdtype(a.dtype, np.integer):
+            raise TypeError(
+                f"pack_documents: document {k} must have an integer "
+                f"dtype, got {a.dtype}")
+        arrs.append(a)
     if dtype is None:
         dtype = arrs[0].dtype if arrs else np.uint8
+    dtype = np.dtype(dtype)
+    if not np.issubdtype(dtype, np.integer):
+        raise TypeError(f"pack_documents: dtype must be an integer "
+                        f"dtype, got {dtype}")
+    info = np.iinfo(dtype)
+    for k, a in enumerate(arrs):
+        if a.dtype != dtype and a.size and (
+                int(a.min()) < info.min or int(a.max()) > info.max):
+            raise ValueError(
+                f"pack_documents: document {k} has values outside "
+                f"{dtype.name} range (min {int(a.min())}, max "
+                f"{int(a.max())}) — a silent cast would corrupt it")
     if pad_to_docs is not None:
         if pad_to_docs < len(arrs):
             raise ValueError(

@@ -1,0 +1,275 @@
+"""Resumable streaming transcode: chunked input, whole-buffer results.
+
+The paper's motivating deployment is data arriving from disks and
+networks — unbounded *streams*, not whole buffers.  This module threads
+the single-pass kernel (``repro.kernels.onepass_transcode``, DESIGN.md
+§9) across repeated launches with a tiny host-side carry, the
+:class:`StreamState`, so that::
+
+    st = stream_init("utf8", "utf16")
+    for chunk in chunks:
+        res, st = transcode_stream_chunk(st, chunk)
+        consume(res.buffer[:res.count])
+    tail, st = finalize(st)
+
+is **bit-exact** against one whole-buffer transcode of
+``concat(chunks)`` — same concatenated output buffer, same total count,
+same final status — at EVERY chunk split point, including splits
+mid-multibyte-sequence and mid-surrogate-pair.  (For a ``strict``
+stream that contains errors, "bit-exact" covers the count, the sticky
+status and the output up to the first error; the speculative content
+AFTER an error is launch-geometry-defined — a dangling invalid lead
+decodes against zero padding in a chunk launch but against its real
+neighbors in the whole buffer — exactly as it is strategy-defined, not
+CPython-defined, for the whole-buffer kernels.)
+
+Chunk-boundary holdback (the correctness core, DESIGN.md §10): a chunk
+may end inside a character.  Up to ``3`` trailing source units are held
+back and prepended to the next chunk:
+
+  * UTF-8 — walk back over at most 3 trailing bytes; if a lead byte
+    (``>= 0xC0``) sits ``k`` bytes from the end and its sequence length
+    exceeds ``k``, hold those ``k`` bytes.  Invalid leads (0xC0/0xC1,
+    0xF5..0xFF) are held too: their *maximal subpart* (and hence their
+    speculative decode) depends on the following bytes, which live in
+    the next chunk.  A trailing continuation run with no such lead is
+    never held — UTF-8 decoding is strictly forward-claiming, so bytes
+    after a chunk boundary can never change the meaning of bytes before
+    it unless a held lead claims across.
+  * UTF-16 — hold a single trailing high surrogate (0xD800..0xDBFF):
+    the only forward-claiming unit.
+  * UTF-32 / Latin-1 — fixed-width, nothing to hold.
+
+Because every effective sub-buffer therefore starts at a unit boundary
+(never mid-claim), the kernel's speculative decode, maximal-subpart
+analysis (CPython ``errors="replace"`` semantics) and counts all compose
+chunk-wise, and per-chunk first-error offsets map to global stream
+offsets by adding the chunk's base — the sticky first-error-wins fold
+across chunks reproduces the whole-buffer status exactly.
+
+Failure semantics: the error status is **sticky** (first error wins,
+exactly like the kernel's SMEM carry across tiles); ``finalize`` flushes
+a dangling incomplete tail through the same kernel, where it faults
+(strict) or substitutes U+FFFD (replace) at its true global offset —
+identical to what the whole-buffer path does with a truncated tail.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import numpy as np
+
+from repro.core.result import STATUS_OK, TranscodeResult
+from repro.testing import faults
+
+# One VMEM tile of the kernels: effective sub-buffers are padded to a
+# tile multiple so every chunk launch uses the same tile geometry (and
+# chunk lengths below one tile share ONE compiled shape).
+TILE = 1024
+
+_DTYPES = {"utf8": np.uint8, "utf16": np.uint16, "utf32": np.uint32,
+           "latin1": np.uint8}
+
+# Maximum trailing units a chunk can hold back (a UTF-8 4-byte lead at
+# distance 3 from the end; mirrors stages.driver._MAX_LOOKBACK).
+MAX_HOLDBACK = 3
+
+
+class StreamState(NamedTuple):
+    """Host-side carry threaded across chunk launches.
+
+    ==============  =======================================================
+    field           meaning
+    ==============  =======================================================
+    ``src``/``dst`` canonical format names of the stream's matrix cell
+    ``errors``      ``"strict"`` | ``"replace"`` (fixed at init)
+    ``validate``    run fused validation (fixed at init)
+    ``consumed``    global index of the first *pending* source unit — the
+                    number of source units fully processed so far
+    ``out_count``   total destination units emitted so far
+    ``status``      sticky global status: ``STATUS_OK`` until the first
+                    error/substitution, then its global input offset
+    ``pending``     up to :data:`MAX_HOLDBACK` trailing source units held
+                    back from the previous chunk (codec dtype)
+    ``finished``    ``finalize`` ran; further chunks are an error
+    ==============  =======================================================
+    """
+
+    src: str
+    dst: str
+    errors: str
+    validate: bool
+    consumed: int
+    out_count: int
+    status: int
+    pending: np.ndarray
+    finished: bool = False
+
+
+def stream_init(src_format: str, dst_format: str, *,
+                errors: str = "strict",
+                validate: bool = True) -> StreamState:
+    """Fresh :class:`StreamState` for one (src, dst) matrix cell."""
+    # Late import: core.stream is host-side glue; the format registry
+    # lives in core.transcode (which lazily imports the kernels).
+    from repro.core import transcode as tc
+    src = tc.normalize_format(src_format)
+    dst = tc.normalize_format(dst_format)
+    tc._check_pair(src, dst)
+    from repro.core.result import check_errors_policy
+    check_errors_policy(errors)
+    return StreamState(src, dst, errors, bool(validate), 0, 0,
+                       int(STATUS_OK), np.zeros(0, _DTYPES[src]), False)
+
+
+def _as_units(chunk, src: str) -> np.ndarray:
+    """Normalize one chunk to a 1-D codec-dtype array (with the same
+    wrong-input diagnostics as ``core.transcode.transcode``)."""
+    dt = _DTYPES[src]
+    if isinstance(chunk, (bytes, bytearray, memoryview)):
+        if dt != np.uint8:
+            raise TypeError(
+                f"stream chunks for src={src!r} must be unit arrays "
+                f"(dtype {np.dtype(dt).name}), not raw bytes — split the "
+                f"wire bytes into units first")
+        return np.frombuffer(bytes(chunk), np.uint8)
+    a = np.asarray(chunk)
+    if a.ndim != 1:
+        raise ValueError(
+            f"stream chunk must be 1-D, got shape {a.shape}")
+    if not np.issubdtype(a.dtype, np.integer):
+        raise TypeError(
+            f"stream chunk must have an integer dtype, got {a.dtype}")
+    if a.dtype != dt:
+        if a.size and (int(a.min()) < 0
+                       or int(a.max()) > int(np.iinfo(dt).max)):
+            raise ValueError(
+                f"stream chunk values out of range for {src!r} "
+                f"(dtype {np.dtype(dt).name})")
+        a = a.astype(dt)
+    return a
+
+
+def _holdback(src: str, buf: np.ndarray) -> int:
+    """Trailing units of ``buf`` that may still be claimed forward into
+    the next chunk (see module docstring for the per-format rule)."""
+    n = buf.shape[0]
+    if src == "utf8":
+        for k in range(1, min(MAX_HOLDBACK, n) + 1):
+            b = int(buf[n - k])
+            if b < 0x80:
+                return 0                       # ASCII: complete unit
+            if b >= 0xC0:                      # lead at distance k
+                need = 2 if b < 0xE0 else (3 if b < 0xF0 else 4)
+                return k if need > k else 0
+            # else continuation byte: keep walking back
+        return 0
+    if src == "utf16":
+        if n and 0xD800 <= int(buf[n - 1]) <= 0xDBFF:
+            return 1
+        return 0
+    return 0                                   # utf32 / latin1: fixed width
+
+
+def _launch(state: StreamState, eff: np.ndarray) -> TranscodeResult:
+    """One single-pass kernel launch over an effective sub-buffer
+    (padded to a tile multiple so sub-tile chunks share one compile)."""
+    from repro.core import transcode as tc
+    from repro.kernels import onepass_transcode as op
+    n = eff.shape[0]
+    pad = -(-n // TILE) * TILE
+    x = np.zeros(pad, eff.dtype)
+    x[:n] = eff
+    res = op.transcode_onepass(x, n, src=state.src, dst=state.dst,
+                               validate=state.validate,
+                               errors=state.errors)
+    cap = tc.CAP_FACTOR[(state.src, state.dst)] * pad
+    count = int(res.count)
+    buf = np.asarray(res.buffer)[: min(count, cap)]
+    return TranscodeResult(buf, np.int32(count), np.int32(res.status))
+
+
+def transcode_stream_chunk(
+        state: StreamState, chunk) -> Tuple[TranscodeResult, StreamState]:
+    """Feed one chunk; returns ``(result, new_state)``.
+
+    ``result.buffer[:result.count]`` is this chunk's emission (the next
+    slice of the whole-buffer output); ``result.status`` is the stream's
+    *sticky global* status after this chunk, so the latest result's
+    status always equals what the whole-buffer transcode of everything
+    fed so far (minus the held-back tail) would report.  The input
+    chunk's trailing incomplete unit (up to :data:`MAX_HOLDBACK` source
+    units) is held back into ``new_state.pending`` and processed with
+    the next chunk — or by :func:`finalize`.
+    """
+    if state.finished:
+        raise ValueError("transcode_stream_chunk: stream already finalized")
+    chunk = faults.fire(faults.STREAM_CHUNK, _as_units(chunk, state.src))
+    buf = np.concatenate([state.pending, chunk]) \
+        if state.pending.size else chunk
+    h = _holdback(state.src, buf)
+    eff, pend = buf[: buf.shape[0] - h], buf[buf.shape[0] - h:]
+    if eff.shape[0] == 0:
+        empty = TranscodeResult(np.zeros(0, _DTYPES[state.dst]),
+                                np.int32(0), np.int32(state.status))
+        return empty, state._replace(pending=np.ascontiguousarray(pend))
+    res = _launch(state, eff)
+    rel = int(res.status)
+    event = state.consumed + rel if rel >= 0 else STATUS_OK
+    sticky = state.status if state.status >= 0 else event
+    new = state._replace(
+        consumed=state.consumed + int(eff.shape[0]),
+        out_count=state.out_count + int(res.count),
+        status=int(sticky),
+        pending=np.ascontiguousarray(pend))
+    return TranscodeResult(res.buffer, res.count, np.int32(sticky)), new
+
+
+def finalize(state: StreamState) -> Tuple[TranscodeResult, StreamState]:
+    """Flush the held-back tail and close the stream.
+
+    A dangling incomplete sequence (e.g. a stream that *ends* mid
+    multibyte character) is transcoded exactly as the whole-buffer path
+    transcodes a truncated tail: under ``errors="strict"`` the sticky
+    status picks up its global offset; under ``errors="replace"`` it
+    emits U+FFFD.  Returns ``(tail_result, finished_state)``; calling
+    again on a finished stream raises.
+    """
+    if state.finished:
+        raise ValueError("finalize: stream already finalized")
+    if state.pending.size == 0:
+        res = TranscodeResult(np.zeros(0, _DTYPES[state.dst]),
+                              np.int32(0), np.int32(state.status))
+        return res, state._replace(finished=True)
+    res = _launch(state, state.pending)
+    rel = int(res.status)
+    event = state.consumed + rel if rel >= 0 else STATUS_OK
+    sticky = state.status if state.status >= 0 else event
+    new = state._replace(
+        consumed=state.consumed + int(state.pending.shape[0]),
+        out_count=state.out_count + int(res.count),
+        status=int(sticky),
+        pending=np.zeros(0, _DTYPES[state.src]),
+        finished=True)
+    return TranscodeResult(res.buffer, res.count, np.int32(sticky)), new
+
+
+def transcode_stream(chunks, *, src_format: str, dst_format: str,
+                     errors: str = "strict", validate: bool = True,
+                     state: Optional[StreamState] = None
+                     ) -> Tuple[TranscodeResult, StreamState]:
+    """Convenience driver: feed every chunk, finalize, and return the
+    combined ``TranscodeResult`` (concatenated buffer, total count,
+    final sticky status) plus the finished state."""
+    st = stream_init(src_format, dst_format, errors=errors,
+                     validate=validate) if state is None else state
+    parts = []
+    for c in chunks:
+        res, st = transcode_stream_chunk(st, c)
+        parts.append(np.asarray(res.buffer)[: int(res.count)])
+    tail, st = finalize(st)
+    parts.append(np.asarray(tail.buffer)[: int(tail.count)])
+    out = np.concatenate(parts) if parts else np.zeros(0, _DTYPES[st.dst])
+    return TranscodeResult(out, np.int32(st.out_count),
+                           np.int32(st.status)), st

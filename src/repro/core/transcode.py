@@ -57,6 +57,8 @@ ASCII-pure chunks (the paper's Latin benchmark) reduce to a widening copy.
 
 from __future__ import annotations
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
@@ -74,6 +76,24 @@ def _n(x, n_valid):
 
 
 _check_errors = R.check_errors_policy
+
+
+def _check_input(x, what: str = "transcode"):
+    """Reject wrong-dtype / wrong-rank inputs with a clear diagnosis
+    instead of producing garbage downstream (lists are converted; jax
+    arrays and tracers pass through untouched — a vmapped row is 1-D).
+    """
+    if not hasattr(x, "dtype"):
+        x = np.asarray(x)
+    if not jnp.issubdtype(x.dtype, jnp.integer):
+        raise TypeError(
+            f"{what}: input must have an integer dtype (narrow wire "
+            f"dtype or int32), got {x.dtype}")
+    if x.ndim != 1:
+        raise ValueError(
+            f"{what}: input must be 1-D (one document; use the ragged/"
+            f"batched entry points for batches), got shape {x.shape}")
+    return x
 
 
 # Min-reduce of a per-position error map over the live region; the one
@@ -296,6 +316,7 @@ def scan(x, dst_format, *, src_format: str = "utf8", n_valid=None,
     ``dst_format`` units a transcode would produce and the simdutf-style
     verdict (DESIGN.md §4) — the ingestion-boundary query.
     """
+    x = _check_input(x, "scan")
     src = normalize_format(src_format)
     dst = normalize_format(dst_format)
     _check_pair(src, dst)
@@ -524,6 +545,7 @@ def transcode(src, dst_format, *, src_format: str = "utf8", n_valid=None,
     docstring for strategy / ``errors=`` semantics.
     """
     _check_errors(errors)
+    src = _check_input(src)
     s = normalize_format(src_format)
     d = normalize_format(dst_format)
     _check_pair(s, d)
@@ -642,3 +664,14 @@ def ragged_scan_utf16(data, offsets, lengths):
     """Per-document single-scan UTF-16 validation + UTF-8 capacity."""
     return ragged_scan(data, offsets, lengths, src_format="utf16",
                        dst_format="utf8")
+
+
+# ---------------------------------------------------------------------------
+# Resumable streaming transcode (chunked input, whole-buffer-bit-exact
+# results; DESIGN.md §10).  The implementation lives in
+# ``repro.core.stream``; re-exported here so the streaming API rides the
+# same import as the rest of the matrix.
+
+from repro.core.stream import (  # noqa: E402,F401  (re-export)
+    StreamState, finalize as stream_finalize, stream_init,
+    transcode_stream, transcode_stream_chunk)

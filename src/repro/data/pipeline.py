@@ -33,6 +33,7 @@ import jax.numpy as jnp
 from repro.core import packing
 from repro.core import transcode as tc
 from repro.data import synthetic
+from repro.testing import faults
 from repro.data.tokenizer import BOS_ID, EOS_ID, PAD_ID, ByteTokenizer
 
 
@@ -145,6 +146,7 @@ def batch_transcode(docs, lengths, *, in_encoding: str = "utf8",
     (one-pass) transcoder over the document axis (a per-document
     strategy name selects that transcoder under vmap instead).
     """
+    faults.fire(faults.PIPELINE_BATCH)   # chaos-suite hook (no-op in prod)
     src = tc.normalize_format(in_encoding)
     dst = tc.normalize_format(out_encoding)
     if (src, dst) not in tc.CAP_FACTOR:

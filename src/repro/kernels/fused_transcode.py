@@ -63,6 +63,7 @@ from repro.core import result as R
 from repro.kernels import runtime
 from repro.kernels import stages
 from repro.kernels.stages import driver as sdrv
+from repro.testing import faults
 
 ROWS = sdrv.ROWS
 LANES = sdrv.LANES
@@ -269,6 +270,7 @@ def transcode_fused(x, n_valid=None, *, src: str, dst: str,
     counting scan: the input is never read by a standalone pass.
     """
     _check_errors(errors)
+    faults.fire(faults.KERNEL_FUSED)     # chaos-suite hook (no-op in prod)
     codec_s, _codec_d, _f = stages.get_pair(src, dst)
     x = jnp.asarray(x)
     if x.dtype != codec_s.dtype:
@@ -302,6 +304,7 @@ def scan_fused(x, n_valid=None, *, src: str, dst: str, interpret=None):
     ingestion-boundary API (serve ingress): validation with error
     location at the cost of a capacity query.
     """
+    faults.fire(faults.KERNEL_SCAN)      # chaos-suite hook (no-op in prod)
     codec_s, _codec_d, _f = stages.get_pair(src, dst)
     x = jnp.asarray(x)
     if x.dtype != codec_s.dtype:

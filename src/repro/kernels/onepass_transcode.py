@@ -63,6 +63,7 @@ from repro.kernels import fused_transcode as ft
 from repro.kernels import runtime
 from repro.kernels import stages
 from repro.kernels.stages import driver as sdrv
+from repro.testing import faults
 
 ROWS = sdrv.ROWS
 LANES = sdrv.LANES
@@ -187,6 +188,7 @@ def transcode_onepass(x, n_valid=None, *, src: str, dst: str,
     whole-buffer cond and the per-tile ASCII skip.
     """
     _check_errors(errors)
+    faults.fire(faults.KERNEL_ONEPASS)   # chaos-suite hook (no-op in prod)
     codec_s, _codec_d, _f = stages.get_pair(src, dst)
     x = jnp.asarray(x)
     if x.dtype != codec_s.dtype:

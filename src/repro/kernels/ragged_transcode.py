@@ -78,6 +78,7 @@ from repro.kernels import fused_transcode as ft
 from repro.kernels import runtime
 from repro.kernels import stages
 from repro.kernels.stages import driver as sdrv
+from repro.testing import faults
 
 ROWS = ft.ROWS
 LANES = ft.LANES
@@ -381,6 +382,7 @@ def transcode_ragged(data, offsets, lengths, *, src: str, dst: str,
     count/cumsum/write reference.  Both are bit-identical per document.
     """
     _check_errors(errors)
+    faults.fire(faults.KERNEL_RAGGED)    # chaos-suite hook (no-op in prod)
     codec_s, _codec_d, _f = stages.get_pair(src, dst)
     data, offsets, lengths = _as_packed(data, offsets, lengths,
                                         codec_s.dtype)
@@ -406,6 +408,7 @@ def scan_ragged(data, offsets, lengths, *, src: str, dst: str,
     ingestion-boundary query (serve ingress validates a whole wave of
     prompts with one launch).
     """
+    faults.fire(faults.KERNEL_RAGGED_SCAN)  # chaos-suite hook (no-op)
     codec_s, _codec_d, _f = stages.get_pair(src, dst)
     data, offsets, lengths = _as_packed(data, offsets, lengths,
                                         codec_s.dtype)

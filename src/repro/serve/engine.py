@@ -38,7 +38,9 @@ extension — admission is already per-slot.)
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import time
 from typing import List, Optional
 
 import numpy as np
@@ -51,6 +53,17 @@ from repro.core import transcode as tc
 from repro.data.tokenizer import BOS_ID, EOS_ID, N_SPECIAL, ByteTokenizer
 from repro.serve import kvcache, serve_step
 
+# Typed result codes (``Result.code``; failure-mode table in DESIGN.md
+# §10).  ``ok`` stays the boolean verdict; the code names WHY a request
+# did not serve — load-shedding and deadline misses are not the same
+# failure as an invalid prompt, and callers (and the chaos suite) need
+# to tell them apart without parsing message strings.
+OK = "ok"
+REJECTED_INVALID = "rejected_invalid"       # bad prompt/field (permanent)
+REJECTED_OVERLOAD = "rejected_overload"     # admission queue full (shed)
+REJECTED_DEADLINE = "rejected_deadline"     # per-request deadline expired
+FAILED_TRANSCODE = "failed_transcode"       # device path down, no fallback
+
 
 @dataclasses.dataclass
 class Request:
@@ -60,6 +73,11 @@ class Request:
     out_encoding: str = "utf-8"
     in_encoding: str = "utf-8"
     errors: str = "strict"          # "strict" | "replace"
+    # Per-request deadline, in seconds from ``serve()`` admission (None =
+    # no deadline).  A request whose deadline expires before its decode
+    # wave starts is rejected with ``REJECTED_DEADLINE`` instead of
+    # holding a slot — late answers are dropped work, not service.
+    deadline_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -75,21 +93,60 @@ class Result:
     # Under errors="replace": the prompt actually served, as UTF-8, with
     # U+FFFD substituted per maximal subpart (empty otherwise).
     sanitized_prompt: bytes = b""
+    # Typed outcome (module constants above): OK for served requests,
+    # else which failure mode rejected the request.
+    code: str = OK
 
 
 class Engine:
     def __init__(self, model, cfg, family: str, params, max_batch: int = 8,
                  max_prompt: int = 512, max_new: int = 128,
-                 temperature: float = 0.0):
+                 temperature: float = 0.0, queue_limit: Optional[int] = None,
+                 max_retries: int = 2, backoff_base_s: float = 0.05,
+                 clock=time.monotonic, sleep=time.sleep):
         self.model, self.cfg, self.family = model, cfg, family
         self.params = params
         self.max_batch, self.max_prompt, self.max_new = (
             max_batch, max_prompt, max_new)
+        # Admission bound: one serve() call accepts at most this many
+        # requests; the tail is shed with REJECTED_OVERLOAD instead of
+        # growing an unbounded work list (DESIGN.md §10).
+        self.queue_limit = (4 * max_batch if queue_limit is None
+                            else queue_limit)
+        # Transient-failure policy: a failed transcode launch is retried
+        # ``max_retries`` times with exponential backoff (base doubles
+        # per attempt) before the group degrades to the host fallback.
+        self.max_retries = max_retries
+        self.backoff_base_s = backoff_base_s
+        # Injectable for deterministic chaos tests — production uses the
+        # monotonic clock and real sleep.
+        self._clock, self._sleep = clock, sleep
+        # Observability: how often the robustness paths actually fired.
+        #   retries   — transient launch failures retried
+        #   fallback  — prompts served via the host ``codecs`` path
+        #   shed      — requests rejected at admission (overload)
+        #   deadline  — requests expired before their decode wave
+        self.counters = collections.Counter()
         self.tok = ByteTokenizer()
         self._prefill = jax.jit(serve_step.make_prefill(model, family))
         self._decode = jax.jit(serve_step.make_decode(model, family,
                                                       temperature))
         self._ctx = max_prompt + max_new
+
+    def _launch_with_retry(self, fn):
+        """Run a transcode-launch thunk, retrying transient failures with
+        exponential backoff; the final failure propagates to the caller
+        (which degrades to the host fallback)."""
+        delay = self.backoff_base_s
+        for attempt in range(self.max_retries + 1):
+            try:
+                return fn()
+            except Exception:
+                if attempt == self.max_retries:
+                    raise
+                self.counters["retries"] += 1
+                self._sleep(delay)
+                delay *= 2
 
     # ------------------------------------------------------------------
     # Packed multi-request ingress: per-request field checks stay on the
@@ -136,7 +193,8 @@ class Engine:
                 # Reject per-request rather than raising mid-batch: one
                 # bad field must not take down the rest of the wave.
                 results[i] = Result(
-                    ok=False, error=f"unknown errors policy: {req.errors}")
+                    ok=False, code=REJECTED_INVALID,
+                    error=f"unknown errors policy: {req.errors}")
                 continue
             raw = np.frombuffer(req.prompt_bytes, np.uint8)
             if req.in_encoding in self._UNIT_INGRESS:
@@ -144,7 +202,7 @@ class Engine:
                     self._UNIT_INGRESS[req.in_encoding]
                 if len(raw) % width:
                     results[i] = Result(
-                        ok=False,
+                        ok=False, code=REJECTED_INVALID,
                         error=(f"odd {req.in_encoding} prompt byte length"
                                if width == 2 else
                                f"{req.in_encoding} prompt byte length not "
@@ -153,19 +211,21 @@ class Engine:
                 units = self._wire_units(raw, width, np_dtype)
                 if len(units) == 0 or len(units) > self.max_prompt:
                     results[i] = Result(
-                        ok=False, error="empty or oversize prompt")
+                        ok=False, code=REJECTED_INVALID,
+                        error="empty or oversize prompt")
                     continue
                 unit_members.setdefault((req.in_encoding, req.errors),
                                         []).append((i, req, units))
             elif req.in_encoding == "utf-8":
                 if len(raw) == 0 or len(raw) > self.max_prompt - 1:
                     results[i] = Result(
-                        ok=False, error="empty or oversize prompt")
+                        ok=False, code=REJECTED_INVALID,
+                        error="empty or oversize prompt")
                     continue
                 utf8_members.append((i, req, raw))
             else:
                 results[i] = Result(
-                    ok=False,
+                    ok=False, code=REJECTED_INVALID,
                     error=f"unknown in_encoding: {req.in_encoding}")
         admitted: dict = {}
         self._ingress_utf8_group(utf8_members, results, admitted)
@@ -181,11 +241,21 @@ class Engine:
         instead of one kernel dispatch per request."""
         for g0 in range(0, len(members), self.max_batch):
             chunk = members[g0: g0 + self.max_batch]
-            pk = packing.pack_documents(
-                [raw for _, _, raw in chunk], dtype=np.uint8,
-                doc_tiles=self._doc_tiles, pad_to_docs=self.max_batch)
-            _counts, statuses = tc.ragged_scan_utf8(
-                pk.data, pk.offsets, pk.lengths)
+
+            def _scan(chunk=chunk):
+                pk = packing.pack_documents(
+                    [raw for _, _, raw in chunk], dtype=np.uint8,
+                    doc_tiles=self._doc_tiles, pad_to_docs=self.max_batch)
+                return tc.ragged_scan_utf8(pk.data, pk.offsets, pk.lengths)
+
+            try:
+                _counts, statuses = self._launch_with_retry(_scan)
+            except Exception:
+                # Device path down for this group after retries: degrade
+                # per-document to the host ``codecs`` path so clean
+                # prompts still serve and poison ones get typed errors.
+                self._host_fallback_utf8(chunk, results, admitted)
+                continue
             statuses = np.asarray(statuses)
             for k, (i, req, raw) in enumerate(chunk):
                 off = int(statuses[k])
@@ -195,7 +265,7 @@ class Engine:
                     admitted[i] = (i, req, ids, -1, b"")
                 elif req.errors != "replace":
                     results[i] = Result(
-                        ok=False,
+                        ok=False, code=REJECTED_INVALID,
                         error=f"invalid UTF-8 prompt at byte {off}",
                         error_offset=off)
                 else:
@@ -205,6 +275,42 @@ class Engine:
                     else:
                         admitted[i] = entry
 
+    def _host_fallback_utf8(self, chunk, results, admitted):
+        """Graceful degradation: validate/sanitize each UTF-8 prompt with
+        CPython's codec machinery (bit-compatible semantics — the device
+        kernels are pinned against it by the differential fuzz).  Slow
+        path, but one flaky launch must not fail a whole packed wave."""
+        for i, req, raw in chunk:
+            self.counters["fallback"] += 1
+            data = raw.tobytes()
+            try:
+                data.decode("utf-8")
+                off = -1
+            except UnicodeDecodeError as e:
+                off = e.start
+            if off < 0:
+                ids = np.concatenate(
+                    [[BOS_ID], raw.astype(np.int32) + N_SPECIAL])
+                admitted[i] = (i, req, ids, -1, b"")
+            elif req.errors != "replace":
+                results[i] = Result(
+                    ok=False, code=REJECTED_INVALID,
+                    error=f"invalid UTF-8 prompt at byte {off}",
+                    error_offset=off)
+            else:
+                clean = np.frombuffer(
+                    data.decode("utf-8", "replace").encode("utf-8"),
+                    np.uint8)
+                if len(clean) == 0 or len(clean) > self.max_prompt - 1:
+                    results[i] = Result(
+                        ok=False, code=REJECTED_INVALID,
+                        error="empty or oversize prompt after replacement",
+                        error_offset=off)
+                else:
+                    ids = np.concatenate(
+                        [[BOS_ID], clean.astype(np.int32) + N_SPECIAL])
+                    admitted[i] = (i, req, ids, off, bytes(clean))
+
     def _sanitize_utf8(self, i, req, raw, off):
         """Dirty prompt under replace: sanitize via a single-pass
         replace-transcode to UTF-16 (the default strategy), then encode
@@ -212,15 +318,26 @@ class Engine:
         prompts are the rare case, so this stays per-request)."""
         buf = np.zeros(self.max_prompt, np.uint8)
         buf[: len(raw)] = raw
-        u16, cu, _status = tc.transcode_utf8_to_utf16(
-            jnp.asarray(buf), len(raw), errors="replace")
-        # The units are valid by construction — skip the re-validation
-        # scan on the way back to bytes.
-        b8, cb, _ = tc.transcode_utf16_to_utf8(u16, cu, validate=False)
-        clean = np.asarray(b8)[: int(cb)].astype(np.uint8)
+
+        def _device():
+            u16, cu, _status = tc.transcode_utf8_to_utf16(
+                jnp.asarray(buf), len(raw), errors="replace")
+            # The units are valid by construction — skip the
+            # re-validation scan on the way back to bytes.
+            b8, cb, _ = tc.transcode_utf16_to_utf8(u16, cu, validate=False)
+            return np.asarray(b8)[: int(cb)].astype(np.uint8)
+
+        try:
+            clean = self._launch_with_retry(_device)
+        except Exception:
+            self.counters["fallback"] += 1
+            clean = np.frombuffer(
+                raw.tobytes().decode("utf-8", "replace").encode("utf-8"),
+                np.uint8)
         if len(clean) == 0 or len(clean) > self.max_prompt - 1:
             return Result(
-                ok=False, error="empty or oversize prompt after replacement",
+                ok=False, code=REJECTED_INVALID,
+                error="empty or oversize prompt after replacement",
                 error_offset=off)
         ids = np.concatenate([[BOS_ID], clean.astype(np.int32) + N_SPECIAL])
         return (i, req, ids, off, bytes(clean))
@@ -234,15 +351,24 @@ class Engine:
         UTF-8 the byte tokenizer consumes, off one decode of the packed
         wave.  Covers utf-16-le, utf-32-le and latin-1 ingress (latin-1
         can never reject — every byte is a code point)."""
-        _width, np_dtype, src, noun = self._UNIT_INGRESS[encoding]
+        width, np_dtype, src, noun = self._UNIT_INGRESS[encoding]
         for g0 in range(0, len(members), self.max_batch):
             chunk = members[g0: g0 + self.max_batch]
-            pk = packing.pack_documents(
-                [u for _, _, u in chunk], dtype=np_dtype,
-                doc_tiles=self._doc_tiles, pad_to_docs=self.max_batch)
-            res = tc.ragged_transcode(pk.data, pk.offsets, pk.lengths,
-                                      src_format=src, dst_format="utf8",
-                                      errors=policy)
+
+            def _launch(chunk=chunk):
+                pk = packing.pack_documents(
+                    [u for _, _, u in chunk], dtype=np_dtype,
+                    doc_tiles=self._doc_tiles, pad_to_docs=self.max_batch)
+                return tc.ragged_transcode(
+                    pk.data, pk.offsets, pk.lengths, src_format=src,
+                    dst_format="utf8", errors=policy)
+
+            try:
+                res = self._launch_with_retry(_launch)
+            except Exception:
+                self._host_fallback_unit(encoding, policy, chunk, results,
+                                         admitted)
+                continue
             outs = packing.unpack_results(res.buffer, res.offsets,
                                           res.counts)
             statuses = np.asarray(res.statuses)
@@ -250,20 +376,55 @@ class Engine:
                 off = int(statuses[k])
                 if policy != "replace" and off >= 0:
                     results[i] = Result(
-                        ok=False,
+                        ok=False, code=REJECTED_INVALID,
                         error=f"invalid {encoding} prompt at {noun} {off}",
                         error_offset=off)
                     continue
                 b8 = np.asarray(outs[k]).astype(np.uint8)
                 if len(b8) == 0 or len(b8) > self.max_prompt - 1:
                     results[i] = Result(
-                        ok=False, error="empty or oversize prompt")
+                        ok=False, code=REJECTED_INVALID,
+                        error="empty or oversize prompt")
                     continue
                 ids = np.concatenate(
                     [[BOS_ID], b8.astype(np.int32) + N_SPECIAL])
                 sanitized = bytes(b8) if (policy == "replace" and off >= 0) \
                     else b""
                 admitted[i] = (i, req, ids, off, sanitized)
+
+    def _host_fallback_unit(self, encoding, policy, chunk, results,
+                            admitted):
+        """Host ``codecs`` degradation for a unit-encoded group whose
+        ragged launch failed after retries (mirrors the device cell's
+        CPython-pinned semantics, including the first-error offset in
+        source units)."""
+        width, _np_dtype, _src, noun = self._UNIT_INGRESS[encoding]
+        for i, req, units in chunk:
+            self.counters["fallback"] += 1
+            wire = (units.astype(np.uint8).tobytes() if width == 1
+                    else units.astype(f"<u{width}").tobytes())
+            try:
+                wire.decode(encoding)
+                off = -1
+            except UnicodeDecodeError as e:
+                off = e.start // width
+            if policy != "replace" and off >= 0:
+                results[i] = Result(
+                    ok=False, code=REJECTED_INVALID,
+                    error=f"invalid {encoding} prompt at {noun} {off}",
+                    error_offset=off)
+                continue
+            text = wire.decode(encoding, "replace" if off >= 0 else "strict")
+            b8 = np.frombuffer(text.encode("utf-8"), np.uint8)
+            if len(b8) == 0 or len(b8) > self.max_prompt - 1:
+                results[i] = Result(
+                    ok=False, code=REJECTED_INVALID,
+                    error="empty or oversize prompt")
+                continue
+            ids = np.concatenate([[BOS_ID], b8.astype(np.int32) + N_SPECIAL])
+            sanitized = bytes(b8) if (policy == "replace" and off >= 0) \
+                else b""
+            admitted[i] = (i, req, ids, off, sanitized)
 
     def _egress(self, token_ids: np.ndarray, encoding: str) -> bytes:
         byte_vals = token_ids - N_SPECIAL
@@ -297,13 +458,44 @@ class Engine:
     # ------------------------------------------------------------------
     def serve(self, requests: List[Request]) -> List[Result]:
         results: List[Optional[Result]] = [None] * len(requests)
+        t0 = self._clock()
+        # Bounded admission: shed the tail beyond ``queue_limit`` with a
+        # typed overload rejection BEFORE any transcode work — an
+        # overloaded engine must refuse cheaply, not queue unboundedly.
+        admitted_reqs = requests
+        if len(requests) > self.queue_limit:
+            self.counters["shed"] += len(requests) - self.queue_limit
+            for i in range(self.queue_limit, len(requests)):
+                results[i] = Result(
+                    ok=False, code=REJECTED_OVERLOAD,
+                    error=(f"admission queue full "
+                           f"({self.queue_limit} slots); request shed"))
+            admitted_reqs = requests[: self.queue_limit]
         # Packed multi-request ingress: one ragged launch per group of
         # ``max_batch`` prompts (rejections land in ``results`` here).
-        wave = self._ingress_batch(requests, results)
+        wave = self._ingress_batch(admitted_reqs, results)
 
+        # Per-request deadlines are relative to serve() admission and
+        # checked right before each decode wave: expired requests free
+        # their slot instead of producing a late (= useless) answer.
+        deadlines = {i: t0 + req.deadline_s
+                     for i, req in enumerate(admitted_reqs)
+                     if req.deadline_s is not None}
         for w0 in range(0, len(wave), self.max_batch):
             chunk = wave[w0: w0 + self.max_batch]
-            self._run_wave(chunk, results)
+            live = []
+            for entry in chunk:
+                i = entry[0]
+                dl = deadlines.get(i)
+                if dl is not None and self._clock() >= dl:
+                    self.counters["deadline"] += 1
+                    results[i] = Result(
+                        ok=False, code=REJECTED_DEADLINE,
+                        error=(f"deadline of {entry[1].deadline_s:g}s "
+                               f"expired before decode"))
+                else:
+                    live.append(entry)
+            self._run_wave(live, results)
         return results  # type: ignore[return-value]
 
     def _run_wave(self, chunk, results):
@@ -338,6 +530,17 @@ class Engine:
         for j, (i, req, ids, off, sanitized) in enumerate(chunk):
             gen = out[j]
             gen = gen[(gen >= 0) & (gen != EOS_ID)]
+            # Per-document poison isolation on egress: one request with a
+            # bad out_encoding (or an egress-transcode failure) must not
+            # throw away its wave-mates' finished generations.
+            try:
+                wire = self._egress(gen, req.out_encoding)
+            except Exception as e:
+                results[i] = Result(
+                    ok=False, code=FAILED_TRANSCODE,
+                    error=f"egress transcode failed: {e}",
+                    error_offset=off, sanitized_prompt=sanitized)
+                continue
             results[i] = Result(
-                ok=True, text_bytes=self._egress(gen, req.out_encoding),
+                ok=True, text_bytes=wire,
                 error_offset=off, sanitized_prompt=sanitized)

@@ -1,0 +1,3 @@
+# Test-support layer: deterministic fault injection for the transcode
+# stack (repro.testing.faults).  Production modules call the no-op
+# ``faults.fire`` hook; only the chaos suite arms it.

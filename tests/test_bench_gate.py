@@ -219,3 +219,21 @@ def test_matrix_schema_disjoint_tables_never_pass_vacuously(tmp_path, capsys):
     renamed = {("table_5", lang): d for (t, lang), d in BASE.items()}
     assert _run(tmp_path, _report_v(BASE, 2), _report_v(renamed, 3)) == 1
     assert "nothing gated" in capsys.readouterr().err
+
+
+def test_schema4_stream_table(tmp_path, capsys):
+    """The v4 bump: a schema-4 fresh run adds ``table_stream`` (chunked
+    resumable streaming vs whole-buffer).  Its rows carry the gated
+    ``fused`` column (whole-buffer reference timings), so against a
+    schema-3 baseline the new table is warned-and-skipped, and against a
+    schema-4 baseline it IS gated like any other table."""
+    fresh = {k: dict(d) for k, d in BASE.items()}
+    fresh[("table_stream", "arabic@1024")] = {
+        "stream": 0.2, "onepass": 1.2, "fused": 1.0, "blockparallel": 0.5}
+    assert _run(tmp_path, _report_v(BASE, 3), _report_v(fresh, 4)) == 0
+    assert "skipping table 'table_stream'" in capsys.readouterr().err
+    # Same-schema baselines gate the new table's fused column normally.
+    assert _run(tmp_path, _report_v(fresh, 4), _report_v(fresh, 4)) == 0
+    slow = {k: dict(d) for k, d in fresh.items()}
+    slow[("table_stream", "arabic@1024")]["fused"] = 0.05
+    assert _run(tmp_path, _report_v(fresh, 4), _report_v(slow, 4)) == 1

@@ -796,3 +796,95 @@ def test_parity_ragged_interpret_vs_compiled():
                               np.asarray(interp.counts))
         assert np.array_equal(np.asarray(comp.statuses),
                               np.asarray(interp.statuses))
+
+
+# ---------------------------------------------------------------------------
+# Streaming vs CPython's INCREMENTAL codecs (resumable transcode,
+# DESIGN.md §10): the chunked stream at adversarial split points —
+# mid-sequence, mid-surrogate-pair, empty chunks, 1-byte chunks — must
+# reproduce what ``codecs.getincrementaldecoder`` sees chunk by chunk.
+
+
+def _random_splits(rng, n, n_cuts):
+    """Random cut points, with empties (duplicate cuts) mixed in."""
+    cuts = np.sort(rng.integers(0, n + 1, n_cuts))
+    bounds = np.concatenate([[0], cuts, [n]])
+    return [(int(bounds[i]), int(bounds[i + 1]))
+            for i in range(len(bounds) - 1)]
+
+
+def test_stream_incremental_utf8_replace_fuzz():
+    """utf8 -> utf16, errors="replace": each chunk's emission must equal
+    the incremental decoder's per-chunk output, encoded to UTF-16LE —
+    CPython's own holdback is the oracle for ours."""
+    import codecs
+    from repro.core import stream as cs
+    rng = np.random.default_rng(SEED + 71)
+    for trial in range(8):
+        b = synthetic.utf8_array(LANGS[trial % len(LANGS)], 200,
+                                 seed=SEED + trial).copy()
+        bad = rng.integers(0, len(b), 6)
+        b[bad] = rng.integers(0x80, 0x100, 6)       # random dirt
+        st = cs.stream_init("utf8", "utf16", errors="replace")
+        dec = codecs.getincrementaldecoder("utf-8")("replace")
+        for lo, hi in _random_splits(rng, len(b), 6):
+            res, st = cs.transcode_stream_chunk(st, b[lo:hi])
+            want = np.frombuffer(
+                dec.decode(b[lo:hi].tobytes()).encode("utf-16-le"),
+                np.uint16)
+            got = np.asarray(res.buffer)[: int(res.count)]
+            np.testing.assert_array_equal(got, want, err_msg=f"t{trial}")
+        res, st = cs.finalize(st)
+        want = np.frombuffer(
+            dec.decode(b"", final=True).encode("utf-16-le"), np.uint16)
+        np.testing.assert_array_equal(
+            np.asarray(res.buffer)[: int(res.count)], want)
+
+
+def test_stream_incremental_utf16_replace_fuzz():
+    """utf16 -> utf8 with surrogate pairs straddling random splits,
+    including single-unit chunks."""
+    import codecs
+    from repro.core import stream as cs
+    rng = np.random.default_rng(SEED + 72)
+    for trial in range(8):
+        u = synthetic.utf16_units("emoji", 120, seed=SEED + trial).copy()
+        u[rng.integers(0, len(u), 3)] = 0xD800      # lone surrogates
+        st = cs.stream_init("utf16", "utf8", errors="replace")
+        dec = codecs.getincrementaldecoder("utf-16-le")("replace")
+        splits = _random_splits(rng, len(u), 10) if trial % 2 else \
+            [(i, i + 1) for i in range(len(u))]     # 1-unit chunks
+        for lo, hi in splits:
+            res, st = cs.transcode_stream_chunk(st, u[lo:hi])
+            want = np.frombuffer(
+                dec.decode(u[lo:hi].astype("<u2").tobytes())
+                .encode("utf-8"), np.uint8)
+            got = np.asarray(res.buffer)[: int(res.count)]
+            np.testing.assert_array_equal(got, want, err_msg=f"t{trial}")
+        res, _ = cs.finalize(st)
+        want = np.frombuffer(
+            dec.decode(b"", final=True).encode("utf-8"), np.uint8)
+        np.testing.assert_array_equal(
+            np.asarray(res.buffer)[: int(res.count)], want)
+
+
+def test_stream_incremental_strict_status_fuzz():
+    """errors="strict": the final sticky status must equal the
+    whole-buffer ``UnicodeDecodeError.start`` regardless of chunking."""
+    from repro.core import stream as cs
+    rng = np.random.default_rng(SEED + 73)
+    for trial in range(10):
+        b = synthetic.utf8_array(LANGS[trial % len(LANGS)], 150,
+                                 seed=SEED + trial).copy()
+        k = int(rng.integers(1, 5))
+        b[rng.integers(0, max(len(b), 1), k)] = rng.integers(0, 256, k)
+        try:
+            b.tobytes().decode("utf-8")
+            want = -1
+        except UnicodeDecodeError as e:
+            want = e.start
+        st = cs.stream_init("utf8", "utf16", errors="strict")
+        for lo, hi in _random_splits(rng, len(b), 5):
+            _, st = cs.transcode_stream_chunk(st, b[lo:hi])
+        _, st = cs.finalize(st)
+        assert st.status == want, (trial, st.status, want)

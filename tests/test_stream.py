@@ -1,0 +1,272 @@
+"""Resumable streaming transcode: bit-exactness vs the whole buffer.
+
+The acceptance contract (DESIGN.md §10): feeding ANY chunking of a
+source buffer through ``transcode_stream_chunk`` + ``finalize`` must
+reproduce the whole-buffer single-pass transcode EXACTLY — concatenated
+output buffer, total count, final sticky status — for every codec-matrix
+cell, every ``errors=`` policy, and every split point, including splits
+mid-multibyte-sequence and mid-surrogate-pair.
+
+Chunk-size sweep per the issue: {1, 7, TILE, TILE+1, whole}.  Sub-tile
+sizes run on short inputs (every launch pads to one tile, so the whole
+sweep shares a compile); the tile-straddling sizes run on a
+``TILE + 40``-unit input so the second launch actually crosses the tile
+boundary.
+
+Adversarial split-point tests walk EVERY boundary of a small multibyte
+string (UTF-8) and a surrogate-pair string (UTF-16) — the mid-character
+splits are the holdback rule's whole reason to exist.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import transcode as tc
+from repro.core.stream import (MAX_HOLDBACK, TILE, finalize, stream_init,
+                               transcode_stream, transcode_stream_chunk)
+from repro.data import synthetic
+
+_CODEC = {"utf8": "utf-8", "utf16": "utf-16-le", "utf32": "utf-32-le",
+          "latin1": "latin-1"}
+_WIRE_DT = {"utf8": np.dtype(np.uint8), "utf16": np.dtype("<u2"),
+            "utf32": np.dtype("<u4"), "latin1": np.dtype(np.uint8)}
+
+SMALL_SIZES = (1, 7)
+TILE_SIZES = (TILE, TILE + 1, None)     # None = whole buffer in one chunk
+
+
+def _source_units(src: str, n_chars: int, seed: int) -> np.ndarray:
+    """Valid source units covering ASCII + multibyte for each format."""
+    text = bytes(synthetic.utf8_array("arabic", n_chars, seed=seed)) \
+        .decode("utf-8")
+    if src == "latin1":
+        text = "".join(c if ord(c) <= 0xFF else "é" for c in text)
+    return np.frombuffer(text.encode(_CODEC[src]), _WIRE_DT[src]).copy()
+
+
+def _dirty(src: str, units: np.ndarray, seed: int) -> np.ndarray:
+    """Inject per-format invalid units (latin1 cannot be invalid)."""
+    u = units.copy()
+    rng = np.random.default_rng(seed)
+    pos = rng.integers(0, len(u), 4)
+    bad = {"utf8": 0xFF, "utf16": 0xD800, "utf32": 0x11_0000}.get(src)
+    if bad is not None:
+        u[pos] = bad
+    return u
+
+
+def _whole(src, dst, units, errors):
+    """Whole-buffer single-pass reference (padded to a tile multiple,
+    mirroring the stream's per-launch geometry)."""
+    n = len(units)
+    pad = max(TILE, -(-n // TILE) * TILE)
+    buf = np.zeros(pad, _WIRE_DT[src])
+    buf[:n] = units
+    return tc.transcode(jnp.asarray(buf), dst, src_format=src, n_valid=n,
+                        strategy="onepass", errors=errors)
+
+
+def _stream(src, dst, units, chunk_size, errors):
+    st = stream_init(src, dst, errors=errors)
+    parts = []
+    step = len(units) if chunk_size is None else chunk_size
+    step = max(step, 1)
+    for i in range(0, len(units), step):
+        res, st = transcode_stream_chunk(st, units[i: i + step])
+        parts.append(np.asarray(res.buffer)[: int(res.count)])
+    res, st = finalize(st)
+    parts.append(np.asarray(res.buffer)[: int(res.count)])
+    out = np.concatenate(parts) if parts else np.zeros(0, _WIRE_DT[dst])
+    return out, st
+
+
+def _check_equal(src, dst, units, chunk_size, errors):
+    ref = _whole(src, dst, units, errors)
+    cap = tc.CAP_FACTOR[(src, dst)] * max(TILE, -(-len(units) // TILE)
+                                          * TILE)
+    out, st = _stream(src, dst, units, chunk_size, errors)
+    assert st.out_count == int(ref.count), \
+        f"{src}->{dst} chunk={chunk_size} {errors}: count"
+    assert st.status == int(ref.status), \
+        f"{src}->{dst} chunk={chunk_size} {errors}: status"
+    if int(ref.count) > cap:         # whole-buffer output clipped
+        return
+    if errors == "strict" and int(ref.status) >= 0:
+        # Strict stream with errors: the post-error SPECULATIVE content
+        # is launch-geometry-defined (a dangling invalid lead decodes
+        # against zero padding in a chunked launch but against its real
+        # neighbors in the whole buffer), so only the pre-error output
+        # is part of the contract — pinned against the CPython oracle.
+        text = units[: int(ref.status)].tobytes().decode(_CODEC[src])
+        exp = np.frombuffer(text.encode(_CODEC[dst]), _WIRE_DT[dst])
+        np.testing.assert_array_equal(
+            out[: len(exp)], exp,
+            err_msg=f"{src}->{dst} chunk={chunk_size} strict: pre-error "
+                    f"prefix")
+        return
+    ref_buf = np.asarray(ref.buffer)[: int(ref.count)]
+    np.testing.assert_array_equal(
+        out, ref_buf, err_msg=f"{src}->{dst} chunk={chunk_size} "
+                              f"{errors}: buffer")
+
+
+# ---------------------------------------------------------------------------
+# Full matrix x errors x chunk-size acceptance sweep.
+
+
+@pytest.mark.parametrize("src,dst", tc.PAIRS)
+@pytest.mark.parametrize("errors", ["strict", "replace"])
+def test_stream_matrix_small_chunks(src, dst, errors):
+    units = _source_units(src, 24, seed=11)[:40]
+    for chunk_size in SMALL_SIZES:
+        _check_equal(src, dst, units, chunk_size, errors)
+
+
+@pytest.mark.parametrize("src,dst", tc.PAIRS)
+@pytest.mark.parametrize("errors", ["strict", "replace"])
+def test_stream_matrix_tile_chunks(src, dst, errors):
+    units = _source_units(src, TILE, seed=12)[: TILE + 40]
+    for chunk_size in TILE_SIZES:
+        _check_equal(src, dst, units, chunk_size, errors)
+
+
+@pytest.mark.parametrize("src,dst", tc.PAIRS)
+@pytest.mark.parametrize("errors", ["strict", "replace"])
+def test_stream_matrix_dirty(src, dst, errors):
+    """Invalid units (or unencodable chars for latin1 targets) at random
+    positions: the sticky status and the replace output must still match
+    the whole buffer at every chunk size."""
+    units = _dirty(src, _source_units(src, 24, seed=13)[:40], seed=14)
+    for chunk_size in SMALL_SIZES:
+        _check_equal(src, dst, units, chunk_size, errors)
+
+
+# ---------------------------------------------------------------------------
+# Every split point of adversarial strings (the holdback rule itself).
+
+
+def test_stream_utf8_every_split_point():
+    # ASCII + 2-byte + 3-byte + 4-byte + ASCII: every i splits somewhere
+    # interesting, including mid-sequence.
+    b = "Aé世\U0001F600Z".encode("utf-8")
+    units = np.frombuffer(b, np.uint8)
+    ref = _whole("utf8", "utf16", units, "strict")
+    for i in range(len(units) + 1):
+        st = stream_init("utf8", "utf16")
+        r1, st = transcode_stream_chunk(st, units[:i])
+        r2, st = transcode_stream_chunk(st, units[i:])
+        r3, st = finalize(st)
+        out = np.concatenate([np.asarray(r.buffer)[: int(r.count)]
+                              for r in (r1, r2, r3)])
+        np.testing.assert_array_equal(
+            out, np.asarray(ref.buffer)[: int(ref.count)],
+            err_msg=f"split at {i}")
+        assert st.out_count == int(ref.count)
+        assert st.status == int(ref.status) == -1
+
+
+def test_stream_utf16_every_split_point():
+    # BMP char + surrogate pair + BMP char: split index 2 lands exactly
+    # between the high and low surrogate.
+    units = np.frombuffer("a\U0001F600z".encode("utf-16-le"),
+                          np.dtype("<u2")).copy()
+    ref = _whole("utf16", "utf8", units, "strict")
+    for i in range(len(units) + 1):
+        st = stream_init("utf16", "utf8")
+        r1, st = transcode_stream_chunk(st, units[:i])
+        r2, st = transcode_stream_chunk(st, units[i:])
+        r3, st = finalize(st)
+        out = np.concatenate([np.asarray(r.buffer)[: int(r.count)]
+                              for r in (r1, r2, r3)])
+        np.testing.assert_array_equal(
+            out, np.asarray(ref.buffer)[: int(ref.count)],
+            err_msg=f"split at {i}")
+        assert st.status == -1
+
+
+def test_stream_dangling_tail_strict_and_replace():
+    """A stream that ENDS mid-character: finalize must fault (strict) or
+    substitute (replace) at the tail's true global offset."""
+    b = b"hi" + "世".encode("utf-8")[:2]          # truncated 3-byte
+    units = np.frombuffer(b, np.uint8)
+    for errors in ("strict", "replace"):
+        ref = _whole("utf8", "utf16", units, errors)
+        st = stream_init("utf8", "utf16", errors=errors)
+        r1, st = transcode_stream_chunk(st, units)
+        assert st.pending.size == 2          # tail held back
+        assert st.status == -1               # no error YET
+        r2, st = finalize(st)
+        assert st.finished
+        assert st.status == int(ref.status) == 2
+        out = np.concatenate([np.asarray(r.buffer)[: int(r.count)]
+                              for r in (r1, r2)])
+        np.testing.assert_array_equal(
+            out, np.asarray(ref.buffer)[: int(ref.count)])
+
+
+def test_stream_empty_chunks_are_noops():
+    units = np.frombuffer("é".encode("utf-8"), np.uint8)
+    st = stream_init("utf8", "utf16")
+    r, st = transcode_stream_chunk(st, np.zeros(0, np.uint8))
+    assert int(r.count) == 0 and st.consumed == 0
+    r, st = transcode_stream_chunk(st, units[:1])    # lead only: held
+    assert int(r.count) == 0 and st.pending.size == 1
+    r, st = transcode_stream_chunk(st, np.zeros(0, np.uint8))
+    assert int(r.count) == 0 and st.pending.size == 1
+    r, st = transcode_stream_chunk(st, units[1:])
+    assert int(r.count) == 1
+    _, st = finalize(st)
+    assert st.out_count == 1 and st.status == -1
+
+
+def test_stream_convenience_driver():
+    units = _source_units("utf8", 32, seed=15)
+    ref = _whole("utf8", "utf32", units, "strict")
+    chunks = [units[i: i + 5] for i in range(0, len(units), 5)]
+    res, st = transcode_stream(chunks, src_format="utf8",
+                               dst_format="utf32")
+    assert st.finished
+    assert int(res.count) == int(ref.count)
+    assert int(res.status) == int(ref.status)
+    np.testing.assert_array_equal(
+        np.asarray(res.buffer), np.asarray(ref.buffer)[: int(ref.count)])
+
+
+def test_stream_after_finalize_raises():
+    st = stream_init("utf8", "utf16")
+    _, st = finalize(st)
+    with pytest.raises(ValueError, match="finalized"):
+        transcode_stream_chunk(st, np.zeros(1, np.uint8))
+    with pytest.raises(ValueError, match="finalized"):
+        finalize(st)
+
+
+def test_stream_input_validation():
+    st = stream_init("utf16", "utf8")
+    with pytest.raises(TypeError, match="unit arrays"):
+        transcode_stream_chunk(st, b"ab")       # bytes into a u16 stream
+    with pytest.raises(ValueError, match="1-D"):
+        transcode_stream_chunk(st, np.zeros((2, 2), np.uint16))
+    with pytest.raises(TypeError, match="integer"):
+        transcode_stream_chunk(st, np.zeros(4, np.float32))
+    with pytest.raises(ValueError, match="out of range"):
+        transcode_stream_chunk(st, np.array([0x1_0000], np.int64))
+    with pytest.raises(ValueError, match="errors"):
+        stream_init("utf8", "utf16", errors="ignore")
+    with pytest.raises(ValueError, match="unsupported format pair"):
+        stream_init("utf8", "utf8")             # not a matrix cell
+    # bytes ARE accepted for byte-width sources.
+    st8 = stream_init("utf8", "utf16")
+    r, st8 = transcode_stream_chunk(st8, b"ok")
+    assert int(r.count) == 2
+
+
+def test_stream_holdback_never_exceeds_max():
+    st = stream_init("utf8", "utf16")
+    # Feed a 4-byte lead then continuations one at a time: pending must
+    # stay <= MAX_HOLDBACK at every step.
+    for b in "\U0001F600".encode("utf-8")[:-1]:
+        _, st = transcode_stream_chunk(st, bytes([b]))
+        assert st.pending.size <= MAX_HOLDBACK

@@ -166,3 +166,56 @@ def test_utf16le_byte_helpers():
     units = tc.utf16le_bytes_to_units(jnp.asarray(raw))
     back = tc.units_to_utf16le_bytes(units)
     assert np.array_equal(np.asarray(back), raw)
+
+
+# ---------------------------------------------------------------------------
+# Input validation (robustness): wrong-dtype / wrong-rank inputs must
+# raise a CLEAR error instead of silently flattening or truncating into
+# garbage transcoding.
+
+
+def test_transcode_rejects_float_dtype():
+    with pytest.raises(TypeError, match="integer dtype"):
+        tc.transcode(jnp.zeros(8, jnp.float32), "utf16",
+                     src_format="utf8")
+
+
+def test_transcode_rejects_2d_input():
+    with pytest.raises(ValueError, match="1-D"):
+        tc.transcode(jnp.zeros((2, 4), jnp.int32), "utf16",
+                     src_format="utf8")
+
+
+def test_scan_rejects_bad_inputs():
+    with pytest.raises(TypeError, match="integer dtype"):
+        tc.scan(jnp.zeros(8, jnp.float64), src_format="utf8",
+                dst_format="utf16")
+    with pytest.raises(ValueError, match="1-D"):
+        tc.scan(jnp.zeros((4, 4), jnp.int32), src_format="utf8",
+                dst_format="utf16")
+
+
+def test_pack_documents_rejects_2d_doc():
+    from repro.core import packing
+    with pytest.raises(ValueError, match="one row per document"):
+        packing.pack_documents([np.zeros((2, 3), np.uint8)],
+                               dtype=np.uint8)
+
+
+def test_pack_documents_rejects_float_doc():
+    from repro.core import packing
+    with pytest.raises(TypeError, match="integer dtype"):
+        packing.pack_documents([np.zeros(3, np.float32)], dtype=np.uint8)
+
+
+def test_pack_documents_rejects_lossy_cast():
+    from repro.core import packing
+    # A uint16 document with values above 255 must not silently truncate
+    # into a uint8 pack.
+    with pytest.raises(ValueError, match="corrupt"):
+        packing.pack_documents([np.array([0x1F600 & 0xFFFF], np.uint16)],
+                               dtype=np.uint8)
+    # In-range values cast fine.
+    pk = packing.pack_documents([np.array([65, 66], np.uint16)],
+                                dtype=np.uint8)
+    assert pk.data.dtype == np.uint8
