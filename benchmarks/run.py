@@ -23,8 +23,11 @@ import sys
 # existing sweeps (new strategies in a shared table are additive — the
 # gate only compares its gated strategy — but the new table needs the
 # version bump for the cross-version warn-and-skip rule); v4 added
-# ``table_stream`` (chunked resumable streaming vs whole-buffer).
-SCHEMA = 4
+# ``table_stream`` (chunked resumable streaming vs whole-buffer); v5
+# added ``table_serve`` (continuous vs wave scheduling on the serve
+# engine — its "strategy" keys are schedulers and its rps row is in
+# requests/s, not Gchars/s).
+SCHEMA = 5
 
 
 def _records(table: str, rows):
@@ -115,6 +118,16 @@ def main(argv=None) -> None:
     tb.print_rows("Streaming: chunked resumable vs whole-buffer "
                   "UTF-8 -> UTF-16 (Gchars/s)", ts)
     report["records"] += _records("table_stream", ts)
+
+    # Serve schedulers (rides in every mode incl. --smoke: the
+    # continuous-beats-wave claim on the skewed trace is an acceptance
+    # surface, gated per the TABLE_STRATEGIES map in bench_gate).  The
+    # rps row is requests/s; the latency row's *_p50_ms/*_p99_ms keys
+    # are submit->settle percentiles in ms, reported but not gated.
+    tsv = tb.table_serve(n_requests=24 if (quick or smoke) else 32,
+                         reps=2 if (quick or smoke) else 3)
+    tb.print_rows("Serve: continuous vs wave scheduling (req/s, ms)", tsv)
+    report["records"] += _records("table_serve", tsv)
 
     if not smoke:
         tr = tb.table_replace(n_chars=n)

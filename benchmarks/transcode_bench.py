@@ -73,14 +73,12 @@ def table5(langs=LIPSUM_LANGS, n_chars=N_CHARS):
         nch = n_chars
         b8, _ = _prep_narrow(lang, n_chars)
         fns = {
-            "onepass": (jax.jit(lambda x: tc.transcode_utf8_to_utf16(
-                x, None, strategy="onepass", validate=False)), b8),
-            "fused": (jax.jit(lambda x: tc.transcode_utf8_to_utf16(
-                x, None, strategy="fused", validate=False)), b8),
-            "blockparallel": (jax.jit(lambda x: tc.utf8_to_utf16(
-                x, None, validate=False)), b8),
-            "windowed(paper)": (jax.jit(lambda x: tc.transcode_utf8_to_utf16(
-                x, None, strategy="windowed", validate=False)), b8),
+            name: (jax.jit(lambda x, s=strat: tc.transcode(
+                x, "utf16", src_format="utf8", strategy=s,
+                validate=False)), b8)
+            for name, strat in (("onepass", "onepass"), ("fused", "fused"),
+                                ("blockparallel", "blockparallel"),
+                                ("windowed(paper)", "windowed"))
         }
         row = {"lang": lang}
         for name, (f, x) in fns.items():
@@ -99,14 +97,12 @@ def table6(langs=LIPSUM_LANGS, n_chars=N_CHARS, with_scalar=True):
         b8, _ = _prep_narrow(lang, n_chars)
         raw = bytes(np.asarray(b8))
         fns = {
-            "onepass": (jax.jit(lambda x: tc.transcode_utf8_to_utf16(
-                x, None, strategy="onepass", validate=True)), b8),
-            "fused": (jax.jit(lambda x: tc.transcode_utf8_to_utf16(
-                x, None, strategy="fused", validate=True)), b8),
-            "blockparallel": (jax.jit(lambda x: tc.utf8_to_utf16(
-                x, None, validate=True)), b8),
-            "windowed(paper)": (jax.jit(lambda x: tc.transcode_utf8_to_utf16(
-                x, None, strategy="windowed", validate=True)), b8),
+            name: (jax.jit(lambda x, s=strat: tc.transcode(
+                x, "utf16", src_format="utf8", strategy=s,
+                validate=True)), b8)
+            for name, strat in (("onepass", "onepass"), ("fused", "fused"),
+                                ("blockparallel", "blockparallel"),
+                                ("windowed(paper)", "windowed"))
         }
         row = {"lang": lang}
         for name, (f, x) in fns.items():
@@ -132,14 +128,12 @@ def table9(langs=LIPSUM_LANGS, n_chars=N_CHARS):
         _, u16 = _prep_narrow(lang, n_chars)
         raw16 = np.asarray(u16).tobytes()
         fns = {
-            "onepass": (jax.jit(lambda x: tc.transcode_utf16_to_utf8(
-                x, None, strategy="onepass", validate=True)), u16),
-            "fused": (jax.jit(lambda x: tc.transcode_utf16_to_utf8(
-                x, None, strategy="fused", validate=True)), u16),
-            "blockparallel": (jax.jit(lambda x: tc.utf16_to_utf8(
-                x, None, validate=True)), u16),
-            "windowed(paper)": (jax.jit(lambda x: tc.transcode_utf16_to_utf8(
-                x, None, strategy="windowed", validate=True)), u16),
+            name: (jax.jit(lambda x, s=strat: tc.transcode(
+                x, "utf8", src_format="utf16", strategy=s,
+                validate=True)), u16)
+            for name, strat in (("onepass", "onepass"), ("fused", "fused"),
+                                ("blockparallel", "blockparallel"),
+                                ("windowed(paper)", "windowed"))
         }
         row = {"lang": lang}
         for name, (f, x) in fns.items():
@@ -170,12 +164,15 @@ def table_replace(langs=("latin", "arabic", "emoji"), n_chars=N_CHARS,
         bad[::corrupt_every] = 0xFF
         bad8 = jnp.asarray(bad)
         fns = {
-            "replace(mutated)": (jax.jit(lambda x: tc.transcode_utf8_to_utf16(
-                x, None, strategy="fused", errors="replace")), bad8),
-            "strict(mutated)": (jax.jit(lambda x: tc.transcode_utf8_to_utf16(
-                x, None, strategy="fused", errors="strict")), bad8),
-            "strict(clean)": (jax.jit(lambda x: tc.transcode_utf8_to_utf16(
-                x, None, strategy="fused", errors="strict")), b8),
+            "replace(mutated)": (jax.jit(lambda x: tc.transcode(
+                x, "utf16", src_format="utf8", strategy="fused",
+                errors="replace")), bad8),
+            "strict(mutated)": (jax.jit(lambda x: tc.transcode(
+                x, "utf16", src_format="utf8", strategy="fused",
+                errors="strict")), bad8),
+            "strict(clean)": (jax.jit(lambda x: tc.transcode(
+                x, "utf16", src_format="utf8", strategy="fused",
+                errors="strict")), b8),
         }
         row = {"lang": lang}
         for name, (f, x) in fns.items():
@@ -232,8 +229,9 @@ def table_ragged(batch_sizes=(8, 64), n_chars=2048, reps=6):
             row = {"lang": f"b{b}/{skew}"}
             for strat in ("onepass", "fused"):
                 packed_fn = jax.jit(
-                    lambda d, o, l, s=strat: tc.ragged_utf8_to_utf16(
-                        d, o, l, strategy=s))
+                    lambda d, o, l, s=strat: tc.ragged_transcode(
+                        d, o, l, src_format="utf8", dst_format="utf16",
+                        strategy=s))
                 jax.block_until_ready(packed_fn(pdata, poffs, plens))
                 row[strat] = _gcps(nch, _time_min(
                     lambda packed_fn=packed_fn: jax.block_until_ready(
@@ -273,8 +271,8 @@ def table_ascii_runs(n_chars=N_CHARS, reps=REPS, spans=(0, 1, 8, 64)):
         b8 = jnp.asarray(base)
         row = {"lang": f"ascii+{k}spans"}
         for strat in ("onepass", "fused", "blockparallel"):
-            f = jax.jit(lambda x, s=strat: tc.transcode_utf8_to_utf16(
-                x, None, strategy=s))
+            f = jax.jit(lambda x, s=strat: tc.transcode(
+                x, "utf16", src_format="utf8", strategy=s))
             jax.block_until_ready(f(b8))
             row[strat] = _gcps(nch, _time_min(
                 lambda f=f: jax.block_until_ready(f(b8)), reps=reps))
@@ -357,6 +355,68 @@ def table_stream(lang="arabic", n_chars=N_CHARS, chunk_sizes=(1024, 4096),
     return rows
 
 
+def _serve_trace(n_requests, max_prompt, max_new, seed=11):
+    """Seeded skewed heavy-traffic trace for the serve schedulers.
+
+    Prompt lengths are skewed (every eighth request is long — exercises
+    the admission buckets) and, INDEPENDENTLY, every fourth request
+    wants the full generation budget while the rest want a couple of
+    tokens.  Generation length is what admission-time bucketing cannot
+    see: a wave whose slots drew one full-budget straggler idles its
+    other slots for the whole tail, while continuous refill backfills
+    them immediately — that per-wave straggler tax is the thing this
+    trace measures.  ASCII-only prompts: the trace measures scheduling,
+    not ingress validation (the transcode tables cover that).
+    """
+    from repro.serve.engine import Request
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_requests):
+        n = int(rng.integers(max_prompt // 2, max_prompt - 1)) \
+            if i % 8 == 3 else int(rng.integers(4, 12))
+        prompt = bytes(rng.integers(0x61, 0x7B, n, dtype=np.uint8))
+        reqs.append(Request(prompt, max_new=max_new if i % 4 == 1 else 2))
+    return reqs
+
+
+def table_serve(n_requests=32, max_batch=4, max_prompt=64, max_new=64,
+                reps=3):
+    """Beyond-paper: continuous batching vs wave batching on the serve
+    engine's skewed trace.
+
+    The SAME model, ingress cells and per-bucket prefill geometry run
+    under both schedulers — the only difference is the refill condition
+    (a freed slot refills immediately vs once the whole wave drains).
+    Rows: throughput in requests/s per scheduler (the gated cell) and
+    submit->settle latency percentiles in ms (reported, not gated: the
+    p50/p99 come from the last timed rep while rps is min-of-reps).
+    """
+    from repro.models import registry
+    from repro.serve.engine import Engine
+    fam, cfg, model = registry.get("bytelm-100m", reduced=True)
+    params = model.init(jax.random.PRNGKey(0))
+    row_rps = {"lang": "rps"}
+    row_lat = {"lang": "latency"}
+    for sched in ("wave", "continuous"):
+        e = Engine(model, cfg, fam, params, max_batch=max_batch,
+                   max_prompt=max_prompt, max_new=max_new,
+                   queue_limit=n_requests, scheduler=sched)
+        trace = _serve_trace(n_requests, max_prompt, max_new)
+        res = e.serve(trace)          # warmup: compiles every cell
+        assert all(r.ok for r in res), [r.error for r in res if not r.ok]
+
+        def run(e=e, trace=trace):
+            e.latencies.clear()
+            e.serve(trace)
+
+        t = _time_min(run, reps=reps)
+        lat_ms = np.asarray(sorted(e.latencies.values())) * 1e3
+        row_rps[sched] = n_requests / t
+        row_lat[f"{sched}_p50_ms"] = float(np.percentile(lat_ms, 50))
+        row_lat[f"{sched}_p99_ms"] = float(np.percentile(lat_ms, 99))
+    return [row_rps, row_lat]
+
+
 def table8_proxy(langs=("arabic", "latin", "chinese")):
     """Instructions-per-byte proxy (paper Table 8): jaxpr FLOPs/bytes per
     input byte for each strategy — the HLO-op analogue of instruction
@@ -366,9 +426,10 @@ def table8_proxy(langs=("arabic", "latin", "chinese")):
     for lang in langs:
         b, _, nb, _, nch = _prep(lang, 4096)
         for name, fn in [
-            ("blockparallel", lambda x: tc.utf8_to_utf16(x, None)),
-            ("windowed(paper)", lambda x: tc.transcode_utf8_to_utf16(
-                x, None, strategy="windowed")),
+            ("blockparallel", lambda x: tc.transcode(
+                x, "utf16", src_format="utf8", strategy="blockparallel")),
+            ("windowed(paper)", lambda x: tc.transcode(
+                x, "utf16", src_format="utf8", strategy="windowed")),
         ]:
             cost = CM.fn_cost(fn, jax.ShapeDtypeStruct(b.shape, b.dtype))
             rows.append({"lang": lang, "impl": name,
@@ -381,7 +442,9 @@ def fig7(lang="arabic", sizes=(64, 256, 1024, 4096, 16384, 65536)):
     """Input-size sweep (paper Fig. 7): speed vs prefix length."""
     rows = []
     full = synthetic.utf8_array(lang, 1 << 17, 0).astype(np.int32)
-    f = jax.jit(lambda x: tc.utf8_to_utf16(x, None, validate=True))
+    f = jax.jit(lambda x: tc.transcode(x, "utf16", src_format="utf8",
+                                       strategy="blockparallel",
+                                       validate=True))
     for n in sizes:
         b = jnp.asarray(full[:n])
         nch = int(((np.asarray(b) & 0xC0) != 0x80).sum())
@@ -393,10 +456,10 @@ def fig7(lang="arabic", sizes=(64, 256, 1024, 4096, 16384, 65536)):
 
 def print_rows(title, rows):
     print(f"\n== {title} ==")
-    if not rows:
-        return
-    keys = list(rows[0].keys())
-    print(",".join(keys))
+    keys = None
     for r in rows:
+        if list(r.keys()) != keys:          # heterogeneous tables (table_serve)
+            keys = list(r.keys())
+            print(",".join(keys))
         print(",".join(f"{r[k]:.3g}" if isinstance(r[k], float) else str(r[k])
                        for k in keys))

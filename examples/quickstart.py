@@ -1,6 +1,28 @@
 """Quickstart: the transcoding core as a library (paper's public API).
 
     PYTHONPATH=src python examples/quickstart.py
+
+The supported surface is the GENERIC entry points (``repro.transcode`` /
+``scan`` / ``ragged_transcode`` / ``ragged_scan``); the per-pair wrappers
+are deprecated shims that warn (DESIGN.md §11).  Migration table:
+
+    deprecated wrapper                  generic call
+    ----------------------------------  --------------------------------
+    transcode_utf8_to_utf16(b, n)       transcode(b, "utf16", src_format="utf8", n_valid=n)
+    transcode_utf16_to_utf8(u, n)       transcode(u, "utf8", src_format="utf16", n_valid=n)
+    utf8_to_utf16(b, n)                 transcode(b, "utf16", src_format="utf8", n_valid=n, strategy="blockparallel")
+    utf16_to_utf8(u, n)                 transcode(u, "utf8", src_format="utf16", n_valid=n, strategy="blockparallel")
+    utf8_to_utf32 / utf16_to_utf32      transcode(x, "utf32", src_format=..., strategy="blockparallel")
+    utf32_to_utf8 / utf32_to_utf16      transcode(cp, ..., src_format="utf32", strategy="blockparallel")
+    utf8_to_latin1 / latin1_to_*        transcode(x, ..., strategy="fused")
+    scan_utf8(b, n)                     scan(b, "utf16", src_format="utf8", n_valid=n)
+    scan_utf16(u, n)                    scan(u, "utf8", src_format="utf16", n_valid=n)
+    ragged_utf8_to_utf16(d, o, l)       ragged_transcode(d, o, l, src_format="utf8", dst_format="utf16")
+    ragged_utf16_to_utf8(d, o, l)       ragged_transcode(d, o, l, src_format="utf16", dst_format="utf8")
+    ragged_scan_utf8 / ragged_scan_utf16  ragged_scan(d, o, l, src_format=..., dst_format=...)
+
+(The ``strategy=`` column records each wrapper's historical default; the
+generic default is ``"onepass"``.)
 """
 
 import numpy as np
@@ -32,8 +54,9 @@ def main():
     # (DESIGN.md §9); "fused" is the two-launch kernel reference it is
     # pinned bit-for-bit against.
     for strat in ("onepass", "fused", "blockparallel", "windowed"):
-        out, cnt, err = tc.transcode_utf8_to_utf16(
-            jnp.asarray(utf8), len(utf8), strategy=strat)
+        out, cnt, err = tc.transcode(
+            jnp.asarray(utf8), "utf16", src_format="utf8",
+            n_valid=len(utf8), strategy=strat)
         got = np.asarray(out)[: int(cnt)].astype(np.uint16)
         ok = np.array_equal(got, utf16.astype(np.uint16))
         show(f"utf8->utf16 [{strat}] matches python", ok)
@@ -50,7 +73,8 @@ def main():
          .decode("utf-16-le") == mixed.decode("utf-8"))
 
     # --- UTF-16 -> UTF-8 ------------------------------------------------
-    out, cnt, err = tc.transcode_utf16_to_utf8(jnp.asarray(utf16), len(utf16))
+    out, cnt, err = tc.transcode(jnp.asarray(utf16), "utf8",
+                                 src_format="utf16", n_valid=len(utf16))
     got = bytes(np.asarray(out)[: int(cnt)].astype(np.uint8))
     show("utf16->utf8 round-trips", got.decode("utf-8") == s)
 
@@ -63,10 +87,12 @@ def main():
     # --- error location + replacement (simdutf-style result) ------------
     broken = np.frombuffer("héllo".encode("utf-8"), np.uint8).copy()
     broken[1] = 0xFF  # corrupt the é lead byte
-    count, status = tc.scan_utf8(jnp.asarray(broken), len(broken))
-    show("scan_utf8: first invalid byte offset", int(status))
-    out, cnt, status = tc.transcode_utf8_to_utf16(
-        jnp.asarray(broken), len(broken), errors="replace")
+    count, status = tc.scan(jnp.asarray(broken), "utf16",
+                            src_format="utf8", n_valid=len(broken))
+    show("scan: first invalid byte offset", int(status))
+    out, cnt, status = tc.transcode(
+        jnp.asarray(broken), "utf16", src_format="utf8",
+        n_valid=len(broken), errors="replace")
     fixed = np.asarray(out)[: int(cnt)].astype(np.uint16).tobytes()
     show("errors='replace' output", fixed.decode("utf-16-le"))
 
@@ -78,8 +104,9 @@ def main():
     show("transcode(latin1 -> utf8) round-trips",
          bytes(np.asarray(out)[: int(cnt)].astype(np.uint8))
          == "café ÿ £".encode("utf-8"))
-    out, cnt, status = tc.utf8_to_utf32(
-        jnp.asarray(utf8), len(utf8), strategy="fused")
+    out, cnt, status = tc.transcode(
+        jnp.asarray(utf8), "utf32", src_format="utf8", n_valid=len(utf8),
+        strategy="fused")
     show("utf8 -> utf32 code points (fused cell)",
          np.array_equal(np.asarray(out)[: int(cnt)].astype(np.int64),
                         np.array([ord(c) for c in s])))

@@ -1,8 +1,11 @@
-"""Serving demo: batched requests through the transcode boundary.
+"""Serving demo: continuous batching behind the submit/poll surface.
 
-UTF-8 prompts are validated at ingress (invalid bytes rejected without
-touching the model); responses are returned in UTF-8 or UTF-16LE via the
-vectorized egress encoders.
+Requests are admitted through ``Engine.submit`` (cheap validation +
+length-bucketed queueing; invalid requests settle immediately),
+``Engine.drain`` runs the slot-level continuous-batching loop (a slot
+that finishes early is refilled mid-wave from the admission queue), and
+``Engine.poll`` returns each settled result by ticket.  The legacy
+batch-in/batch-out call is still available as the ``Engine.serve`` shim.
 
     PYTHONPATH=src python examples/serve_demo.py
 """
@@ -16,20 +19,38 @@ from repro.serve.engine import Engine, Request
 def main():
     fam, cfg, model = registry.get("bytelm-100m", reduced=True)
     params = model.init(jax.random.PRNGKey(0))
-    eng = Engine(model, cfg, fam, params, max_batch=4, max_prompt=64,
+    eng = Engine(model, cfg, fam, params, max_batch=2, max_prompt=64,
                  max_new=12)
 
     requests = [
-        Request(b"hello framework"),
-        Request("café 中文".encode("utf-8")),
-        Request(b"\xff\xfeinvalid bytes\x80"),               # rejected
+        Request(b"hello framework", max_new=2),    # frees its slot early
+        Request("café 中文".encode("utf-8")),       # decodes the full tail
+        Request(b"\xff\xfeinvalid bytes\x80"),     # rejected at ingress
         Request(b"utf-16 client", out_encoding="utf-16-le"),
+        Request(b"odd\x00!", in_encoding="utf-16-le"),  # bad field: odd
     ]
-    for req, res in zip(requests, eng.serve(requests)):
-        status = "OK " if res.ok else "REJ"
+    tickets = [eng.submit(req) for req in requests]
+
+    # Field-invalid requests settle AT submit — poll before any decode.
+    # (The invalid-UTF-8 prompt above is different: its bytes are only
+    # inspected by the packed ingress launch during drain.)
+    early = eng.poll(tickets[4])
+    print(f"settled at submit: {early.code} ({early.error})")
+
+    eng.drain()
+    for req, t in zip(requests, tickets):
+        res = eng.poll(t)
+        if res is None:
+            continue                               # polled above
         body = res.text_bytes[:32] if res.ok else res.error
-        print(f"[{status}] {req.prompt_bytes[:24]!r:30} "
+        print(f"[{res.code:>16}] {req.prompt_bytes[:24]!r:30} "
               f"({req.out_encoding}) -> {body!r}")
+
+    # The drain's slot lifecycle: with max_batch=2 and three admitted
+    # requests, the short request's slot re-admits the queued one
+    # mid-wave — that admit's step precedes its batch-mate's finish.
+    for kind, ticket, slot, step, _wall in eng.events:
+        print(f"  step {step:3d}  {kind:>6}  ticket={ticket} slot={slot}")
 
 
 if __name__ == "__main__":

@@ -44,8 +44,20 @@ import sys
 
 GATED_STRATEGY = "fused"
 REFERENCE_STRATEGY = "blockparallel"
+# Tables whose row keys are not kernel strategies gate a pair of their
+# own: table_serve rows carry schedulers, and the gated claim is that
+# continuous batching beats (absolute) / keeps beating (relative) the
+# wave scheduler on the committed trace.
+TABLE_STRATEGIES = {
+    "table_serve": ("continuous", "wave"),
+}
 
 EXIT_MALFORMED = 2
+
+
+def _strategies(table: str) -> tuple:
+    """(gated, reference) strategy pair for a table."""
+    return TABLE_STRATEGIES.get(table, (GATED_STRATEGY, REFERENCE_STRATEGY))
 
 
 class MalformedReport(ValueError):
@@ -82,15 +94,16 @@ def _cells(report, mode: str) -> dict:
         raw.setdefault(key, {})[strategy] = speed
     out = {}
     for key, by_strategy in raw.items():
-        if GATED_STRATEGY not in by_strategy:
+        gated, reference = _strategies(key[0])
+        if gated not in by_strategy:
             continue
         if mode == "relative":
-            ref = by_strategy.get(REFERENCE_STRATEGY)
+            ref = by_strategy.get(reference)
             if not ref:
                 continue
-            out[key] = by_strategy[GATED_STRATEGY] / ref
+            out[key] = by_strategy[gated] / ref
         else:
-            out[key] = by_strategy[GATED_STRATEGY]
+            out[key] = by_strategy[gated]
     return out
 
 
@@ -128,7 +141,7 @@ def main(argv=None) -> int:
     fresh_schema, fresh = loaded_fresh
 
     if not base:
-        print(f"bench gate: no '{GATED_STRATEGY}' records in baseline "
+        print(f"bench gate: no gated-strategy records in baseline "
               f"{args.baseline}", file=sys.stderr)
         return 1
 

@@ -23,6 +23,28 @@ if [ "${1:-}" = "--chaos" ]; then
     exit $?
 fi
 
+# --serve: run ONLY the serving surface — the engine/serve tests plus a
+# table_serve smoke asserting the continuous scheduler's win (higher
+# req/s AND lower p99 than wave on the skewed trace).  Fast inner loop
+# for scheduler work; CI runs this as its own job.
+if [ "${1:-}" = "--serve" ]; then
+    python -m pytest tests -k "serve or engine" -q
+    python - <<'PY'
+from benchmarks import transcode_bench as tb
+rows = tb.table_serve(n_requests=24, reps=2)
+rps = {k: v for k, v in rows[0].items() if k != "lang"}
+lat = {k: v for k, v in rows[1].items() if k != "lang"}
+print("table_serve smoke:", rps, lat)
+assert rps["continuous"] > rps["wave"], \
+    f"continuous does not beat wave on req/s: {rps}"
+assert lat["continuous_p99_ms"] < lat["wave_p99_ms"], \
+    f"continuous does not beat wave on p99 latency: {lat}"
+print("serve smoke OK: continuous beats wave "
+      f"({rps['continuous']/rps['wave']:.2f}x req/s)")
+PY
+    exit $?
+fi
+
 # set -e would abort on a bare failing pytest too; capture and re-raise
 # the exact code explicitly so a future edit can't swallow it.
 pytest_rc=0
@@ -41,11 +63,13 @@ python - "$fresh" <<'PY'
 import json, sys
 report = json.load(open(sys.argv[1]))
 strategies = {r["strategy"] for r in report["records"]}
-need = {"onepass", "fused", "blockparallel", "windowed(paper)"}
+need = {"onepass", "fused", "blockparallel", "windowed(paper)",
+        "continuous", "wave"}
 missing = need - strategies
 assert not missing, f"bench JSON missing strategies: {missing}"
 tables = {r["table"] for r in report["records"]}
-assert {"table5", "table6", "table9", "table_stream"} <= tables, tables
+assert {"table5", "table6", "table9", "table_stream",
+        "table_serve"} <= tables, tables
 assert "stream" in strategies, strategies
 print("bench smoke OK:", sorted(strategies), "across", sorted(tables))
 PY

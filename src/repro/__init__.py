@@ -1,0 +1,58 @@
+"""repro — TPU-native Unicode transcoding at line rate (public surface).
+
+The supported API is exactly ``__all__`` below (DESIGN.md §11):
+
+  * the four generic transcode entry points (``transcode`` / ``scan`` /
+    ``ragged_transcode`` / ``ragged_scan``) — the per-pair wrappers in
+    ``repro.core.transcode`` are deprecated shims over these;
+  * the resumable streaming API (``transcode_stream`` / ``StreamState``);
+  * ragged batch packing (``pack_documents``);
+  * the result types (``TranscodeResult`` / ``RaggedTranscodeResult``);
+  * the serving engine (``Engine`` / ``Request`` / ``Result`` /
+    ``ResultCode``) with its ``submit``/``poll``/``drain`` surface.
+
+Attributes resolve lazily (PEP 562): ``import repro`` stays cheap and
+pulls no jax/kernel modules until a symbol is touched.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+__all__ = [
+    "transcode", "scan", "ragged_transcode", "ragged_scan",
+    "transcode_stream", "pack_documents",
+    "TranscodeResult", "RaggedTranscodeResult", "StreamState",
+    "Engine", "Request", "Result", "ResultCode",
+]
+
+_EXPORTS = {
+    "transcode": ("repro.core.transcode", "transcode"),
+    "scan": ("repro.core.transcode", "scan"),
+    "ragged_transcode": ("repro.core.transcode", "ragged_transcode"),
+    "ragged_scan": ("repro.core.transcode", "ragged_scan"),
+    "transcode_stream": ("repro.core.stream", "transcode_stream"),
+    "StreamState": ("repro.core.stream", "StreamState"),
+    "pack_documents": ("repro.core.packing", "pack_documents"),
+    "TranscodeResult": ("repro.core.result", "TranscodeResult"),
+    "RaggedTranscodeResult": ("repro.core.result", "RaggedTranscodeResult"),
+    "Engine": ("repro.serve.engine", "Engine"),
+    "Request": ("repro.serve.engine", "Request"),
+    "Result": ("repro.serve.engine", "Result"),
+    "ResultCode": ("repro.serve.engine", "ResultCode"),
+}
+
+
+def __getattr__(name: str):
+    try:
+        mod_name, attr = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}") from None
+    value = getattr(importlib.import_module(mod_name), attr)
+    globals()[name] = value      # cache: resolve each symbol once
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -132,6 +132,32 @@ def pack_documents(docs: Sequence, *, dtype=None, block: int = TILE,
     return PackedDocs(data, offsets, lengths)
 
 
+def bucket_boundaries(max_length: int, min_length: int = 8,
+                      step: float = 1.5) -> tuple:
+    """Length-bucket upper bounds, multiplicatively spaced (the
+    tensor2tensor ``bucket_by_sequence_length`` boundary scheme).
+
+    Returns an increasing tuple of inclusive upper bounds ending exactly
+    at ``max_length``; a sequence of length ``L`` belongs to the first
+    bucket whose bound is ``>= L`` (``bisect_left``).  The serve engine
+    buckets its admission queues with this so prompts pad to their
+    bucket's bound instead of the global maximum — padded prefill waste
+    collapses and the compile cache holds one cell per bucket, not one
+    per distinct length.
+    """
+    if max_length < 1:
+        raise ValueError(f"max_length must be >= 1, got {max_length}")
+    if step <= 1.0:
+        raise ValueError(f"step must be > 1.0, got {step}")
+    bounds = []
+    x = max(1, min(min_length, max_length))
+    while x < max_length:
+        bounds.append(x)
+        x = max(x + 1, int(x * step))
+    bounds.append(max_length)
+    return tuple(bounds)
+
+
 def unpack_results(buffer, out_offsets, counts) -> list:
     """Split a dense ragged output back into per-document numpy arrays.
 

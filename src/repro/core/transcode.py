@@ -57,6 +57,8 @@ ASCII-pure chunks (the paper's Latin benchmark) reduce to a widening copy.
 
 from __future__ import annotations
 
+import warnings
+
 import numpy as np
 
 import jax
@@ -138,6 +140,31 @@ PAIRS = tuple(sorted(CAP_FACTOR))
 STRATEGIES = ("onepass", "fused", "blockparallel", "windowed")
 
 DEFAULT_STRATEGY = "onepass"
+
+# The per-pair convenience wrappers below are DEPRECATED (DESIGN.md §11):
+# the public surface is the four generic entry points (``transcode`` /
+# ``scan`` / ``ragged_transcode`` / ``ragged_scan``) plus the streaming
+# API.  Each name here is a one-line shim that emits a
+# ``DeprecationWarning`` attributed to ITS CALLER (stacklevel past the
+# shim), so CI can run with ``-W error::DeprecationWarning:repro`` and
+# fail on internal use while external callers merely see the warning.
+# The shims preserve their historical default strategies bit-for-bit.
+DEPRECATED = (
+    "utf8_to_utf16", "utf8_to_utf32", "utf8_to_latin1",
+    "latin1_to_utf8", "latin1_to_utf16",
+    "utf16_to_utf8", "utf16_to_utf32",
+    "utf32_to_utf8", "utf32_to_utf16",
+    "transcode_utf8_to_utf16", "transcode_utf16_to_utf8",
+    "ragged_utf8_to_utf16", "ragged_utf16_to_utf8",
+    "ragged_scan_utf8", "ragged_scan_utf16",
+    "scan_utf8", "scan_utf16",
+)
+
+
+def _warn_deprecated(name: str, repl: str):
+    warnings.warn(
+        f"repro.core.transcode.{name}() is deprecated; use {repl}",
+        DeprecationWarning, stacklevel=3)
 
 
 def normalize_format(name: str) -> str:
@@ -289,21 +316,15 @@ def _blockparallel_count(x, n_valid, src: str, dst: str):
 
 
 def scan_utf8(b, n_valid=None, *, strategy: str = DEFAULT_STRATEGY):
-    """Single-scan UTF-8 validation + UTF-16 capacity: ``(count, status)``.
-
-    ``status`` is -1 for valid streams, else the byte offset of the first
-    invalid maximal subpart (Python ``UnicodeDecodeError.start``);
-    ``count`` is the UTF-16 code units a transcode would emit.  The fused
-    strategy reads the input exactly once (the pipeline's counting pass
-    with its folded validation); ``blockparallel`` is the pure-jnp
-    reference with identical results.
-    """
+    """DEPRECATED shim: use :func:`scan` with ``dst_format="utf16"``."""
+    _warn_deprecated("scan_utf8", 'scan(b, "utf16", src_format="utf8")')
     return scan(b, "utf16", src_format="utf8", n_valid=n_valid,
                 strategy=strategy)
 
 
 def scan_utf16(u, n_valid=None, *, strategy: str = DEFAULT_STRATEGY):
-    """Single-scan UTF-16 validation + UTF-8 capacity: ``(count, status)``."""
+    """DEPRECATED shim: use :func:`scan` with ``dst_format="utf8"``."""
+    _warn_deprecated("scan_utf16", 'scan(u, "utf8", src_format="utf16")')
     return scan(u, "utf8", src_format="utf16", n_valid=n_valid,
                 strategy=strategy)
 
@@ -345,53 +366,59 @@ def _mask_padding(b, n_valid):
 def utf8_to_utf32(b, n_valid=None, validate: bool = True,
                   errors: str = "strict", *,
                   strategy: str = "blockparallel"):
-    """Decode UTF-8 bytes to code points.
-
-    Returns TranscodeResult(cp_buffer[capacity=len(b)], count, status);
-    int32 values under the default pure-jnp strategy, uint32 under
-    ``strategy="fused"`` (the Pallas matrix cell).
-    """
+    """DEPRECATED shim: use :func:`transcode` (``dst_format="utf32"``).
+    Historical default strategy: ``blockparallel``."""
+    _warn_deprecated("utf8_to_utf32",
+                     'transcode(b, "utf32", src_format="utf8")')
     return transcode(b, "utf32", src_format="utf8", n_valid=n_valid,
                      strategy=strategy, validate=validate, errors=errors)
 
 
 def utf8_to_utf16(b, n_valid=None, validate: bool = True,
                   ascii_fastpath: bool = True, errors: str = "strict"):
-    """Transcode UTF-8 bytes to UTF-16 code units (little-endian values).
-
-    Returns TranscodeResult(u16_buffer[int32, capacity=len(b)], count,
-    status).  This is the pure-jnp block-parallel reference cell.
-    """
-    _check_errors(errors)
-    return _blockparallel_pair(b, n_valid, "utf8", "utf16", validate,
-                               errors, ascii_fastpath)
+    """DEPRECATED shim: use :func:`transcode` with
+    ``strategy="blockparallel"`` (this wrapper WAS the pure-jnp
+    block-parallel reference cell)."""
+    _warn_deprecated(
+        "utf8_to_utf16",
+        'transcode(b, "utf16", src_format="utf8", strategy="blockparallel")')
+    if not ascii_fastpath:
+        # The generic surface has no ascii_fastpath switch (it is a
+        # kernel-level knob); keep the legacy escape hatch bit-exact.
+        _check_errors(errors)
+        return _blockparallel_pair(b, n_valid, "utf8", "utf16", validate,
+                                   errors, ascii_fastpath=False)
+    return transcode(b, "utf16", src_format="utf8", n_valid=n_valid,
+                     strategy="blockparallel", validate=validate,
+                     errors=errors)
 
 
 def utf8_to_latin1(b, n_valid=None, validate: bool = True,
                    errors: str = "strict", *, strategy: str = "fused"):
-    """Transcode UTF-8 bytes to Latin-1 bytes.
-
-    Returns TranscodeResult(byte_buffer[capacity=len(b)], count, status).
-    ``status`` reports the first ill-formed UTF-8 subpart OR the first
-    code point above U+00FF (at its lead byte's offset); under
-    ``errors="replace"`` both substitute CPython-style (``?``).
-    """
+    """DEPRECATED shim: use :func:`transcode` (``dst_format="latin1"``).
+    Historical default strategy: ``fused``."""
+    _warn_deprecated("utf8_to_latin1",
+                     'transcode(b, "latin1", src_format="utf8")')
     return transcode(b, "latin1", src_format="utf8", n_valid=n_valid,
                      strategy=strategy, validate=validate, errors=errors)
 
 
 def latin1_to_utf8(b, n_valid=None, validate: bool = True,
                    errors: str = "strict", *, strategy: str = "fused"):
-    """Transcode Latin-1 bytes to UTF-8 (never fails: every byte is a
-    code point).  Returns TranscodeResult(byte_buffer[capacity=2*len(b)],
-    count, status)."""
+    """DEPRECATED shim: use :func:`transcode` (``src_format="latin1"``).
+    Historical default strategy: ``fused``."""
+    _warn_deprecated("latin1_to_utf8",
+                     'transcode(b, "utf8", src_format="latin1")')
     return transcode(b, "utf8", src_format="latin1", n_valid=n_valid,
                      strategy=strategy, validate=validate, errors=errors)
 
 
 def latin1_to_utf16(b, n_valid=None, validate: bool = True,
                     errors: str = "strict", *, strategy: str = "fused"):
-    """Transcode Latin-1 bytes to UTF-16 code units (a widening copy)."""
+    """DEPRECATED shim: use :func:`transcode` (``src_format="latin1"``).
+    Historical default strategy: ``fused``."""
+    _warn_deprecated("latin1_to_utf16",
+                     'transcode(b, "utf16", src_format="latin1")')
     return transcode(b, "utf16", src_format="latin1", n_valid=n_valid,
                      strategy=strategy, validate=validate, errors=errors)
 
@@ -403,21 +430,29 @@ def latin1_to_utf16(b, n_valid=None, validate: bool = True,
 def utf16_to_utf32(u, n_valid=None, validate: bool = True,
                    errors: str = "strict", *,
                    strategy: str = "blockparallel"):
-    """Decode UTF-16 units to code points (surrogate pairs folded)."""
+    """DEPRECATED shim: use :func:`transcode` (``dst_format="utf32"``).
+    Historical default strategy: ``blockparallel``."""
+    _warn_deprecated("utf16_to_utf32",
+                     'transcode(u, "utf32", src_format="utf16")')
     return transcode(u, "utf32", src_format="utf16", n_valid=n_valid,
                      strategy=strategy, validate=validate, errors=errors)
 
 
 def utf16_to_utf8(u, n_valid=None, validate: bool = True,
                   ascii_fastpath: bool = True, errors: str = "strict"):
-    """Transcode UTF-16 units to UTF-8 bytes.
-
-    Returns TranscodeResult(byte_buffer[int32, capacity=3*len(u)], count,
-    status).  This is the pure-jnp block-parallel reference cell.
-    """
-    _check_errors(errors)
-    return _blockparallel_pair(u, n_valid, "utf16", "utf8", validate,
-                               errors, ascii_fastpath)
+    """DEPRECATED shim: use :func:`transcode` with
+    ``strategy="blockparallel"`` (this wrapper WAS the pure-jnp
+    block-parallel reference cell)."""
+    _warn_deprecated(
+        "utf16_to_utf8",
+        'transcode(u, "utf8", src_format="utf16", strategy="blockparallel")')
+    if not ascii_fastpath:
+        _check_errors(errors)
+        return _blockparallel_pair(u, n_valid, "utf16", "utf8", validate,
+                                   errors, ascii_fastpath=False)
+    return transcode(u, "utf8", src_format="utf16", n_valid=n_valid,
+                     strategy="blockparallel", validate=validate,
+                     errors=errors)
 
 
 # ---------------------------------------------------------------------------
@@ -433,9 +468,10 @@ def _invalid_scalar(cp):
 def utf32_to_utf8(cp, n_valid=None, validate: bool = True,
                   errors: str = "strict", *,
                   strategy: str = "blockparallel"):
-    """Encode code points as UTF-8.  Unrepresentable scalars substitute
-    U+FFFD in the buffer under BOTH error policies (status locates the
-    first offender; strict callers reject wholesale)."""
+    """DEPRECATED shim: use :func:`transcode` (``src_format="utf32"``).
+    Historical default strategy: ``blockparallel``."""
+    _warn_deprecated("utf32_to_utf8",
+                     'transcode(cp, "utf8", src_format="utf32")')
     return transcode(cp, "utf8", src_format="utf32", n_valid=n_valid,
                      strategy=strategy, validate=validate, errors=errors)
 
@@ -443,7 +479,10 @@ def utf32_to_utf8(cp, n_valid=None, validate: bool = True,
 def utf32_to_utf16(cp, n_valid=None, validate: bool = True,
                    errors: str = "strict", *,
                    strategy: str = "blockparallel"):
-    """Encode code points as UTF-16 (see :func:`utf32_to_utf8`)."""
+    """DEPRECATED shim: use :func:`transcode` (``src_format="utf32"``).
+    Historical default strategy: ``blockparallel``."""
+    _warn_deprecated("utf32_to_utf16",
+                     'transcode(cp, "utf16", src_format="utf32")')
     return transcode(cp, "utf16", src_format="utf32", n_valid=n_valid,
                      strategy=strategy, validate=validate, errors=errors)
 
@@ -580,14 +619,18 @@ def transcode(src, dst_format, *, src_format: str = "utf8", n_valid=None,
 
 def transcode_utf8_to_utf16(b, n_valid=None, *, strategy: str = DEFAULT_STRATEGY,
                             validate: bool = True, errors: str = "strict"):
-    """Strategy-dispatched UTF-8 -> UTF-16.  See module docstring."""
+    """DEPRECATED shim: use :func:`transcode` (``dst_format="utf16"``)."""
+    _warn_deprecated("transcode_utf8_to_utf16",
+                     'transcode(b, "utf16", src_format="utf8")')
     return transcode(b, "utf16", src_format="utf8", n_valid=n_valid,
                      strategy=strategy, validate=validate, errors=errors)
 
 
 def transcode_utf16_to_utf8(u, n_valid=None, *, strategy: str = DEFAULT_STRATEGY,
                             validate: bool = True, errors: str = "strict"):
-    """Strategy-dispatched UTF-16 -> UTF-8.  See module docstring."""
+    """DEPRECATED shim: use :func:`transcode` (``dst_format="utf8"``)."""
+    _warn_deprecated("transcode_utf16_to_utf8",
+                     'transcode(u, "utf8", src_format="utf16")')
     return transcode(u, "utf8", src_format="utf16", n_valid=n_valid,
                      strategy=strategy, validate=validate, errors=errors)
 
@@ -632,7 +675,11 @@ def ragged_scan(data, offsets, lengths, *, src_format: str = "utf8",
 def ragged_utf8_to_utf16(data, offsets, lengths, *, validate: bool = True,
                          errors: str = "strict",
                          strategy: str = DEFAULT_STRATEGY):
-    """Ragged packed-batch UTF-8 -> UTF-16 (the (utf8, utf16) cell)."""
+    """DEPRECATED shim: use :func:`ragged_transcode`."""
+    _warn_deprecated(
+        "ragged_utf8_to_utf16",
+        'ragged_transcode(data, offsets, lengths, src_format="utf8", '
+        'dst_format="utf16")')
     return ragged_transcode(data, offsets, lengths, src_format="utf8",
                             dst_format="utf16", validate=validate,
                             errors=errors, strategy=strategy)
@@ -641,27 +688,32 @@ def ragged_utf8_to_utf16(data, offsets, lengths, *, validate: bool = True,
 def ragged_utf16_to_utf8(data, offsets, lengths, *, validate: bool = True,
                          errors: str = "strict",
                          strategy: str = DEFAULT_STRATEGY):
-    """Ragged packed-batch UTF-16 -> UTF-8 (see ``ragged_utf8_to_utf16``)."""
+    """DEPRECATED shim: use :func:`ragged_transcode`."""
+    _warn_deprecated(
+        "ragged_utf16_to_utf8",
+        'ragged_transcode(data, offsets, lengths, src_format="utf16", '
+        'dst_format="utf8")')
     return ragged_transcode(data, offsets, lengths, src_format="utf16",
                             dst_format="utf8", validate=validate,
                             errors=errors, strategy=strategy)
 
 
 def ragged_scan_utf8(data, offsets, lengths):
-    """Per-document single-scan validation + capacity: (counts, statuses).
-
-    The ragged analogue of :func:`scan_utf8`: ONE counting-pass launch
-    over a packed batch yields every document's UTF-16 capacity and
-    first-error status (document-relative, Python
-    ``UnicodeDecodeError.start`` semantics).  Serve ingress validates a
-    whole wave of prompts with this single read.
-    """
+    """DEPRECATED shim: use :func:`ragged_scan`."""
+    _warn_deprecated(
+        "ragged_scan_utf8",
+        'ragged_scan(data, offsets, lengths, src_format="utf8", '
+        'dst_format="utf16")')
     return ragged_scan(data, offsets, lengths, src_format="utf8",
                        dst_format="utf16")
 
 
 def ragged_scan_utf16(data, offsets, lengths):
-    """Per-document single-scan UTF-16 validation + UTF-8 capacity."""
+    """DEPRECATED shim: use :func:`ragged_scan`."""
+    _warn_deprecated(
+        "ragged_scan_utf16",
+        'ragged_scan(data, offsets, lengths, src_format="utf16", '
+        'dst_format="utf8")')
     return ragged_scan(data, offsets, lengths, src_format="utf16",
                        dst_format="utf8")
 

@@ -53,7 +53,7 @@ from repro.data.tokenizer import BOS_ID, EOS_ID, PAD_ID, ByteTokenizer
 #     is "onepass": one read + one decode, segment scan carried in
 #     SMEM); the dense ragged output is re-padded to the [B, cap]
 #     contract with one gather.  Callers that can consume the dense
-#     layout directly should use ``tc.ragged_utf8_to_utf16`` on a
+#     layout directly should use ``tc.ragged_transcode`` on a
 #     ``packing.pack_documents`` batch and skip both the padding and the
 #     re-pad gather.
 #   * ``strategy="vmap"`` — the padded reference: ``jax.vmap`` of the

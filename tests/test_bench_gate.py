@@ -213,6 +213,31 @@ def test_schema3_ascii_runs_table_and_onepass_column(tmp_path, capsys):
     assert _run(tmp_path, _report_v(BASE, 2), _report_v(fresh, 3)) == 1
 
 
+def test_schema5_serve_table_gates_scheduler_pair(tmp_path, capsys):
+    """The v5 bump: ``table_serve`` carries SCHEDULER columns, gated via
+    the per-table strategy map (continuous gated against the wave
+    reference) instead of the kernel-strategy pair.  Against a schema-4
+    baseline the new table is warned-and-skipped; same-schema, a
+    continuous-throughput regression fails, and relative mode gates the
+    continuous/wave advantage ratio."""
+    fresh = {k: dict(d) for k, d in BASE.items()}
+    fresh[("table_serve", "rps")] = {"continuous": 90.0, "wave": 50.0}
+    # Latency row: no gated key for this table -> reported, never gated.
+    fresh[("table_serve", "latency")] = {
+        "continuous_p99_ms": 400.0, "wave_p99_ms": 700.0}
+    assert _run(tmp_path, _report_v(BASE, 4), _report_v(fresh, 5)) == 0
+    assert "skipping table 'table_serve'" in capsys.readouterr().err
+    assert _run(tmp_path, _report_v(fresh, 5), _report_v(fresh, 5)) == 0
+    slow = {k: dict(d) for k, d in fresh.items()}
+    slow[("table_serve", "rps")] = {"continuous": 40.0, "wave": 50.0}
+    assert _run(tmp_path, _report_v(fresh, 5), _report_v(slow, 5)) == 1
+    # Relative mode: same-machine speed cancels, the eroded
+    # continuous/wave ratio (1.8 -> 0.8) still fails.
+    uniform = {k: {s: v / 4 for s, v in d.items()} for k, d in slow.items()}
+    assert _run(tmp_path, _report_v(fresh, 5), _report_v(uniform, 5),
+                "--mode", "relative") == 1
+
+
 def test_matrix_schema_disjoint_tables_never_pass_vacuously(tmp_path, capsys):
     """If schema skew leaves NO shared table, the gate must fail rather
     than pass with zero gated cells."""

@@ -282,13 +282,13 @@ def test_serve_deadline_expiry_typed():
     res = e.serve([Request(CLEAN, deadline_s=10.0)])[0]
     assert res.ok                            # generous deadline: serves
 
-    orig = e._ingress_batch
+    orig = e._ingress_chunk
 
-    def slow_ingress(reqs, results):
+    def slow_ingress(group, bound, take):
         now[0] += 5.0                        # ingress "takes" 5s
-        return orig(reqs, results)
+        return orig(group, bound, take)
 
-    e._ingress_batch = slow_ingress
+    e._ingress_chunk = slow_ingress
     res = e.serve([Request(CLEAN, deadline_s=1.0),
                    Request(CLEAN, deadline_s=60.0)])
     assert not res[0].ok and res[0].code == eng.REJECTED_DEADLINE

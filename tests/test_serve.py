@@ -1,4 +1,5 @@
-"""Serving engine: ingress validation, batched decode, egress encodings."""
+"""Serving engine: ingress validation, batched decode, egress encodings,
+continuous-batching scheduler and the submit/poll surface."""
 
 import numpy as np
 import pytest
@@ -6,9 +7,10 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+from repro.core import packing
 from repro.models import registry
 from repro.serve import kvcache
-from repro.serve.engine import Engine, Request
+from repro.serve.engine import Engine, Request, ResultCode
 
 
 @pytest.fixture(scope="module")
@@ -193,6 +195,126 @@ def test_matrix_latin1_ingress(engine):
     res = engine.serve([Request(bytes(range(1, 40)) + b"\x80\xff",
                                 in_encoding="latin-1")])[0]
     assert res.ok and res.error_offset == -1
+
+
+def _fresh_engine(**kw):
+    fam, cfg, model = registry.get("bytelm-100m", reduced=True)
+    params = model.init(jax.random.PRNGKey(0))
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_prompt", 64)
+    kw.setdefault("max_new", 8)
+    return Engine(model, cfg, fam, params, **kw)
+
+
+def test_submit_poll_lifecycle(engine):
+    t = engine.submit(Request(b"hello"))
+    assert isinstance(t, int)
+    assert engine.poll(t) is None          # queued, not yet drained
+    engine.drain()
+    res = engine.poll(t)
+    assert res is not None and res.ok and res.code is ResultCode.OK
+    assert engine.poll(t) is None          # poll consumes the result
+    assert t in engine.latencies and engine.latencies[t] >= 0.0
+
+
+def test_submit_invalid_settles_before_drain(engine):
+    t = engine.submit(Request(b""))        # empty prompt: field check
+    res = engine.poll(t)                   # no drain() needed
+    assert res is not None and not res.ok
+    assert res.code is ResultCode.REJECTED_INVALID
+
+
+def test_serve_shim_matches_submit_poll(engine):
+    prompts = [b"aa", b"bbbb", b"c"]
+    shim = engine.serve([Request(p) for p in prompts])
+    tickets = [engine.submit(Request(p)) for p in prompts]
+    engine.drain()
+    direct = [engine.poll(t) for t in tickets]
+    for s, d in zip(shim, direct):
+        assert s.ok and d.ok and s.text_bytes == d.text_bytes
+
+
+def test_scheduler_param_validated():
+    with pytest.raises(ValueError, match="scheduler"):
+        _fresh_engine(scheduler="batch")
+
+
+def test_bucket_boundaries():
+    bounds = packing.bucket_boundaries(64)
+    assert bounds == (8, 12, 18, 27, 40, 60, 64)
+    assert bounds == tuple(sorted(set(bounds)))    # strictly increasing
+    assert packing.bucket_boundaries(4) == (4,)
+    assert packing.bucket_boundaries(9, min_length=8) == (8, 9)
+    with pytest.raises(ValueError):
+        packing.bucket_boundaries(0)
+    with pytest.raises(ValueError):
+        packing.bucket_boundaries(64, step=1.0)
+
+
+def test_continuous_refill_mid_wave():
+    """THE continuous-batching pin: with both slots taken and one request
+    queued, the slot whose request finishes first must re-admit the
+    queued request mid-wave, while its batch-mate is still decoding."""
+    e = _fresh_engine(scheduler="continuous")
+    ta = e.submit(Request(b"aaaa", max_new=2))     # finishes early
+    tb = e.submit(Request(b"bbbb", max_new=8))     # decodes the tail
+    tc_ = e.submit(Request(b"cccc", max_new=2))    # queued: both slots busy
+    e.drain()
+    assert all(e.poll(t).ok for t in (ta, tb, tc_))
+    ev = {(kind, t): (slot, step)
+          for kind, t, slot, step, _wall in e.events}
+    assert ev[("admit", ta)][1] == ev[("admit", tb)][1] == 0
+    finish_a = ev[("finish", ta)]
+    finish_b = ev[("finish", tb)]
+    admit_c = ev[("admit", tc_)]
+    assert finish_a[1] < finish_b[1]               # a really is shorter
+    # Mid-wave: c admitted BEFORE b finished, into a's freed slot.
+    assert admit_c[1] < finish_b[1]
+    assert admit_c[0] == finish_a[0]
+
+
+def test_wave_scheduler_defers_refill():
+    """The wave reference: the queued request is only admitted once the
+    WHOLE wave drained — pinning that the schedulers actually differ."""
+    e = _fresh_engine(scheduler="wave")
+    ta = e.submit(Request(b"aaaa", max_new=2))
+    tb = e.submit(Request(b"bbbb", max_new=8))
+    tc_ = e.submit(Request(b"cccc", max_new=2))
+    e.drain()
+    assert all(e.poll(t).ok for t in (ta, tb, tc_))
+    ev = {(kind, t): (slot, step)
+          for kind, t, slot, step, _wall in e.events}
+    assert ev[("admit", tc_)][1] >= ev[("finish", tb)][1]
+
+
+def test_refilled_slot_inherits_nothing():
+    """A request served through a refilled slot must generate the same
+    tokens as the same request served alone — full-row state replacement
+    leaves nothing of the predecessor behind."""
+    alone = _fresh_engine(scheduler="continuous")
+    want = alone.serve([Request(b"cccc", max_new=4)])[0]
+    e = _fresh_engine(scheduler="continuous")
+    res = e.serve([Request(b"aaaa", max_new=2),
+                   Request(b"bbbb", max_new=8),
+                   Request(b"cccc", max_new=4)])
+    assert res[2].ok and res[2].text_bytes == want.text_bytes
+
+
+def test_bucketed_prefill_shares_compile_cell():
+    """Prompts in the same length bucket pad to the bucket bound: one
+    prefill cell, not one per distinct prompt length."""
+    e = _fresh_engine()
+    res = e.serve([Request(b"abc"), Request(b"abcdefg")])   # both <= 8
+    assert all(r.ok for r in res)
+    prefill_cells = [k for k in e._cells if k[0] == "prefill"]
+    assert prefill_cells == [("prefill", 8)]
+
+
+def test_compile_cache_lru_bounded():
+    e = _fresh_engine(compile_cache_size=2)
+    res = e.serve([Request(b"ab"), Request(b"x" * 20), Request(b"y" * 35)])
+    assert all(r.ok for r in res)
+    assert len(e._cells) <= 2
 
 
 def test_matrix_egress_encodings(engine):
