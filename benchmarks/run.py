@@ -26,8 +26,14 @@ import sys
 # ``table_stream`` (chunked resumable streaming vs whole-buffer); v5
 # added ``table_serve`` (continuous vs wave scheduling on the serve
 # engine — its "strategy" keys are schedulers and its rps row is in
-# requests/s, not Gchars/s).
-SCHEMA = 5
+# requests/s, not Gchars/s); v6 marks the baseline regenerated under
+# the cross-strategy gate pairs on tables 5/6/9 (onepass gated against
+# blockparallel — and against fused on table 6 — see
+# scripts/bench_gate.py TABLE_STRATEGIES): the pairs make the gate's
+# relative mode compare ratios an older report also contains, and any
+# table unique to one side of a v5/v6 comparison warns-and-skips as
+# before.
+SCHEMA = 6
 
 
 def _records(table: str, rows):

@@ -62,8 +62,11 @@ def main():
         show(f"utf8->utf16 [{strat}] matches python", ok)
 
     # Explicit one-pass call on a mixed mostly-ASCII document: the
-    # per-tile ASCII skip keeps clean tiles on the fast path even though
-    # the buffer as a whole is not ASCII.
+    # per-tile class dispatch (DESIGN.md §9) keeps clean tiles on the
+    # ASCII copy path even though the buffer as a whole is not ASCII —
+    # and tiles of dense 2-byte scripts (Arabic, Hebrew, Russian, ...)
+    # take a narrowed ≤2-byte fast path: no 3-/4-byte candidate
+    # assembly, half the staging window, uint16 intermediates.
     mixed = ("The quick brown fox. " * 120 + "速い茶色の狐。").encode("utf-8")
     out, cnt, status = tc.transcode(
         jnp.asarray(np.frombuffer(mixed, np.uint8)), "utf16",

@@ -71,9 +71,22 @@ TILE = 1024
 _DTYPES = {"utf8": np.uint8, "utf16": np.uint16, "utf32": np.uint32,
            "latin1": np.uint8}
 
-# Maximum trailing units a chunk can hold back (a UTF-8 4-byte lead at
-# distance 3 from the end; mirrors stages.driver._MAX_LOOKBACK).
+# Cross-format maximum of the per-format holdback bounds (a UTF-8 4-byte
+# lead at distance 3 from the end) — sizes ``StreamState.pending``.  The
+# per-format bound is :func:`holdback_limit`, which mirrors the codec
+# descriptors' ``max_lookback`` field (stages.Codec): 3 for UTF-8, 1 for
+# UTF-16, 0 for the fixed-width formats.
 MAX_HOLDBACK = 3
+
+
+def holdback_limit(src: str) -> int:
+    """Trailing units a chunk of format ``src`` can ever hold back —
+    the codec's ``max_lookback`` (the same bound the kernels' per-tile
+    class predicates check as boundary inflow)."""
+    # Late import: core.stream is host-side glue; the codec registry
+    # pulls in the kernel stack.
+    from repro.kernels import stages
+    return stages.get_codec(src).max_lookback
 
 
 class StreamState(NamedTuple):
@@ -155,8 +168,11 @@ def _holdback(src: str, buf: np.ndarray) -> int:
     """Trailing units of ``buf`` that may still be claimed forward into
     the next chunk (see module docstring for the per-format rule)."""
     n = buf.shape[0]
+    limit = holdback_limit(src)
+    if limit == 0:
+        return 0                               # utf32 / latin1: fixed width
     if src == "utf8":
-        for k in range(1, min(MAX_HOLDBACK, n) + 1):
+        for k in range(1, min(limit, n) + 1):
             b = int(buf[n - k])
             if b < 0x80:
                 return 0                       # ASCII: complete unit
@@ -165,11 +181,10 @@ def _holdback(src: str, buf: np.ndarray) -> int:
                 return k if need > k else 0
             # else continuation byte: keep walking back
         return 0
-    if src == "utf16":
-        if n and 0xD800 <= int(buf[n - 1]) <= 0xDBFF:
-            return 1
-        return 0
-    return 0                                   # utf32 / latin1: fixed width
+    # utf16 (limit == 1): only a trailing high surrogate is incomplete.
+    if n and 0xD800 <= int(buf[n - 1]) <= 0xDBFF:
+        return 1
+    return 0
 
 
 def _launch(state: StreamState, eff: np.ndarray) -> TranscodeResult:

@@ -27,14 +27,18 @@ Each grid step of the single launch:
      per-tile ever round-trips to the host.
 
 The whole-buffer ASCII ``lax.cond`` of the two-pass wrappers additionally
-becomes a **per-tile** ASCII fast path (paper Algorithm 3 at tile
-granularity, ``stages.driver.onepass_tile``): a pure-ASCII tile whose
-boundary inflow is pure ASCII reduces to a widening copy inside the
-kernel, so mostly-ASCII documents with occasional multibyte spans keep
-the fast path for every ASCII tile instead of falling off it globally.
-(The whole-buffer cond survives in front of the launch — when the entire
-buffer is ASCII, skipping the kernel dispatch outright is strictly
-cheaper than taking the skip tile by tile.)
+becomes a **per-tile three-way class dispatch** (paper Algorithm 3 at
+tile granularity plus the ≤2-byte class, ``stages.driver.onepass_tile``,
+DESIGN.md §9): a pure-ASCII tile with clean boundary inflow reduces to a
+widening copy, a tile whose every code point fits 11 bits takes the
+class-specialized ≤2-byte body (no 3-/4-unit assembly, no surrogate
+folding, half-width uint16 staging), and only genuinely wide tiles pay
+the general speculative decode.  Mostly-ASCII documents keep the copy
+path tile by tile, and dense 2-byte scripts ride the narrowed class
+instead of falling off it globally.  (The whole-buffer cond survives in
+front of the launch — when the entire buffer is ASCII, skipping the
+kernel dispatch outright is strictly cheaper than taking the skip tile
+by tile.)
 
 Results are bit-identical to ``strategy="fused"`` — (buffer, count,
 status) across every matrix cell × ``errors=`` policy (pinned by
@@ -170,7 +174,10 @@ def _transcode_impl(x, n, src, dst, validate, interpret, ascii_fastpath,
 
     if not ascii_fastpath:
         return general(xm)
-    return jax.lax.cond(jnp.all(xm < 0x80), ascii, general, xm)
+    # xm is the codec's (unsigned) storage dtype, so a single max
+    # reduction decides ASCII-ness — measurably cheaper at the µs scale
+    # of this path than materializing a comparison vector for jnp.all.
+    return jax.lax.cond(jnp.max(xm, initial=0) < 0x80, ascii, general, xm)
 
 
 def transcode_onepass(x, n_valid=None, *, src: str, dst: str,

@@ -57,8 +57,10 @@ ownership masks (cross-document inflow zeroing + per-tile live ends) are
 exactly the "per-tile ownership resets" the carry needs.  Per-tile
 ``(total, err, ferr)`` scalars still leave the kernel — they are the
 *product* (the per-document segment reductions consume them), not
-inter-pass coordination.  The per-tile ASCII fast path rides along, so
-an ASCII document packed next to a CJK document keeps its fast path.
+inter-pass coordination.  The per-tile three-way class dispatch (ASCII
+copy / narrowed ≤2-byte body / general, DESIGN.md §9) rides along, so an
+ASCII document packed next to a CJK document keeps its copy path and a
+dense 2-byte document keeps the narrowed class, tile by tile.
 """
 
 from __future__ import annotations

@@ -18,8 +18,9 @@ from repro.kernels.stages import utf16 as s_utf16
 from repro.kernels.stages import utf32 as s_utf32
 from repro.kernels.stages import utf8 as s_utf8
 from repro.kernels.stages.driver import (  # noqa: F401  (re-export)
-    BLOCK, LANES, ROWS, Codec, ascii_tile_pred, count_decoded, count_tile,
-    decode_once, onepass_tile, stage_decoded, stage_units, stage_width,
+    BLOCK, LANES, ROWS, Codec, ascii_tile_pred, count_decoded,
+    count_decoded2, count_tile, decode_once, decode_once2, onepass_tile,
+    stage_decoded, stage_decoded2, stage_units, stage_units2, stage_width,
     write_stage)
 
 import jax.numpy as jnp
@@ -43,6 +44,14 @@ UTF8 = Codec(
     py_unit_len=s_utf8.py_unit_len,
     tables=(T.BYTE_1_HIGH, T.BYTE_1_LOW, T.BYTE_2_HIGH),
     extra_err=_kl_extra_err,
+    max_lookback=3,
+    class2_pred=s_utf8.class2_pred,
+    decode2=s_utf8.decode2,
+    analyze2=s_utf8.analyze2,
+    # UTF-8's class-2 analysis substitutes U+FFFD for in-class garbage
+    # (stray continuations, truncated 2-byte sequences, C0/C1), so the
+    # class stage window must cover the replacement character's encoding.
+    class2_replaces=True,
 )
 
 UTF16 = Codec(
@@ -55,6 +64,11 @@ UTF16 = Codec(
     encode=s_utf16.encode_units,
     max_speculative_cp=s_utf16.MAX_SPECULATIVE_CP,
     py_unit_len=s_utf16.py_unit_len,
+    # Only a trailing high surrogate can reach across a tile boundary.
+    max_lookback=1,
+    class2_pred=s_utf16.class2_pred,
+    decode2=s_utf16.decode2,
+    analyze2=s_utf16.analyze2,
 )
 
 UTF32 = Codec(
@@ -67,6 +81,11 @@ UTF32 = Codec(
     encode=s_utf32.encode_units,
     max_speculative_cp=s_utf32.MAX_SPECULATIVE_CP,
     py_unit_len=s_utf32.py_unit_len,
+    # Fixed-width source: characters never span a tile boundary.
+    max_lookback=0,
+    class2_pred=s_utf32.class2_pred,
+    decode2=s_utf32.decode2,
+    analyze2=s_utf32.analyze2,
 )
 
 LATIN1 = Codec(
@@ -80,6 +99,9 @@ LATIN1 = Codec(
     max_speculative_cp=s_latin1.MAX_SPECULATIVE_CP,
     py_unit_len=s_latin1.py_unit_len,
     encode_bad=s_latin1.encode_bad,
+    # Fixed-width source; the general path is already 2-byte-max work,
+    # so the ≤2-byte class is disabled (class2_pred=None).
+    max_lookback=0,
 )
 
 CODECS = {c.name: c for c in (UTF8, UTF16, UTF32, LATIN1)}

@@ -17,6 +17,14 @@ sides of the code-point intermediate:
   encode side   ``unit_len`` / ``encode`` (candidate unit planes per code
                 point, paper §5), plus optional ``encode_bad`` for
                 destinations that cannot represent every scalar (Latin-1).
+  class side    ``max_lookback`` (how far a character can claim backward
+                across a tile boundary — 3 source units for UTF-8, 1 for
+                UTF-16, 0 for the fixed-width formats) and the optional
+                ≤2-byte tile class (``class2_pred`` / ``decode2`` /
+                ``analyze2``): a per-tile predicate plus specialized
+                decode/analysis bodies with no 3-/4-unit assembly and no
+                surrogate folding, for tiles whose every code point fits
+                in 11 bits (DESIGN.md §9 tile-class dispatch).
 
 :func:`count_tile` and :func:`write_stage` compose any pair of codecs
 into the fused pipeline's two passes (DESIGN.md §5/§8); the per-pair tile
@@ -27,7 +35,10 @@ decode / maximal-subpart analysis of the tile), :func:`count_decoded`
 (lengths + fused validation over the decoded lanes) and
 :func:`stage_decoded` (in-tile compaction of the decoded lanes) — so the
 single-pass pipeline (:func:`onepass_tile`, DESIGN.md §9) can run count
-AND write off one decode instead of re-decoding the tile per pass.
+AND write off one decode instead of re-decoding the tile per pass.  Each
+primitive has a class-specialized twin (:func:`decode_once2` /
+:func:`count_decoded2` / :func:`stage_decoded2`) for the ≤2-byte tile
+class.
 
 Stage windows are sized from first principles instead of per-pair
 constants: the speculative worst case is ``dst.py_unit_len(src.
@@ -35,7 +46,10 @@ max_speculative_cp)`` units per source lane (:func:`stage_units`).  This
 derivation fixed a real overflow of the hand-sized UTF-16→UTF-8 bound —
 garbage dense in high surrogates folds to pair code points above
 U+10000 at *every* lane (4 candidate bytes each, 4·BLOCK total), past the
-old ``3*BLOCK + 1`` stage.
+old ``3*BLOCK + 1`` stage.  The ≤2-byte class narrows the same
+derivation to ``dst.py_unit_len(0x7FF)`` units per lane
+(:func:`stage_units2`) — half the window for a UTF-8 destination, a
+quarter of the speculative UTF-16-source worst case.
 """
 
 from __future__ import annotations
@@ -73,6 +87,23 @@ class Codec(NamedTuple):
     tables: Tuple = ()        # VMEM-resident validation tables (np arrays)
     extra_err: Optional[Callable] = None   # (x, xp, *tables) -> bool map
     encode_bad: Optional[Callable] = None  # cp -> bool (unencodable)
+    # Source units of the previous tile that can still be part of a
+    # character (or error subpart) reaching into the current tile: 3 for
+    # UTF-8 (a 4-byte lead at the last position), 1 for UTF-16 (a high
+    # surrogate), 0 for the fixed-width formats.  The per-tile ASCII and
+    # ≤2-byte class predicates check exactly this inflow window, so
+    # fixed-width sources no longer pay a UTF-8-sized 3-lane check.
+    max_lookback: int = 3
+    # ≤2-byte tile class (optional; None disables the class for this
+    # source format — e.g. Latin-1, whose general path is already
+    # 2-byte-max).  ``class2_pred(x, xp) -> bool`` must be True only when
+    # decode2/analyze2 are lanewise bit-identical to decode/analyze on
+    # the tile; ``class2_replaces`` marks sources whose class-2 analysis
+    # can substitute U+FFFD (stage sizing must then cover its encoding).
+    class2_pred: Optional[Callable] = None   # (x, xp) -> bool scalar
+    decode2: Optional[Callable] = None       # (x, xp, xn) -> (cp, is_lead)
+    analyze2: Optional[Callable] = None      # (x, xp, xn) -> analysis dict
+    class2_replaces: bool = False
 
 
 def stage_units(src: Codec, dst: Codec) -> int:
@@ -85,19 +116,26 @@ def stage_width(src: Codec, dst: Codec) -> int:
     return BLOCK * stage_units(src, dst)
 
 
+def stage_units2(src: Codec, dst: Codec) -> int:
+    """Destination units per lane inside the ≤2-byte tile class.
+
+    Every in-class code point fits in 11 bits, so the bound is
+    ``dst.py_unit_len(0x7FF)`` — plus, for sources whose class-2 analysis
+    can substitute U+FFFD (UTF-8 under ``errors="replace"``), enough room
+    for the replacement character's encoding.  (For every enabled cell
+    the two coincide: U+FFFD is 1 unit in all of UTF-8's destinations.)
+    """
+    u = int(dst.py_unit_len(0x7FF))
+    if src.class2_replaces:
+        u = max(u, int(dst.py_unit_len(0xFFFD)))
+    return u
+
+
 def _encode_err(dst: Codec, a, live):
     """Encode-side error map over analyzed unit starts (Latin-1 egress)."""
     if dst.encode_bad is None:
         return a["err"] & live
     return (a["err"] | (dst.encode_bad(a["cp"]) & a["starts"])) & live
-
-
-# How many trailing source units of the previous tile can still be part
-# of a character (or error subpart) that reaches into the current tile:
-# 3 bytes for UTF-8 (a 4-byte lead at the last position), 1 unit for
-# UTF-16 (a high surrogate), 0 for the fixed-width formats.  The per-tile
-# ASCII fast path checks this inflow window conservatively.
-_MAX_LOOKBACK = 3
 
 
 def decode_once(src: Codec, x, xp, xn, *, errors: str, validate: bool):
@@ -116,6 +154,22 @@ def decode_once(src: Codec, x, xp, xn, *, errors: str, validate: bool):
     if errors == "replace":
         return a, a["cp"], a["starts"]
     cp, is_lead = src.decode(x, xp, xn)
+    return a, cp, is_lead
+
+
+def decode_once2(src: Codec, x, xp, xn, *, errors: str, validate: bool):
+    """Class-specialized :func:`decode_once` for a ≤2-byte tile.
+
+    Same contract, but through ``src.decode2`` / ``src.analyze2``: no
+    3-/4-unit candidate assembly, no surrogate folding, and a claim
+    window of ONE previous lane instead of three.  Only valid on tiles
+    where ``src.class2_pred`` holds.
+    """
+    need_analysis = validate or errors == "replace"
+    a = src.analyze2(x, xp, xn) if need_analysis else None
+    if errors == "replace":
+        return a, a["cp"], a["starts"]
+    cp, is_lead = src.decode2(x, xp, xn)
     return a, cp, is_lead
 
 
@@ -148,6 +202,69 @@ def count_decoded(src: Codec, dst: Codec, a, cp, lead, x, xp, live, gidx,
     return tot, err_flag, ferr
 
 
+def count_decoded2(src: Codec, dst: Codec, a, cp, lead, live, gidx, *,
+                   validate: bool):
+    """Class-specialized :func:`count_decoded` for a ≤2-byte tile.
+
+    The extra Keiser-Lemire detector is skipped (its three nibble-table
+    gathers are the most expensive part of the count): within the class
+    the maximal-subpart map flags every invalid stream on its own, and
+    the first-error offset always came from the subpart map — so the
+    sticky per-document ``(err, ferr)`` folds are unchanged even though
+    a per-tile flag may fire in a different tile than KL would have.
+    """
+    tot = jnp.sum(jnp.where(lead & live, dst.unit_len(cp), 0))
+    if validate:
+        sub = _encode_err(dst, a, live)
+        err_flag = jnp.max(sub.astype(jnp.int32))
+        ferr = jnp.min(jnp.where(sub, gidx, _IMAX))
+    else:
+        err_flag = jnp.int32(0)
+        ferr = jnp.int32(_IMAX)
+    return tot, err_flag, ferr
+
+
+def _compress_gather(eff, planes, width: int, narrow: bool = False):
+    """In-tile compress-store as rank-search + gather (no scatter).
+
+    The paper compacts with ``vpcompressb``; the first TPU formulation
+    here scattered each candidate plane to its lane's exclusive unit rank
+    (``stage.at[rank + j].set(plane)``).  Scatters are the slowest
+    primitive on every backend that serializes them (XLA:CPU runs this
+    interpret-mode CI ~100x slower per element than a gather), so the
+    masked-store is re-expressed gather-side: output slot ``k`` finds its
+    source lane by **binary search over the nondecreasing rank vector**
+    (rightmost lane ``pos`` with ``rank[pos] <= k`` — log2(BLOCK) steps,
+    each one compare + one gather), takes plane ``j = k - rank[pos]``,
+    and gathers ``planes[j][pos]`` from a lane-major stack.  Slack slots
+    (``k >= total``) read as zeros, exactly like the scatter's untouched
+    initialization, so the result is bit-identical.
+
+    ``eff`` is the per-lane effective unit count (0 at dead lanes);
+    ``planes`` the candidate unit planes (flat, BLOCK lanes each);
+    ``narrow`` stacks the gather source in uint16 — legal whenever every
+    candidate unit fits 16 bits (the ≤2-byte class) — halving the
+    traffic of the widest step.  Returns the int32 stage window.
+    """
+    rank, tot = compaction.tile_exclusive_scan(eff, rows=ROWS)
+    nun = len(planes)
+    flat = jnp.stack([p.reshape(-1) for p in planes], axis=-1).reshape(-1)
+    if narrow:
+        flat = flat.astype(jnp.uint16)
+    k = jnp.arange(width, dtype=jnp.int32)
+    pos = jnp.zeros((width,), jnp.int32)
+    step = BLOCK >> 1
+    while step:
+        cand = pos + step
+        ok = (cand < BLOCK) & (rank[jnp.minimum(cand, BLOCK - 1)] <= k)
+        pos = jnp.where(ok, cand, pos)
+        step >>= 1
+    j = k - rank[pos]
+    idx = jnp.clip(pos * nun + j, 0, BLOCK * nun - 1)
+    val = flat[idx].astype(jnp.int32)
+    return jnp.where(k < tot, val, 0)
+
+
 def stage_decoded(src: Codec, dst: Codec, cp, lead, instream):
     """In-tile compaction of an already-decoded tile: the staging body.
 
@@ -156,18 +273,26 @@ def stage_decoded(src: Codec, dst: Codec, cp, lead, instream):
     """
     live = (lead & instream).reshape(-1)
     eff = jnp.where(live, dst.unit_len(cp).reshape(-1), 0)
-    rank, _tot = compaction.tile_exclusive_scan(eff, rows=ROWS)
-    cands = dst.encode(cp)
-    width = stage_width(src, dst)
-    # In-register compress-store (vpcompressb analogue): scatter the
-    # 1..stage_units candidate units of each live lane to base-relative
-    # rank inside VMEM; lanes shorter than the plane index drop out.
-    stage = jnp.zeros((width,), jnp.int32)
-    for j, plane in enumerate(cands):
-        sel = live if j == 0 else live & (eff >= j + 1)
-        stage = stage.at[jnp.where(sel, rank + j, width)].set(
-            plane.reshape(-1), mode="drop")
-    return stage
+    nun = stage_units(src, dst)
+    cands = dst.encode(cp)[:nun]
+    return _compress_gather(eff, cands, stage_width(src, dst))
+
+
+def stage_decoded2(src: Codec, dst: Codec, cp, lead, instream):
+    """Class-specialized :func:`stage_decoded` for a ≤2-byte tile.
+
+    Same compaction, but over ``stage_units2`` candidate planes and a
+    ``BLOCK * stage_units2`` window (the class bounds every code point's
+    encoding), with the gather source held in uint16 — the narrowest
+    dtype the class allows — instead of int32.  The caller zero-pads the
+    result up to the general window so the class branches of the
+    dispatch ``lax.cond`` agree on shape.
+    """
+    live = (lead & instream).reshape(-1)
+    eff = jnp.where(live, dst.unit_len(cp).reshape(-1), 0)
+    nun = stage_units2(src, dst)
+    cands = dst.encode(cp)[:nun]
+    return _compress_gather(eff, cands, BLOCK * nun, narrow=True)
 
 
 def count_tile(src: Codec, dst: Codec, x, xp, xn, live, gidx, tables, *,
@@ -196,23 +321,26 @@ def write_stage(src: Codec, dst: Codec, x, xp, xn, instream, *,
     return stage_decoded(src, dst, cp, lead, instream)
 
 
-def ascii_tile_pred(x, xp):
+def ascii_tile_pred(x, xp, lookback: int = 3):
     """Per-tile ASCII fast-path predicate (paper Algorithm 3 at tile
     granularity).
 
     True when every lane of the tile is plain ASCII AND the boundary
-    inflow — the trailing ``_MAX_LOOKBACK`` lanes of the previous tile,
-    which are the only lanes whose characters (or error subparts) can
-    reach into this tile — is pure ASCII too.  The inflow guard is
-    deliberately conservative: a previous tile ending in a lead or
-    continuation byte sends the tile down the general path even though a
-    pure-ASCII tile can never be claimed by it.  The lower bound matters:
-    lanes are int32 here, so a garbage UTF-32 scalar like 0xFFFFFFFF
-    wraps negative and must not ride the copy path.
+    inflow — the trailing ``lookback`` lanes of the previous tile
+    (``src.max_lookback``: 3 for UTF-8, 1 for UTF-16, 0 for the
+    fixed-width formats), which are the only lanes whose characters (or
+    error subparts) can reach into this tile — is pure ASCII too.  The
+    inflow guard is deliberately conservative: a previous tile ending in
+    a lead or continuation byte sends the tile down the general path
+    even though a pure-ASCII tile can never be claimed by it.  The lower
+    bound matters: lanes are int32 here, so a garbage UTF-32 scalar like
+    0xFFFFFFFF wraps negative and must not ride the copy path.
     """
-    tail = xp.reshape(-1)[-_MAX_LOOKBACK:]
-    return jnp.all((x >= 0) & (x < 0x80)) & \
-        jnp.all((tail >= 0) & (tail < 0x80))
+    ok = jnp.all((x >= 0) & (x < 0x80))
+    if lookback > 0:
+        tail = xp.reshape(-1)[-lookback:]
+        ok = ok & jnp.all((tail >= 0) & (tail < 0x80))
+    return ok
 
 
 def onepass_tile(src: Codec, dst: Codec, x, xp, xn, live, gidx, tables, *,
@@ -223,12 +351,26 @@ def onepass_tile(src: Codec, dst: Codec, x, xp, xn, live, gidx, tables, *,
     pass's three per-tile scalars plus the write pass's compact stage
     window, computed from ONE decode/analysis of the tile (the fused
     two-pass pipeline decodes every tile twice).  With ``ascii_skip``
-    the whole body sits behind a per-tile ``lax.cond``: a pure-ASCII
-    tile with pure-ASCII boundary inflow (:func:`ascii_tile_pred`)
-    reduces to a widening copy — live lanes are a prefix of the tile and
-    dead lanes are already zero, so the copy IS the compact stage — and
-    mostly-ASCII documents with occasional multibyte spans no longer
-    fall off the fast path globally.
+    the whole body sits behind a nested per-tile ``lax.cond`` — the
+    three-way tile-class dispatch of DESIGN.md §9:
+
+      ASCII     pure-ASCII tile, pure-ASCII boundary inflow
+                (:func:`ascii_tile_pred` over ``src.max_lookback``
+                lanes): reduces to a widening copy — live lanes are a
+                prefix and dead lanes already zero, so the copy IS the
+                compact stage.
+      ≤2-byte   every lane in the source's 11-bit class and the inflow
+                window clean (``src.class2_pred``): the specialized
+                decode2/analyze2 bodies (no 3-/4-unit assembly, no
+                surrogate folding, no Keiser-Lemire gathers) feed a
+                half-width uint16 compaction (:func:`stage_decoded2`),
+                zero-padded up to the general window.
+      general   everything else: the full speculative decode / subpart
+                analysis / worst-case-width staging.
+
+    Each class is lanewise bit-identical to the general body wherever
+    its predicate admits a tile, so dispatch on/off (``ascii_skip``)
+    never changes (buffer, count, status).
     """
     width = stage_width(src, dst)
 
@@ -243,6 +385,18 @@ def onepass_tile(src: Codec, dst: Codec, x, xp, xn, live, gidx, tables, *,
     if not ascii_skip:
         return general((x, xp, xn))
 
+    def class2(ops):
+        x, xp, xn = ops
+        a, cp, lead = decode_once2(src, x, xp, xn, errors=errors,
+                                   validate=validate)
+        tot, err, ferr = count_decoded2(src, dst, a, cp, lead, live, gidx,
+                                        validate=validate)
+        stage = stage_decoded2(src, dst, cp, lead, live)
+        if width > stage.shape[0]:
+            stage = jnp.concatenate(
+                [stage, jnp.zeros((width - stage.shape[0],), jnp.int32)])
+        return tot, err, ferr, stage
+
     def ascii(ops):
         x, _xp, _xn = ops
         # ASCII lanes are 1 destination unit in every matrix format and
@@ -255,5 +409,12 @@ def onepass_tile(src: Codec, dst: Codec, x, xp, xn, live, gidx, tables, *,
                 [flat, jnp.zeros((width - flat.shape[0],), jnp.int32)])
         return tot, jnp.int32(0), jnp.int32(_IMAX), flat
 
-    return jax.lax.cond(ascii_tile_pred(x, xp), ascii, general,
-                        (x, xp, xn))
+    if src.class2_pred is None:
+        inner = general
+    else:
+        def inner(ops):
+            return jax.lax.cond(src.class2_pred(ops[0], ops[1]),
+                                class2, general, ops)
+
+    return jax.lax.cond(ascii_tile_pred(x, xp, src.max_lookback),
+                        ascii, inner, (x, xp, xn))

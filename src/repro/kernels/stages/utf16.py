@@ -80,6 +80,36 @@ def encode_tile(u, up, un):
 
 
 # ---------------------------------------------------------------------------
+# ≤2-byte tile class: units below 0x800 carry no surrogate halves, so
+# decode is the identity and analysis is all-valid.  No inflow check is
+# needed: a unit below 0x800 is never a low surrogate, so a trailing
+# high surrogate in the previous tile cannot claim into this tile (its
+# unpaired-half error is flagged in ITS tile via one unit of lookahead).
+
+
+def class2_pred(u, up):
+    del up
+    return jnp.all((u >= 0) & (u < 0x800))
+
+
+def decode2(u, up, un):
+    del up, un
+    return u, jnp.ones(u.shape, bool)
+
+
+def analyze2(u, up, un):
+    del up, un
+    ones = jnp.ones(u.shape, bool)
+    return {
+        "starts": ones,
+        "valid": ones,
+        "cp": u,
+        "units": ones.astype(jnp.int32),
+        "err": jnp.zeros(u.shape, bool),
+    }
+
+
+# ---------------------------------------------------------------------------
 # Encode side: code points -> candidate UTF-16 units.
 
 

@@ -44,6 +44,34 @@ def analyze_tile(x, xp, xn):
 
 
 # ---------------------------------------------------------------------------
+# ≤2-byte tile class: scalars at or below 0x7FF are always valid (no
+# surrogates, no overflow possible), so both class bodies are the
+# identity — the range check itself is the class predicate.
+
+
+def class2_pred(x, xp):
+    del xp
+    return jnp.all((x >= 0) & (x <= 0x7FF))
+
+
+def decode2(x, xp, xn):
+    del xp, xn
+    return x, jnp.ones(x.shape, bool)
+
+
+def analyze2(x, xp, xn):
+    del xp, xn
+    ones = jnp.ones(x.shape, bool)
+    return {
+        "starts": ones,
+        "valid": ones,
+        "cp": x,
+        "units": ones.astype(jnp.int32),
+        "err": jnp.zeros(x.shape, bool),
+    }
+
+
+# ---------------------------------------------------------------------------
 # Encode side: identity.
 
 

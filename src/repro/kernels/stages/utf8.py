@@ -125,6 +125,66 @@ def analyze_tile(b, bp, bn):
 
 
 # ---------------------------------------------------------------------------
+# ≤2-byte tile class (driver.onepass_tile dispatch, DESIGN.md §9): the
+# restriction of the bodies above to tiles where every byte — and the
+# 3-byte inflow window — is below 0xE0.  No 3-/4-byte candidate assembly,
+# one lane of claim context instead of three.
+
+
+def class2_pred(b, bp):
+    """True when the tile (and its 3-lane inflow) holds only ASCII,
+    2-byte leads, stray continuations and the C0/C1 overlongs — i.e. no
+    byte that could start or extend a 3-/4-byte sequence.  Within that
+    class :func:`decode2` / :func:`analyze2` are lanewise bit-identical
+    to :func:`speculative_decode` / :func:`analyze_tile`.
+    """
+    tail = bp.reshape(-1)[-3:]
+    return (jnp.all((b >= 0) & (b < 0xE0))
+            & jnp.all((tail >= 0) & (tail < 0xE0)))
+
+
+def decode2(b, bp, bn):
+    """Class-specialized speculative decode: 1-/2-byte assembly only."""
+    del bp
+    b1 = shift_left_flat(b, bn, 1)
+    cp = jnp.where(b < 0x80, b, ((b & 0x1F) << 6) | (b1 & 0x3F))
+    is_lead = (b < 0x80) | (b >= 0xC0)
+    return jnp.where(is_lead, cp, 0), is_lead
+
+
+def analyze2(b, bp, bn):
+    """Class-specialized maximal-subpart analysis.
+
+    With every byte below 0xE0, strict lead lengths are 0/1/2, so of
+    ``analyze_subparts``'s three claim terms only the 2-byte one
+    survives and the first-continuation range is always the default
+    80..BF.  Term-by-term restriction of
+    :func:`repro.core.utf8.analyze_subparts`.
+    """
+    nxt1 = shift_left_flat(b, bn, 1)
+    prv1 = shift_right_flat(b, bp, 1)
+
+    # Strict lead length (C0/C1 overlongs are invalid leads -> 0).
+    L = jnp.where(b < 0x80, 1,
+        jnp.where((b >= 0xC2) & (b < 0xE0), 2, 0))
+    is_cont = (b & 0xC0) == 0x80
+    claimed = (prv1 >= 0xC2) & (prv1 <= 0xDF) & is_cont
+    starts = ~claimed
+    c1ok = (nxt1 & 0xC0) == 0x80
+    valid = starts & ((L == 1) | ((L == 2) & c1ok))
+
+    cp = jnp.where(L == 2, ((b & 0x1F) << 6) | (nxt1 & 0x3F), b)
+    cp = jnp.where(valid, cp, jnp.where(starts, 0xFFFD, 0))
+    return {
+        "starts": starts,
+        "valid": valid,
+        "cp": cp,
+        "units": starts.astype(jnp.int32),
+        "err": starts & ~valid,
+    }
+
+
+# ---------------------------------------------------------------------------
 # Encode side: code points -> candidate UTF-8 bytes (paper §5).
 
 

@@ -46,8 +46,15 @@ Scheduling observability: ``Engine.events`` records the slot lifecycle
 of the most recent :meth:`drain` as ``(kind, ticket, slot, step, wall)``
 tuples (``kind`` in ``"admit"`` / ``"finish"`` / ``"reject"``, ``step``
 the global decode-step counter) — the continuous-vs-wave benchmark and
-the mid-wave-refill test both read it.  ``Engine.latencies`` maps every
-settled ticket to its submit→settle wall time.
+the mid-wave-refill test both read it.  ``Engine.latencies`` maps
+recently settled tickets to their submit→settle wall time.  Both are
+**bounded** — ``events`` is a ring buffer (``event_limit`` newest
+entries) and ``latencies`` an insertion-ordered window (``latency_window``
+newest settles, oldest evicted like the compile-cache LRU) — so a
+long-running engine's memory footprint is flat no matter how many
+tickets it serves.  Rolling nearest-rank percentiles over the latency
+window are published as ``counters["latency_p50_ms"]`` /
+``counters["latency_p99_ms"]`` on every settle.
 """
 
 from __future__ import annotations
@@ -155,7 +162,8 @@ class Engine:
                  clock=time.monotonic, sleep=time.sleep,
                  scheduler: str = "continuous",
                  bucket_min: int = 8, bucket_step: float = 1.5,
-                 compile_cache_size: int = 32):
+                 compile_cache_size: int = 32,
+                 latency_window: int = 1024, event_limit: int = 4096):
         if scheduler not in ("continuous", "wave"):
             raise ValueError(
                 f"scheduler must be 'continuous' or 'wave', got {scheduler!r}")
@@ -202,8 +210,17 @@ class Engine:
         self._deadlines: Dict[int, float] = {}
         # Settled-ticket latency (submit -> settle, seconds) and the slot
         # lifecycle of the most recent drain() (see module docstring).
-        self.latencies: Dict[int, float] = {}
-        self.events: List[tuple] = []
+        # Both are bounded: a long-running engine settles unboundedly many
+        # tickets, so `latencies` keeps only the newest `latency_window`
+        # entries (insertion-ordered eviction, like the compile cache) and
+        # `events` is a ring buffer of the newest `event_limit` tuples.
+        self.latencies: "collections.OrderedDict[int, float]" = \
+            collections.OrderedDict()
+        self._latency_window = latency_window
+        # Sorted view of the latency window for O(1) rolling percentiles.
+        self._lat_sorted: List[float] = []
+        self.events: collections.deque = collections.deque(
+            maxlen=event_limit)
         self._step = 0
         # LRU-bounded compile cache, one jitted cell per (kind, bucket,
         # errors-policy) — the ``_BATCH_CACHE`` pattern: hit refreshes
@@ -280,7 +297,22 @@ class Engine:
         self._deadlines.pop(ticket, None)
         t0 = self._submit_t.pop(ticket, None)
         if t0 is not None:
-            self.latencies[ticket] = self._clock() - t0
+            lat = self._clock() - t0
+            # Self-heal the sorted view if a consumer cleared/mutated the
+            # public window externally (the serve benchmark does).
+            if len(self._lat_sorted) != len(self.latencies):
+                self._lat_sorted = sorted(self.latencies.values())
+            self.latencies[ticket] = lat
+            bisect.insort(self._lat_sorted, lat)
+            while len(self.latencies) > self._latency_window:
+                _t, old = self.latencies.popitem(last=False)
+                del self._lat_sorted[bisect.bisect_left(self._lat_sorted,
+                                                        old)]
+            # Rolling nearest-rank percentiles over the bounded window.
+            s = self._lat_sorted
+            self.counters["latency_p50_ms"] = s[(len(s) - 1) // 2] * 1e3
+            self.counters["latency_p99_ms"] = \
+                s[(len(s) - 1) * 99 // 100] * 1e3
 
     def submit(self, request: Request) -> int:
         """Admit one request; returns its ticket (an int).
@@ -357,7 +389,7 @@ class Engine:
         """Run the continuous-batching loop until every queued request
         settles.  Resets :attr:`events` and the step counter."""
         B = self.max_batch
-        self.events = []
+        self.events.clear()
         self._step = 0
         if not self._pending:
             return

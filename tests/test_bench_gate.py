@@ -246,6 +246,50 @@ def test_matrix_schema_disjoint_tables_never_pass_vacuously(tmp_path, capsys):
     assert "nothing gated" in capsys.readouterr().err
 
 
+def test_schema6_cross_strategy_pairs(tmp_path):
+    """The v6 bump (ISSUE 8): tables 5/6/9 gate cross-strategy pairs —
+    onepass (the dispatch default) against blockparallel on every cell,
+    and additionally against fused on table 6 — so a "default loses to
+    its reference" regression fails the gate on its own, independent of
+    the fused/blockparallel pair."""
+    cells = {
+        ("table5", "arabic"): {"onepass": 1.2, "fused": 0.8,
+                               "blockparallel": 1.0},
+        ("table6", "latin"): {"onepass": 3.0, "fused": 2.9,
+                              "blockparallel": 1.0},
+        ("table9", "arabic"): {"onepass": 1.5, "fused": 0.9,
+                               "blockparallel": 1.0},
+    }
+    assert _run(tmp_path, _report_v(cells, 6), _report_v(cells, 6)) == 0
+    # Absolute mode: an onepass-only regression fails even though every
+    # fused cell holds.
+    slow = {k: dict(d) for k, d in cells.items()}
+    slow[("table5", "arabic")]["onepass"] = 0.5
+    assert _run(tmp_path, _report_v(cells, 6), _report_v(slow, 6)) == 1
+    # Relative mode: eroding ONLY the onepass/fused advantage on table6
+    # (fused speeds up, onepass/blockparallel pair unchanged by uniform
+    # machine-speed cancellation) fails via the (onepass, fused) pair.
+    er = {k: dict(d) for k, d in cells.items()}
+    er[("table6", "latin")]["fused"] = 6.0     # onepass/fused 1.03 -> 0.5
+    assert _run(tmp_path, _report_v(cells, 6), _report_v(er, 6),
+                "--mode", "relative") == 1
+
+
+def test_schema5_vs_6_warn_and_skip(tmp_path, capsys):
+    """v5 -> v6 version skew follows the standard rule: tables unique to
+    one side warn-and-skip, shared tables still gate — including the new
+    v6 cross-strategy pairs on cells both sides carry."""
+    base5 = {("table5", "arabic"): {"onepass": 1.2, "fused": 0.8,
+                                    "blockparallel": 1.0}}
+    fresh6 = {k: dict(d) for k, d in base5.items()}
+    fresh6[("table_future", "x")] = {"fused": 1.0, "blockparallel": 0.5}
+    assert _run(tmp_path, _report_v(base5, 5), _report_v(fresh6, 6)) == 0
+    assert "skipping table 'table_future'" in capsys.readouterr().err
+    # The shared table's onepass pair still gates across the skew.
+    fresh6[("table5", "arabic")]["onepass"] = 0.4
+    assert _run(tmp_path, _report_v(base5, 5), _report_v(fresh6, 6)) == 1
+
+
 def test_schema4_stream_table(tmp_path, capsys):
     """The v4 bump: a schema-4 fresh run adds ``table_stream`` (chunked
     resumable streaming vs whole-buffer).  Its rows carry the gated

@@ -346,6 +346,113 @@ def test_onepass_utf32_garbage_does_not_ride_the_skip():
 
 
 # ---------------------------------------------------------------------------
+# Tile-class dispatch: the ≤2-byte class (DESIGN.md §9).
+
+
+def test_onepass_two_byte_straddling_class_transitions():
+    """2-byte sequences straddling every (ASCII | ≤2-byte | general)
+    class transition: tile 0 is pure ASCII, tile 1 pure 2-byte (the
+    ≤2-byte class), tile 2 holds 3-byte CJK (general), with a 2-byte
+    character split across BOTH tile boundaries.  The per-tile classes
+    differ but the compact output must stay bit-identical to fused."""
+    buf = np.full(3 * BLOCK, 0x61, np.uint8)
+    two = np.frombuffer("ب".encode("utf-8"), np.uint8)        # 0xD8 0xA8
+    buf[BLOCK + 2: 2 * BLOCK - 2: 2] = two[0]
+    buf[BLOCK + 3: 2 * BLOCK - 1: 2] = two[1]
+    cjk = np.frombuffer("中".encode("utf-8"), np.uint8)
+    buf[2 * BLOCK + 10: 2 * BLOCK + 13] = cjk
+    # Straddle ASCII->class2: lead at BLOCK-1, continuation at BLOCK.
+    buf[BLOCK - 1], buf[BLOCK] = two[0], two[1]
+    # Straddle class2->general: lead at 2*BLOCK-1, continuation after.
+    buf[2 * BLOCK - 1], buf[2 * BLOCK] = two[0], two[1]
+    for errors in ("strict", "replace"):
+        a = op.utf8_to_utf16_onepass(jnp.asarray(buf), len(buf),
+                                     errors=errors)
+        f = ft.utf8_to_utf16_fused(jnp.asarray(buf), len(buf),
+                                   errors=errors)
+        _assert_identical(a, f, errors)
+    want = np.frombuffer(bytes(buf).decode("utf-8").encode("utf-16-le"),
+                         np.uint16)
+    assert int(a.count) == len(want)
+    assert np.array_equal(np.asarray(a.buffer)[: len(want)], want)
+
+
+@pytest.mark.parametrize("tail", [b"\xe4\xb8", b"\xf0\x9f\x92", b"\xe4",
+                                  b"\xf0"])
+def test_onepass_class2_tile_with_wide_lead_inflow(tail):
+    """A tile of pure 2-byte content whose PREVIOUS tile ends in a
+    truncated 3-/4-byte lead: the inflow window disqualifies the ≤2-byte
+    class (its 1-lane claim logic cannot represent the wide lead's
+    claim), so the general path must handle the boundary — bit-identical
+    to fused, with the truncated lead's error located in its own tile."""
+    two = np.frombuffer("ب".encode("utf-8"), np.uint8)
+    for errors in ("strict", "replace"):
+        buf = np.full(3 * BLOCK, 0x61, np.uint8)
+        buf[BLOCK + 2: 2 * BLOCK - 2: 2] = two[0]
+        buf[BLOCK + 3: 2 * BLOCK - 1: 2] = two[1]
+        buf[BLOCK - len(tail): BLOCK] = np.frombuffer(tail, np.uint8)
+        a = op.utf8_to_utf16_onepass(jnp.asarray(buf), len(buf),
+                                     errors=errors)
+        f = ft.utf8_to_utf16_fused(jnp.asarray(buf), len(buf),
+                                   errors=errors)
+        _assert_identical(a, f, (tail, errors))
+
+
+def test_onepass_surrogate_flood_not_claimed_by_class2():
+    """UTF-16 surrogate-flood garbage (every lane a lone or paired
+    surrogate half) sits entirely OUTSIDE the ≤2-byte class predicate:
+    the general path must classify it, and the first unpaired half's
+    offset must match fused — with a clean ≤2-byte tile right after the
+    flood taking the class without inheriting any claim."""
+    rng = np.random.default_rng(20260809)
+    arr = np.full(3 * BLOCK, 0x41, np.uint16)
+    arr[BLOCK: 2 * BLOCK] = rng.integers(0xD800, 0xE000,
+                                         BLOCK).astype(np.uint16)
+    arr[2 * BLOCK:] = rng.integers(0x80, 0x800, BLOCK).astype(np.uint16)
+    for errors in ("strict", "replace"):
+        a = op.transcode_onepass(jnp.asarray(arr), len(arr), src="utf16",
+                                 dst="utf8", errors=errors)
+        f = ft.transcode_fused(jnp.asarray(arr), len(arr), src="utf16",
+                               dst="utf8", errors=errors)
+        _assert_identical(a, f, errors)
+
+
+@pytest.mark.parametrize("src,dst", tc.PAIRS)
+@pytest.mark.parametrize("errors", ["strict", "replace"])
+def test_onepass_class_dispatch_on_off_bit_identity_fuzz(src, dst, errors):
+    """Class-on (ascii_fastpath=True: three-way dispatch) vs class-off
+    (False: general path only) bit-identity fuzz across all 12 cells ×
+    errors policies, with values biased INTO the ≤2-byte class (plus
+    out-of-class contamination at tile granularity) so the class-2
+    branch actually fires and disagreements cannot hide in the general
+    path."""
+    rng = np.random.default_rng(20260808)
+    codec = stages.get_codec(src)
+    cap = 4 * BLOCK
+    for trial in range(3):
+        if codec.itemsize == 1:
+            # Bytes below 0xE0: ASCII + 2-byte leads + continuations.
+            arr = rng.integers(0, 0xE0, cap)
+        else:
+            arr = rng.integers(0, 0x800, cap)
+        # Contaminate one tile with full-range garbage and one with pure
+        # ASCII so all three classes appear in one buffer.
+        arr[BLOCK: 2 * BLOCK] = rng.integers(
+            0, _GEN_HI[codec.itemsize], BLOCK)
+        arr[2 * BLOCK: 3 * BLOCK] = rng.integers(0x20, 0x7F, BLOCK)
+        arr = arr.astype(codec.dtype)
+        n = int(rng.integers(3 * BLOCK, cap))
+        on = op.transcode_onepass(jnp.asarray(arr), n, src=src, dst=dst,
+                                  errors=errors, ascii_fastpath=True)
+        off = op.transcode_onepass(jnp.asarray(arr), n, src=src, dst=dst,
+                                   errors=errors, ascii_fastpath=False)
+        _assert_identical(on, off, (src, dst, errors, trial, "on/off"))
+        f = ft.transcode_fused(jnp.asarray(arr), n, src=src, dst=dst,
+                               errors=errors)
+        _assert_identical(on, f, (src, dst, errors, trial, "vs-fused"))
+
+
+# ---------------------------------------------------------------------------
 # Dispatch plumbing.
 
 
