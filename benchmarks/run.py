@@ -32,8 +32,11 @@ import sys
 # scripts/bench_gate.py TABLE_STRATEGIES): the pairs make the gate's
 # relative mode compare ratios an older report also contains, and any
 # table unique to one side of a v5/v6 comparison warns-and-skips as
-# before.
-SCHEMA = 6
+# before; v7 added ``table_shard`` (mesh-sharded ragged transcode vs the
+# single-device onepass reference, plus the feeder's transfer-hidden
+# fraction rows — the ``hidden@N`` keys are fractions in [0, 1], not
+# Gchars/s, and are asserted by scripts/check.sh rather than gated).
+SCHEMA = 7
 
 
 def _records(table: str, rows):
@@ -134,6 +137,21 @@ def main(argv=None) -> None:
                          reps=2 if (quick or smoke) else 3)
     tb.print_rows("Serve: continuous vs wave scheduling (req/s, ms)", tsv)
     report["records"] += _records("table_serve", tsv)
+
+    # Mesh-sharded ragged transcode + double-buffered feeder (rides in
+    # every mode incl. --smoke: the sharded path's GC/s vs the
+    # single-device onepass reference is gated, and the transfer-hidden
+    # fraction is an acceptance surface for the feeder).  Runs in its
+    # own forced-8-device subprocess, so the sizes stay modest even in
+    # full mode — the sweep is launch-bound under interpret-mode Pallas.
+    # 16k chars/doc even in the reduced modes: smaller waves put the
+    # kernel windows at the Python thread-switch granularity, where the
+    # feeder's stall measurement reads scheduler noise, not transfers.
+    tsh = tb.table_shard(waves=3 if (quick or smoke) else 4,
+                         reps=2 if (quick or smoke) else 3)
+    tb.print_rows("Sharded: mesh-sharded ragged vs single-device "
+                  "(Gchars/s; transfer_hidden row is a fraction)", tsh)
+    report["records"] += _records("table_shard", tsh)
 
     if not smoke:
         tr = tb.table_replace(n_chars=n)

@@ -56,13 +56,18 @@ DEFAULT_PAIRS = [(GATED_STRATEGY, REFERENCE_STRATEGY)]
 # (the multibyte-cell regression this repo shipped once) can never land
 # silently again.  table_serve rows carry schedulers, not kernel
 # strategies: its gated claim is that continuous batching beats
-# (absolute) / keeps beating (relative) the wave scheduler.
+# (absolute) / keeps beating (relative) the wave scheduler.  table_shard
+# gates the mesh-sharded ragged path against its single-device onepass
+# reference measured in the same run (its transfer_hidden row carries
+# ``hidden@N`` fraction keys, which match no gated strategy and are
+# asserted by scripts/check.sh instead).
 TABLE_STRATEGIES = {
     "table5": DEFAULT_PAIRS + [("onepass", "blockparallel")],
     "table6": DEFAULT_PAIRS + [("onepass", "blockparallel"),
                                ("onepass", "fused")],
     "table9": DEFAULT_PAIRS + [("onepass", "blockparallel")],
     "table_serve": [("continuous", "wave")],
+    "table_shard": [("sharded", "single")],
 }
 
 EXIT_MALFORMED = 2

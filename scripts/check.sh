@@ -45,6 +45,18 @@ PY
     exit $?
 fi
 
+# --shard: run ONLY the sharding surface — the shard planner / shard_map
+# bit-identity / feeder tests plus the pipeline host-sharding pin — under
+# the forced 8-device host platform, which un-skips the full 12-cell
+# sharded fuzz that single-device runs skip.  CI runs this as its own
+# job.
+if [ "${1:-}" = "--shard" ]; then
+    XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+        REPRO_FUZZ_SEED="${REPRO_FUZZ_SEED:-20260801}" \
+        python -m pytest tests -k "shard" -q
+    exit $?
+fi
+
 # set -e would abort on a bare failing pytest too; capture and re-raise
 # the exact code explicitly so a future edit can't swallow it.
 pytest_rc=0
@@ -64,13 +76,22 @@ import json, sys
 report = json.load(open(sys.argv[1]))
 strategies = {r["strategy"] for r in report["records"]}
 need = {"onepass", "fused", "blockparallel", "windowed(paper)",
-        "continuous", "wave"}
+        "continuous", "wave", "sharded"}
 missing = need - strategies
 assert not missing, f"bench JSON missing strategies: {missing}"
 tables = {r["table"] for r in report["records"]}
 assert {"table5", "table6", "table9", "table_stream",
-        "table_serve"} <= tables, tables
+        "table_serve", "table_shard"} <= tables, tables
 assert "stream" in strategies, strategies
+# Feeder acceptance: every committed transfer-hidden fraction must show
+# at least half the host->device staging time overlapped with compute.
+hidden = [r for r in report["records"]
+          if r["table"] == "table_shard"
+          and r["strategy"].startswith("hidden@")]
+assert hidden, "table_shard is missing its transfer_hidden row"
+bad = {r["strategy"]: r["gchars_per_s"] for r in hidden
+       if r["gchars_per_s"] < 0.5}
+assert not bad, f"feeder hid <50% of transfer time: {bad}"
 print("bench smoke OK:", sorted(strategies), "across", sorted(tables))
 PY
 

@@ -187,6 +187,16 @@ def _holdback(src: str, buf: np.ndarray) -> int:
     return 0
 
 
+# Public name: the shard planner (``repro.core.shard``) reuses the SAME
+# holdback rule for mid-document shard cuts — a cut point that cannot
+# land on a document boundary must still land on a unit boundary so the
+# per-shard launches compose chunk-wise (DESIGN.md §12).
+def holdback_units(src: str, buf) -> int:
+    """Trailing units of ``buf`` a cut after it would orphan — the
+    per-codec ``max_lookback`` walk-back of :func:`_holdback`."""
+    return _holdback(src, np.asarray(buf))
+
+
 def _launch(state: StreamState, eff: np.ndarray) -> TranscodeResult:
     """One single-pass kernel launch over an effective sub-buffer
     (padded to a tile multiple so sub-tile chunks share one compile)."""

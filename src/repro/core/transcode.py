@@ -139,6 +139,11 @@ PAIRS = tuple(sorted(CAP_FACTOR))
 # kernel there).
 STRATEGIES = ("onepass", "fused", "blockparallel", "windowed")
 
+# The ragged (packed-batch) entry point additionally accepts "sharded":
+# the packed stream split across a device mesh's data axis with one
+# onepass launch per shard (repro.core.shard, DESIGN.md §12).
+RAGGED_STRATEGIES = ("onepass", "fused", "sharded")
+
 DEFAULT_STRATEGY = "onepass"
 
 # The per-pair convenience wrappers below are DEPRECATED (DESIGN.md §11):
@@ -642,7 +647,8 @@ def transcode_utf16_to_utf8(u, n_valid=None, *, strategy: str = DEFAULT_STRATEGY
 def ragged_transcode(data, offsets, lengths, *, src_format: str = "utf8",
                      dst_format: str = "utf16", validate: bool = True,
                      errors: str = "strict",
-                     strategy: str = DEFAULT_STRATEGY):
+                     strategy: str = DEFAULT_STRATEGY,
+                     n_shards=None, shard_mesh=None, chunk_budget=None):
     """Ragged packed-batch transcode for any matrix cell: ONE launch per
     batch over a :func:`repro.core.packing.pack_documents` layout.
 
@@ -653,9 +659,23 @@ def ragged_transcode(data, offsets, lengths, *, src_format: str = "utf8",
     the padded ``vmap`` form survives in ``repro.data.pipeline`` as the
     reference.  ``strategy="onepass"`` (default) is the single-pass
     launch with the segment scan carried in SMEM (DESIGN.md §9);
-    ``strategy="fused"`` keeps the two-launch kernel reference.
+    ``strategy="fused"`` keeps the two-launch kernel reference;
+    ``strategy="sharded"`` splits the packed batch across the data axis
+    of a device mesh with one onepass launch per shard (DESIGN.md §12 —
+    ``n_shards`` / ``shard_mesh`` / ``chunk_budget`` apply only there)
+    and gathers a bit-identical result.
     """
-    # Strategy validation lives in ONE layer (the kernel dispatch below).
+    if strategy == "sharded":
+        from repro.core import shard
+        return shard.ragged_transcode_sharded(
+            data, offsets, lengths, src_format=src_format,
+            dst_format=dst_format, validate=validate, errors=errors,
+            n_shards=n_shards, mesh=shard_mesh, chunk_budget=chunk_budget)
+    if n_shards is not None or shard_mesh is not None:
+        raise ValueError(
+            "n_shards/shard_mesh require strategy='sharded'")
+    # Single-device strategy validation lives in ONE layer (the kernel
+    # dispatch below).
     from repro.kernels import ragged_transcode as rt
     return rt.transcode_ragged(
         data, offsets, lengths, src=normalize_format(src_format),

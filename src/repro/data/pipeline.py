@@ -136,13 +136,17 @@ def _packed_batch(docs, lengths, src, dst, validate, errors, out_cap):
 
 def batch_transcode(docs, lengths, *, in_encoding: str = "utf8",
                     out_encoding: str = "utf16", strategy: str = "packed",
-                    validate: bool = True, errors: str = "strict"):
+                    validate: bool = True, errors: str = "strict",
+                    n_shards=None):
     """Batched transcode for any matrix cell: [B, L] narrow buffers ->
     TranscodeResult([B, cap_factor*L], [B], [B]).
 
     ``strategy="packed"`` (default) reinterprets the row-major batch as
     ONE tile-aligned packed stream and runs a single ragged one-pass
-    launch; ``strategy="vmap"`` maps the single-document default
+    launch; ``strategy="sharded"`` splits that same packed stream across
+    the data axis of a device mesh — one onepass launch per shard,
+    bit-identical gather (DESIGN.md §12; ``n_shards`` applies only
+    here); ``strategy="vmap"`` maps the single-document default
     (one-pass) transcoder over the document axis (a per-document
     strategy name selects that transcoder under vmap instead).
     """
@@ -152,8 +156,22 @@ def batch_transcode(docs, lengths, *, in_encoding: str = "utf8",
     if (src, dst) not in tc.CAP_FACTOR:
         raise ValueError(f"unsupported format pair {src!r} -> {dst!r}")
     factor = tc.CAP_FACTOR[(src, dst)]
+    if n_shards is not None and strategy != "sharded":
+        raise ValueError("n_shards requires strategy='sharded'")
     docs = jnp.asarray(docs)
     lengths = jnp.asarray(lengths)
+    if strategy == "sharded":
+        # The host-side splitter needs concrete arrays, so this path is
+        # eager end-to-end (the shard_map launch itself is jitted and
+        # cached inside repro.core.shard).
+        from repro.kernels import stages
+        narrow = np.asarray(docs).astype(stages.get_codec(src).dtype)
+        data, offsets = _rows_as_packed(jnp.asarray(narrow))
+        res = tc.ragged_transcode(
+            np.asarray(data), np.asarray(offsets), np.asarray(lengths),
+            src_format=src, dst_format=dst, validate=validate,
+            errors=errors, strategy="sharded", n_shards=n_shards)
+        return _repad(res, factor * docs.shape[1])
     if strategy == "packed":
         from repro.kernels import stages
         narrow = docs.astype(stages.get_codec(src).dtype)
@@ -268,9 +286,11 @@ class TextPipeline:
         """Local (per-host) batch for the current global step."""
         cfg = self.cfg
         toks, labs, raws, lens = [], [], [], []
-        for k in range(cfg.global_batch):
-            if k % cfg.n_hosts != cfg.host_id:
-                continue  # deterministic host sharding
+        # Deterministic host sharding, without touching other hosts'
+        # slots: host h owns exactly the slots h, h+n_hosts, ... — the
+        # stride iteration IS the shard, so host k never materializes
+        # (or even names) host j's documents.
+        for k in range(cfg.host_id, cfg.global_batch, cfg.n_hosts):
             doc = self._doc_bytes(self.step, k)
             raw = np.zeros(cfg.seq_len, np.uint8)
             raw[: len(doc)] = doc

@@ -27,6 +27,23 @@ def make_host_mesh(n_devices=None, model: int = 2):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def make_transcode_mesh(n_shards=None):
+    """1-D data-only mesh for the sharded ragged transcode path
+    (``repro.core.shard``): ``n_shards`` host-platform devices on one
+    ``"data"`` axis — no model axis, so transcode tests/benches never
+    drag in the training-mesh geometry."""
+    devices = jax.devices()
+    n = len(devices) if n_shards is None else int(n_shards)
+    if n < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n}")
+    if n > len(devices):
+        raise ValueError(
+            f"n_shards={n} exceeds the {len(devices)} available "
+            f"device(s); set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count=N for multi-shard runs on CPU")
+    return jax.sharding.Mesh(np.asarray(devices[:n]), ("data",))
+
+
 def dp_axes(mesh):
     """Data-parallel axes: ('pod', 'data') when a pod axis exists."""
     names = mesh.axis_names

@@ -163,10 +163,14 @@ class Engine:
                  scheduler: str = "continuous",
                  bucket_min: int = 8, bucket_step: float = 1.5,
                  compile_cache_size: int = 32,
-                 latency_window: int = 1024, event_limit: int = 4096):
+                 latency_window: int = 1024, event_limit: int = 4096,
+                 ingress_shards: int = 1):
         if scheduler not in ("continuous", "wave"):
             raise ValueError(
                 f"scheduler must be 'continuous' or 'wave', got {scheduler!r}")
+        if ingress_shards < 1:
+            raise ValueError(
+                f"ingress_shards must be >= 1, got {ingress_shards}")
         self.model, self.cfg, self.family = model, cfg, family
         self.params = params
         self.max_batch, self.max_prompt, self.max_new = (
@@ -232,6 +236,17 @@ class Engine:
         self._decode = jax.jit(serve_step.make_decode(model, family,
                                                       temperature))
         self._ctx = max_prompt + max_new
+        # Sharded ingress (DESIGN.md §12): with ingress_shards > 1 a
+        # drain wave's ragged ingress launches fan out across a 1-D
+        # data mesh — one onepass launch per shard — instead of one
+        # single-device launch per chunk.  The shard_map executables are
+        # cached inside repro.core.shard, not in self._cells.
+        self.ingress_shards = ingress_shards
+        self._ingress_mesh = None
+        if ingress_shards > 1:
+            from repro.launch import mesh as launch_mesh
+            self._ingress_mesh = launch_mesh.make_transcode_mesh(
+                ingress_shards)
 
     # ------------------------------------------------------------------
     # Compile cache.
@@ -578,20 +593,35 @@ class Engine:
         prompts (the common case) pay one packed read per chunk instead
         of one kernel dispatch per request."""
         dt = self._doc_tiles(bound)
-        cell = self._cell(
-            ("scan_utf8", dt),
-            lambda: jax.jit(lambda d, o, l: tc.ragged_scan(
-                d, o, l, src_format="utf8", dst_format="utf16")))
+        if self._ingress_mesh is not None:
+            # Sharded fan-out: the wave's packed chunk splits across the
+            # ingress mesh, one counting launch per shard (the shard_map
+            # executable caches inside repro.core.shard).
+            from repro.core import shard as shard_mod
 
-        def _scan():
-            # The chaos hook fires HERE, per call: the jitted cell body
-            # below only reaches the kernel wrapper's own hook while
-            # tracing, and cached executables skip it entirely.
-            faults.fire(faults.KERNEL_RAGGED_SCAN)
-            pk = packing.pack_documents(
-                [u for _, _, u in take], dtype=np.uint8, doc_tiles=dt,
-                pad_to_docs=self.max_batch)
-            return cell(pk.data, pk.offsets, pk.lengths)
+            def _scan():
+                faults.fire(faults.KERNEL_RAGGED_SCAN)
+                pk = packing.pack_documents(
+                    [u for _, _, u in take], dtype=np.uint8, doc_tiles=dt,
+                    pad_to_docs=self.max_batch)
+                return shard_mod.scan_ragged_sharded(
+                    pk.data, pk.offsets, pk.lengths, src_format="utf8",
+                    dst_format="utf16", mesh=self._ingress_mesh)
+        else:
+            cell = self._cell(
+                ("scan_utf8", dt),
+                lambda: jax.jit(lambda d, o, l: tc.ragged_scan(
+                    d, o, l, src_format="utf8", dst_format="utf16")))
+
+            def _scan():
+                # The chaos hook fires HERE, per call: the jitted cell
+                # body below only reaches the kernel wrapper's own hook
+                # while tracing, and cached executables skip it entirely.
+                faults.fire(faults.KERNEL_RAGGED_SCAN)
+                pk = packing.pack_documents(
+                    [u for _, _, u in take], dtype=np.uint8, doc_tiles=dt,
+                    pad_to_docs=self.max_batch)
+                return cell(pk.data, pk.offsets, pk.lengths)
 
         try:
             _counts, statuses = self._launch_with_retry(_scan)
@@ -706,17 +736,32 @@ class Engine:
         code point)."""
         width, np_dtype, src, noun = self._UNIT_INGRESS[encoding]
         dt = self._doc_tiles(bound)
-        cell = self._cell(
-            ("unit", src, policy, dt),
-            lambda: jax.jit(lambda d, o, l: tc.ragged_transcode(
-                d, o, l, src_format=src, dst_format="utf8", errors=policy)))
+        if self._ingress_mesh is not None:
+            # Sharded fan-out, one onepass launch per shard; the gather
+            # is bit-identical to the single-device cell, so everything
+            # below consumes the result unchanged.
+            def _launch():
+                faults.fire(faults.KERNEL_RAGGED)   # per-call chaos hook
+                pk = packing.pack_documents(
+                    [u for _, _, u in take], dtype=np_dtype, doc_tiles=dt,
+                    pad_to_docs=self.max_batch)
+                return tc.ragged_transcode(
+                    pk.data, pk.offsets, pk.lengths, src_format=src,
+                    dst_format="utf8", errors=policy, strategy="sharded",
+                    shard_mesh=self._ingress_mesh)
+        else:
+            cell = self._cell(
+                ("unit", src, policy, dt),
+                lambda: jax.jit(lambda d, o, l: tc.ragged_transcode(
+                    d, o, l, src_format=src, dst_format="utf8",
+                    errors=policy)))
 
-        def _launch():
-            faults.fire(faults.KERNEL_RAGGED)   # per-call chaos hook
-            pk = packing.pack_documents(
-                [u for _, _, u in take], dtype=np_dtype, doc_tiles=dt,
-                pad_to_docs=self.max_batch)
-            return cell(pk.data, pk.offsets, pk.lengths)
+            def _launch():
+                faults.fire(faults.KERNEL_RAGGED)   # per-call chaos hook
+                pk = packing.pack_documents(
+                    [u for _, _, u in take], dtype=np_dtype, doc_tiles=dt,
+                    pad_to_docs=self.max_batch)
+                return cell(pk.data, pk.offsets, pk.lengths)
 
         try:
             res = self._launch_with_retry(_launch)

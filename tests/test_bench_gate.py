@@ -290,6 +290,30 @@ def test_schema5_vs_6_warn_and_skip(tmp_path, capsys):
     assert _run(tmp_path, _report_v(base5, 5), _report_v(fresh6, 6)) == 1
 
 
+def test_schema6_vs_7_shard_table_warn_and_skip(tmp_path, capsys):
+    """The v7 bump: a schema-7 fresh run adds ``table_shard`` (mesh-
+    sharded ragged vs the single-device onepass reference).  Against a
+    schema-6 baseline the new table warns-and-skips; same-schema
+    baselines gate its sharded/single pair like any other table (the
+    transfer_hidden row's ``hidden@N`` keys match no gated strategy and
+    are ignored by the gate)."""
+    base6 = {("table5", "arabic"): {"onepass": 1.2, "fused": 0.8,
+                                    "blockparallel": 1.0}}
+    fresh7 = {k: dict(d) for k, d in base6.items()}
+    fresh7[("table_shard", "arabic@4")] = {"sharded": 1.1, "single": 1.0}
+    fresh7[("table_shard", "transfer_hidden")] = {"hidden@4": 0.9}
+    assert _run(tmp_path, _report_v(base6, 6), _report_v(fresh7, 7)) == 0
+    assert "skipping table 'table_shard'" in capsys.readouterr().err
+    # Same-schema: the sharded cell gates against its own baseline.
+    assert _run(tmp_path, _report_v(fresh7, 7), _report_v(fresh7, 7)) == 0
+    slow = {k: dict(d) for k, d in fresh7.items()}
+    slow[("table_shard", "arabic@4")]["sharded"] = 0.2
+    assert _run(tmp_path, _report_v(fresh7, 7), _report_v(slow, 7)) == 1
+    # Relative mode gates the sharded/single ratio across the pair.
+    assert _run(tmp_path, _report_v(fresh7, 7), _report_v(slow, 7),
+                "--mode", "relative") == 1
+
+
 def test_schema4_stream_table(tmp_path, capsys):
     """The v4 bump: a schema-4 fresh run adds ``table_stream`` (chunked
     resumable streaming vs whole-buffer).  Its rows carry the gated

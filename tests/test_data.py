@@ -64,6 +64,37 @@ def test_pipeline_elastic_host_invariance():
     assert np.array_equal(np.asarray(full), combined)
 
 
+def test_pipeline_host_sharding_never_touches_other_hosts_docs(monkeypatch):
+    """Host k's shard (which feeds device shard k on the sharded
+    transcode path) must iterate ONLY its own global slots — the other
+    hosts' documents are never materialized, not even to be skipped."""
+    cfg = P.PipelineConfig(seq_len=128, global_batch=8, n_hosts=4,
+                           host_id=1)
+    pipe = P.TextPipeline(cfg)
+    seen = []
+    orig = P.TextPipeline._doc_bytes
+
+    def spy(self, step, slot):
+        seen.append((step, slot))
+        return orig(self, step, slot)
+
+    monkeypatch.setattr(P.TextPipeline, "_doc_bytes", spy)
+    for _ in range(3):
+        pipe.next_batch()
+    assert seen, "spy never fired"
+    for step, slot in seen:
+        assert slot % cfg.n_hosts == cfg.host_id, \
+            f"host {cfg.host_id} materialized foreign slot {slot}"
+    # Exactly local_batch requests per step — no skip-by-materializing.
+    assert len(seen) == 3 * pipe.local_batch
+    # And the shard content still matches the single-host global batch.
+    monkeypatch.setattr(P.TextPipeline, "_doc_bytes", orig)
+    full = P.TextPipeline(P.PipelineConfig(
+        seq_len=128, global_batch=8, n_hosts=1)).next_batch()["tokens"]
+    mine = P.TextPipeline(cfg).next_batch()["tokens"]
+    assert np.array_equal(np.asarray(full)[1::4], np.asarray(mine))
+
+
 def test_labels_shifted_and_masked():
     cfg = P.PipelineConfig(seq_len=64, global_batch=1, langs=("latin",))
     b = P.TextPipeline(cfg).next_batch()

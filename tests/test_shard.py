@@ -1,0 +1,485 @@
+"""Mesh-sharded ragged transcode (DESIGN.md §12): the host-side shard
+planner, the shard_map execution path, the bit-identity contract against
+the single-device onepass launch, and the double-buffered feeder.
+
+Multi-device cases either run in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (jax locks the
+device count at first init; the main test process must keep seeing one
+device) or are skipped unless the process already has >= 8 devices — the
+CI ``shard`` job and ``scripts/check.sh --shard`` run the whole module
+under the forced 8-device host platform, which un-skips the full fuzz.
+"""
+
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import packing, shard
+from repro.core import transcode as tc
+from repro.data import shard_feed, synthetic
+from repro.launch import mesh as launch_mesh
+
+from tests.test_fused_transcode import _iter_eqns, _pallas_eqns
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+TILE = packing.TILE
+
+LANGS = ("latin", "arabic", "chinese", "emoji")
+
+
+def _run(code, timeout=600):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=timeout, cwd=REPO)
+    assert "PASS" in r.stdout, \
+        f"stdout={r.stdout[-1500:]}\nstderr={r.stderr[-2500:]}"
+
+
+def _docs_for(src, n_docs, n_chars, seed):
+    """Valid documents in ``src``'s narrow storage dtype, mixed langs."""
+    rng = np.random.default_rng(seed)
+    docs = []
+    for i in range(n_docs):
+        lang = LANGS[i % len(LANGS)]
+        n = int(rng.integers(1, n_chars + 1))
+        if src == "utf8":
+            docs.append(synthetic.utf8_array(lang, n, seed=seed + i))
+        elif src == "utf16":
+            docs.append(synthetic.utf16_units(lang, n, seed=seed + i))
+        elif src == "utf32":
+            text = bytes(synthetic.utf8_array(
+                lang, n, seed=seed + i)).decode("utf-8")
+            docs.append(np.array([ord(c) for c in text], np.uint32))
+        else:   # latin1: any byte stream is valid
+            docs.append(rng.integers(0, 256, n).astype(np.uint8))
+    return docs
+
+
+def _assert_result_equal(ref, res, what=""):
+    for name in ("buffer", "offsets", "counts", "statuses"):
+        a = np.asarray(getattr(ref, name))
+        b = np.asarray(getattr(res, name))
+        assert a.shape == b.shape, (what, name, a.shape, b.shape)
+        assert (a == b).all(), \
+            (what, name, np.flatnonzero(a != b)[:8])
+
+
+# ---------------------------------------------------------------------------
+# Mesh helper.
+
+
+def test_make_transcode_mesh_is_1d_data_only():
+    m = launch_mesh.make_transcode_mesh(1)
+    assert m.axis_names == ("data",)
+    assert m.shape["data"] == 1
+    # Default: every available device.
+    assert launch_mesh.make_transcode_mesh().shape["data"] == \
+        len(jax.devices())
+
+
+def test_make_transcode_mesh_rejects_bad_counts():
+    with pytest.raises(ValueError, match="n_shards"):
+        launch_mesh.make_transcode_mesh(0)
+    with pytest.raises(ValueError, match="exceeds"):
+        launch_mesh.make_transcode_mesh(len(jax.devices()) + 1)
+
+
+# ---------------------------------------------------------------------------
+# Host-side shard planner.
+
+
+def _pack(docs):
+    return packing.pack_documents(docs)
+
+
+def test_plan_equal_docs_split_on_boundaries():
+    pk = _pack([synthetic.utf8_array("latin", 900, seed=i)
+                for i in range(8)])
+    plan = shard.plan_shards(pk.data, pk.offsets, pk.lengths, 4)
+    assert plan.n_shards == 4 and plan.n_docs == 8
+    # Two whole documents per shard, never split.
+    assert (plan.frag_base == 0).all()
+    assert plan.frag_doc.tolist() == [[0, 1], [2, 3], [4, 5], [6, 7]]
+    assert (plan.lengths == np.asarray(pk.lengths)[plan.frag_doc]).all()
+
+
+def test_plan_balances_bytes_not_doc_count():
+    # One 6000-byte document plus six 1000-byte ones: a doc-count split
+    # (3.5 docs each) would put ~9000 bytes on one shard; the byte-
+    # balanced cut puts the big document (nearly) alone on shard 0.
+    docs = [synthetic.utf8_array("latin", 6000, seed=0)] + \
+           [synthetic.utf8_array("latin", 1000, seed=i) for i in range(6)]
+    pk = _pack(docs)
+    plan = shard.plan_shards(pk.data, pk.offsets, pk.lengths, 2)
+    assert (plan.frag_base == 0).all()          # boundary cuts only
+    loads = plan.lengths.sum(axis=1)
+    total = int(np.asarray(pk.lengths).sum())
+    # Each shard within one small document's length of the even split.
+    assert abs(int(loads[0]) - total // 2) <= 1100, loads.tolist()
+    assert 0 in plan.frag_doc[0]
+
+
+def test_plan_oversize_doc_cut_lands_on_unit_boundary():
+    # ~30k bytes of 3-byte CJK characters in ONE document: every shard
+    # cut must fall inside it, and the holdback walk-back must park each
+    # cut on a character boundary (fragment starts at a lead byte).
+    doc = synthetic.utf8_array("chinese", 10000, seed=3)
+    pk = _pack([doc])
+    plan = shard.plan_shards(pk.data, pk.offsets, pk.lengths, 4)
+    frags = [(int(d), int(b), int(n))
+             for d, b, n in zip(plan.frag_doc.ravel(),
+                                plan.frag_base.ravel(),
+                                plan.lengths.ravel()) if d < plan.n_docs]
+    assert len(frags) == 4 and all(d == 0 for d, _, _ in frags)
+    assert sum(n for _, _, n in frags) == len(doc)
+    for _, base, _ in frags[1:]:
+        assert base > 0
+        lead = int(doc[base])
+        assert not (0x80 <= lead < 0xC0), \
+            f"fragment starts mid-character at {base}: {lead:#x}"
+    # Byte balance within a few characters of the ideal quarter.
+    sizes = [n for _, _, n in frags]
+    assert max(sizes) - min(sizes) <= 8, sizes
+
+
+def test_plan_empty_docs_and_batch_smaller_than_shards():
+    pk = _pack([np.zeros(0, np.uint8),
+                synthetic.utf8_array("latin", 40, seed=1),
+                np.zeros(0, np.uint8)])
+    plan = shard.plan_shards(pk.data, pk.offsets, pk.lengths, 4)
+    # Every document (including the empty ones) appears exactly once.
+    live = plan.frag_doc[plan.frag_doc < plan.n_docs]
+    assert sorted(live.tolist()) == [0, 1, 2]
+    # The remaining slots are pure padding: sentinel ids, zero lengths.
+    pad = plan.frag_doc >= plan.n_docs
+    assert int(pad.sum()) == plan.frag_doc.size - 3
+    assert (plan.lengths[pad] == 0).all()
+
+
+def test_plan_rejects_bad_inputs():
+    pk = _pack([synthetic.utf8_array("latin", 40, seed=1)])
+    with pytest.raises(ValueError, match="n_shards"):
+        shard.plan_shards(pk.data, pk.offsets, pk.lengths, 0)
+    with pytest.raises(ValueError, match="chunk_budget"):
+        shard.plan_shards(pk.data, pk.offsets, pk.lengths, 2,
+                          chunk_budget=8)
+    with pytest.raises(TypeError, match="host-side"):
+        jax.jit(lambda d: shard.plan_shards(d, pk.offsets,
+                                            pk.lengths, 2))(
+            np.asarray(pk.data))
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity on the in-process (single-device) path: a 1-shard mesh
+# exercises the full plan -> shard_map -> gather pipeline.
+
+
+@pytest.mark.parametrize("pair", [("utf8", "utf16"), ("utf16", "utf8"),
+                                  ("latin1", "utf32")],
+                         ids=lambda p: f"{p[0]}-{p[1]}")
+@pytest.mark.parametrize("errors", ["strict", "replace"])
+def test_sharded_one_shard_identity(pair, errors):
+    src, dst = pair
+    docs = _docs_for(src, n_docs=5, n_chars=400, seed=7)
+    pk = _pack(docs)
+    ref = tc.ragged_transcode(pk.data, pk.offsets, pk.lengths,
+                              src_format=src, dst_format=dst,
+                              errors=errors)
+    res = tc.ragged_transcode(pk.data, pk.offsets, pk.lengths,
+                              src_format=src, dst_format=dst,
+                              errors=errors, strategy="sharded",
+                              n_shards=1)
+    _assert_result_equal(ref, res, f"{src}->{dst}/{errors}")
+
+
+def test_sharded_scan_one_shard_identity():
+    docs = [synthetic.utf8_array("arabic", 300, seed=i) for i in range(4)]
+    docs.insert(2, np.zeros(0, np.uint8))
+    pk = _pack(docs)
+    c_ref, s_ref = tc.ragged_scan(pk.data, pk.offsets, pk.lengths,
+                                  src_format="utf8", dst_format="utf16")
+    c, s = shard.scan_ragged_sharded(pk.data, pk.offsets, pk.lengths,
+                                     src_format="utf8",
+                                     dst_format="utf16", n_shards=1)
+    assert (np.asarray(c_ref) == np.asarray(c)).all()
+    assert (np.asarray(s_ref) == np.asarray(s)).all()
+
+
+def test_sharded_kwargs_require_sharded_strategy():
+    pk = _pack([synthetic.utf8_array("latin", 40, seed=1)])
+    with pytest.raises(ValueError, match="sharded"):
+        tc.ragged_transcode(pk.data, pk.offsets, pk.lengths,
+                            n_shards=2)
+
+
+def test_sharded_rejects_mesh_without_data_axis():
+    pk = _pack([synthetic.utf8_array("latin", 40, seed=1)])
+    bad = jax.sharding.Mesh(np.asarray(jax.devices()[:1]), ("model",))
+    with pytest.raises(ValueError, match="data"):
+        tc.ragged_transcode(pk.data, pk.offsets, pk.lengths,
+                            strategy="sharded", shard_mesh=bad)
+
+
+# ---------------------------------------------------------------------------
+# Launch-count pin: exactly ONE ragged onepass launch per shard per wave
+# — the shard_map body contains one pallas_call, nothing more.
+
+
+def test_sharded_jaxpr_one_launch_per_shard():
+    pk = _pack([synthetic.utf8_array("arabic", 700, seed=i)
+                for i in range(4)])
+    mesh = launch_mesh.make_transcode_mesh(1)
+    plan = shard.plan_shards(pk.data, pk.offsets, pk.lengths, 1)
+    fn = shard.sharded_call(mesh, "utf8", "utf16", True, "strict", True)
+    jaxpr = jax.make_jaxpr(fn)(plan.data, plan.offsets,
+                               plan.lengths).jaxpr
+    sm = [e for e in _iter_eqns(jaxpr)
+          if "shard_map" in e.primitive.name]
+    assert len(sm) == 1, "expected exactly one shard_map region"
+    assert len(_pallas_eqns(jaxpr)) == 1, \
+        "the shard_map body must hold exactly ONE ragged launch per shard"
+
+
+# ---------------------------------------------------------------------------
+# Double-buffered feeder: transfer overlaps compute; order preserved.
+
+
+def test_shard_feed_overlap_hides_transfer():
+    mesh = launch_mesh.make_transcode_mesh(1)
+    stage_s, compute_s, waves = 0.02, 0.05, 4
+    order = []
+
+    def slow_stage(arrays):
+        time.sleep(stage_s)
+        order.append(("stage", arrays[0]))
+        return arrays
+
+    def launch(tag):
+        time.sleep(compute_s)
+        order.append(("launch", tag))
+        return tag
+
+    feeder = shard_feed.DoubleBufferedFeeder(mesh, stage_fn=slow_stage)
+    with feeder:
+        results, stats = feeder.run([(k,) for k in range(waves)], launch)
+    assert results == list(range(waves))
+    assert len(stats) == waves
+    # Steady state: every 20ms stage hides behind a 50ms kernel, so the
+    # residual stall must be a small fraction of the transfer time.
+    frac = shard_feed.hidden_fraction(stats)
+    assert frac >= 0.5, (frac, stats)
+    # ONE staging worker keeps stages strictly in wave order.
+    stages_seen = [t for kind, t in order if kind == "stage"]
+    assert stages_seen == list(range(waves))
+
+
+def test_shard_feed_empty_and_single_wave():
+    mesh = launch_mesh.make_transcode_mesh(1)
+    with shard_feed.DoubleBufferedFeeder(mesh) as feeder:
+        results, stats = feeder.run([], lambda *a: a)
+    assert results == [] and stats == []
+    # A single wave has no steady state: hidden_fraction reports 0.
+    with shard_feed.DoubleBufferedFeeder(
+            mesh, stage_fn=lambda a: a) as f:
+        results, stats = f.run([(np.arange(3),)], lambda x: x)
+    assert len(results) == 1 and shard_feed.hidden_fraction(stats) == 0.0
+
+
+def test_shard_feed_single_worker_double_buffer():
+    # The staging pool must be ONE worker: two in-flight transfers would
+    # be triple buffering and could reorder wave completion.
+    mesh = launch_mesh.make_transcode_mesh(1)
+    feeder = shard_feed.DoubleBufferedFeeder(mesh)
+    assert feeder._pool._max_workers == 1
+    feeder.close()
+
+
+def test_run_sharded_waves_single_device_roundtrip():
+    mesh = launch_mesh.make_transcode_mesh(1)
+    docs = [synthetic.utf8_array("arabic", 900, seed=i) for i in range(6)]
+    pk = _pack(docs)
+    plans = [shard.plan_shards(pk.data, pk.offsets, pk.lengths, 1)
+             for _ in range(3)]
+    outs, stats = shard_feed.run_sharded_waves(
+        mesh, plans, src="utf8", dst="utf16")
+    assert len(outs) == 3 and len(stats) == 3
+    ref = tc.ragged_transcode(pk.data, pk.offsets, pk.lengths,
+                              src_format="utf8", dst_format="utf16")
+    from repro.kernels import stages
+    _cs, codec_d, factor = stages.get_pair("utf8", "utf16")
+    cap = factor * max(1, -(-int(np.asarray(pk.data).shape[0]) // TILE)) \
+        * TILE
+    for bufs, oos, counts, statuses in outs:
+        res = shard._gather_result(
+            plans[0], cap, codec_d.dtype, np.asarray(bufs),
+            np.asarray(oos), np.asarray(counts), np.asarray(statuses),
+            True)
+        _assert_result_equal(ref, res, "feeder wave")
+
+
+# ---------------------------------------------------------------------------
+# Multi-device coverage.  The subprocess smoke keeps tier-1 honest on a
+# single-device box; the full fuzz below it un-skips under the CI shard
+# job's forced 8-device host platform.
+
+
+def test_sharded_8dev_subprocess_smoke():
+    """Reduced multi-shard sweep in a forced-8-device subprocess:
+    bit-identity across shard counts, the serve engine's sharded
+    ingress, and the feeder's overlap accounting."""
+    _run("""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax
+assert jax.device_count() == 8
+from repro.core import packing, shard, transcode as tc
+from repro.data import shard_feed, synthetic
+from repro.launch import mesh as lm
+
+rng = np.random.default_rng(20260801)
+langs = ["arabic", "latin", "chinese", "emoji"]
+docs = [synthetic.utf8_array(langs[i % 4], int(rng.integers(1, 2500)),
+                             seed=i) for i in range(11)]
+docs[3] = np.zeros(0, np.uint8)
+poison = synthetic.utf8_array("latin", 400, seed=99).copy()
+poison[50] = 0xFF                       # poison doc, isolated to a shard
+docs[7] = poison
+pk = packing.pack_documents(docs)
+for errors in ("strict", "replace"):
+    ref = tc.ragged_transcode(pk.data, pk.offsets, pk.lengths,
+                              src_format="utf8", dst_format="utf16",
+                              errors=errors)
+    for n in (2, 8):
+        res = tc.ragged_transcode(pk.data, pk.offsets, pk.lengths,
+                                  src_format="utf8", dst_format="utf16",
+                                  errors=errors, strategy="sharded",
+                                  n_shards=n)
+        for name in ("buffer", "offsets", "counts", "statuses"):
+            a = np.asarray(getattr(ref, name))
+            b = np.asarray(getattr(res, name))
+            assert (a == b).all(), (errors, n, name)
+# utf16 -> utf8 cell across 4 shards
+docs16 = [synthetic.utf16_units("emoji", 600, seed=i) for i in range(5)]
+pk16 = packing.pack_documents(docs16)
+ref = tc.ragged_transcode(pk16.data, pk16.offsets, pk16.lengths,
+                          src_format="utf16", dst_format="utf8")
+res = tc.ragged_transcode(pk16.data, pk16.offsets, pk16.lengths,
+                          src_format="utf16", dst_format="utf8",
+                          strategy="sharded", n_shards=4)
+for name in ("buffer", "offsets", "counts", "statuses"):
+    assert (np.asarray(getattr(ref, name)) ==
+            np.asarray(getattr(res, name))).all(), name
+# sharded scan
+c_ref, s_ref = tc.ragged_scan(pk.data, pk.offsets, pk.lengths,
+                              src_format="utf8", dst_format="utf16")
+c, s = shard.scan_ragged_sharded(pk.data, pk.offsets, pk.lengths,
+                                 src_format="utf8", dst_format="utf16",
+                                 n_shards=4)
+assert (np.asarray(c_ref) == np.asarray(c)).all()
+assert (np.asarray(s_ref) == np.asarray(s)).all()
+# engine ingress fans out across shards, results unchanged
+from repro.models import registry
+from repro.serve.engine import Engine, Request
+fam, cfg, model = registry.get("bytelm-100m", reduced=True)
+params = model.init(jax.random.PRNGKey(0))
+e1 = Engine(model, cfg, fam, params, max_batch=4, max_prompt=64,
+            max_new=4)
+e2 = Engine(model, cfg, fam, params, max_batch=4, max_prompt=64,
+            max_new=4, ingress_shards=2)
+prompts = [Request(b"hello shard"), Request(b"bad \\xff\\x80 byte"),
+           Request("caf\\u00e9 \\u4e2d".encode()),
+           Request(b"dirty \\xe4\\xb8 tail", errors="replace")]
+r1 = e1.serve(prompts)
+r2 = e2.serve(prompts)
+for a, b in zip(r1, r2):
+    assert (a.ok, a.code, a.error, a.error_offset, a.text_bytes,
+            a.sanitized_prompt) == \\
+        (b.ok, b.code, b.error, b.error_offset, b.text_bytes,
+         b.sanitized_prompt)
+# unit-encoding ingress through the sharded path
+u16 = "caf\\u00e9 \\U0001F600".encode("utf-16-le")
+r3 = e2.serve([Request(u16, in_encoding="utf-16-le")])
+assert r3[0].ok
+# feeder stats come back sane on a real 4-shard mesh
+mesh = lm.make_transcode_mesh(4)
+plans = [shard.plan_shards(pk.data, pk.offsets, pk.lengths, 4)
+         for _ in range(3)]
+outs, stats = shard_feed.run_sharded_waves(mesh, plans, src="utf8",
+                                           dst="utf16")
+assert len(outs) == 3 and all(st.transfer_s >= 0 for st in stats)
+print("PASS")
+""", timeout=900)
+
+
+_FULL_FUZZ_REASON = ("needs >= 8 devices (run under XLA_FLAGS="
+                     "--xla_force_host_platform_device_count=8, e.g. "
+                     "scripts/check.sh --shard or the CI shard job)")
+
+_POISON = {"utf8": 0xFF, "utf16": 0xDC00, "utf32": 0x110000}
+
+
+@pytest.mark.skipif(jax.device_count() < 8, reason=_FULL_FUZZ_REASON)
+@pytest.mark.parametrize("pair", tc.PAIRS, ids=lambda p: f"{p[0]}-{p[1]}")
+def test_sharded_full_matrix_fuzz_8dev(pair):
+    """All 12 matrix cells x errors policies x shard counts {1, 2, 4, 8}:
+    sharded == single-device onepass bit-for-bit, with an empty doc in
+    the batch and a poison doc isolated to one shard."""
+    src, dst = pair
+    docs = _docs_for(src, n_docs=6, n_chars=300,
+                     seed=20260801 + len(src) * 7 + len(dst))
+    docs.insert(2, np.zeros_like(docs[0][:0]))   # empty doc
+    if src in _POISON and len(docs[4]) > 10:     # latin1 can't be poison
+        p = docs[4].copy()
+        p[5] = _POISON[src]
+        docs[4] = p
+    pk = _pack(docs)
+    for errors in ("strict", "replace"):
+        ref = tc.ragged_transcode(pk.data, pk.offsets, pk.lengths,
+                                  src_format=src, dst_format=dst,
+                                  errors=errors)
+        for n in (1, 2, 4, 8):
+            res = tc.ragged_transcode(pk.data, pk.offsets, pk.lengths,
+                                      src_format=src, dst_format=dst,
+                                      errors=errors, strategy="sharded",
+                                      n_shards=n)
+            _assert_result_equal(ref, res,
+                                 f"{src}->{dst}/{errors}/shards={n}")
+
+
+@pytest.mark.skipif(jax.device_count() < 8, reason=_FULL_FUZZ_REASON)
+def test_sharded_batch_smaller_than_shards_8dev():
+    for n_docs in (1, 3):
+        docs = [synthetic.utf8_array("emoji", 150 * (i + 1), seed=i)
+                for i in range(n_docs)]
+        pk = _pack(docs)
+        ref = tc.ragged_transcode(pk.data, pk.offsets, pk.lengths,
+                                  src_format="utf8", dst_format="utf16")
+        res = tc.ragged_transcode(pk.data, pk.offsets, pk.lengths,
+                                  src_format="utf8", dst_format="utf16",
+                                  strategy="sharded", n_shards=8)
+        _assert_result_equal(ref, res, f"n_docs={n_docs}")
+
+
+@pytest.mark.skipif(jax.device_count() < 8, reason=_FULL_FUZZ_REASON)
+def test_sharded_oversize_doc_split_valid_stream_8dev():
+    """A valid oversize document split mid-stream by the holdback rule
+    stays bit-identical under BOTH policies (the strict caveat applies
+    only to split documents that contain errors)."""
+    doc = synthetic.utf8_array("chinese", 12000, seed=11)
+    pk = _pack([doc, synthetic.utf8_array("latin", 500, seed=1)])
+    for errors in ("strict", "replace"):
+        ref = tc.ragged_transcode(pk.data, pk.offsets, pk.lengths,
+                                  src_format="utf8", dst_format="utf16",
+                                  errors=errors)
+        res = tc.ragged_transcode(pk.data, pk.offsets, pk.lengths,
+                                  src_format="utf8", dst_format="utf16",
+                                  errors=errors, strategy="sharded",
+                                  n_shards=8)
+        _assert_result_equal(ref, res, errors)
