@@ -145,6 +145,22 @@ def main():
     show("sharded == single-device (buffer)",
          np.array_equal(np.asarray(res.buffer), np.asarray(ref.buffer)))
 
+    # --- supervised launch (DESIGN.md §10: shard fault tolerance) --------
+    # The same call under the retry / watchdog / degraded-mesh-replan
+    # supervisor: transient failures retry with backoff, persistent ones
+    # replan onto fewer devices (bit-identical result — same cut rules
+    # at every mesh size), and only a fully exhausted ladder raises a
+    # typed DegradedMeshExhausted.  See examples/serve_demo.py for the
+    # serve engine's circuit breaker riding the same layer.
+    from repro.core import recovery
+    log = recovery.SupervisionLog()
+    sup = recovery.supervised_ragged_transcode(
+        pk.data, pk.offsets, pk.lengths, src_format="utf8",
+        dst_format="utf16", n_shards=1, log=log)
+    show("supervised == single-device (buffer)",
+         np.array_equal(np.asarray(sup.buffer), np.asarray(ref.buffer)))
+    show("supervision log", log.attempts)
+
 
 if __name__ == "__main__":
     main()

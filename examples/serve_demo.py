@@ -7,6 +7,11 @@ that finishes early is refilled mid-wave from the admission queue), and
 ``Engine.poll`` returns each settled result by ticket.  The legacy
 batch-in/batch-out call is still available as the ``Engine.serve`` shim.
 
+The second half trips the per-ingress-group circuit breaker (DESIGN.md
+§10) with an injected failure storm and then lets it recover: open
+(host fallback, zero device launches) -> half-open probe -> closed,
+every transition auditable from ``Engine.events``.
+
     PYTHONPATH=src python examples/serve_demo.py
 """
 
@@ -14,6 +19,7 @@ import jax
 
 from repro.models import registry
 from repro.serve.engine import Engine, Request
+from repro.testing import faults
 
 
 def main():
@@ -51,6 +57,47 @@ def main():
     # mid-wave — that admit's step precedes its batch-mate's finish.
     for kind, ticket, slot, step, _wall in eng.events:
         print(f"  step {step:3d}  {kind:>6}  ticket={ticket} slot={slot}")
+
+    breaker_demo()
+
+
+def _breaker_events(eng):
+    return [(kind, group, step) for kind, group, _slot, step, _wall
+            in eng.events if kind.startswith("breaker_")]
+
+
+def breaker_demo():
+    """Trip the utf-8 ingress group's breaker, then watch it recover."""
+    fam, cfg, model = registry.get("bytelm-100m", reduced=True)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, cfg, fam, params, max_batch=2, max_prompt=64,
+                 max_new=4, backoff_base_s=0.0,
+                 breaker_threshold=1, breaker_cooldown_s=0.0)
+    eng.serve([Request(b"warm up")])           # compile the utf-8 cells
+
+    # Failure storm: EVERY device ingress launch fails.  Retries exhaust
+    # once, the breaker opens, and every later chunk routes straight to
+    # the host fallback — the requests still serve.
+    with faults.harness(faults.Fault(faults.KERNEL_RAGGED_SCAN,
+                                     times=None)) as h:
+        res = eng.serve([Request(b"served through the storm"),
+                         Request(b"so is this one")])
+    print("\nbreaker demo — storm drain "
+          f"(all served: {all(r.ok for r in res)}, "
+          f"device launches during storm: {h.calls.get('kernel.ragged_scan', 0)}):")
+    for kind, group, step in _breaker_events(eng):
+        print(f"  step {step:3d}  {kind:>18}  group={group}")
+
+    # Storm over: the cooldown has elapsed, so the next drain's first
+    # chunk is a half-open PROBE.  It succeeds and the breaker closes —
+    # the group is back on the device path.
+    res = eng.serve([Request(b"back to normal")])
+    print(f"recovery drain (ok={res[0].ok}):")
+    for kind, group, step in _breaker_events(eng):
+        print(f"  step {step:3d}  {kind:>18}  group={group}")
+    stats = {k: v for k, v in sorted(eng.counters.items())
+             if k.startswith("breaker_")}
+    print(f"breaker counters: {stats}")
 
 
 if __name__ == "__main__":

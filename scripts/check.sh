@@ -14,12 +14,20 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 # --chaos: run ONLY the robustness surface — the fault-injection chaos
-# suite plus every streaming test (module names test_faults/test_stream
-# and the test_stream_* incremental fuzz in test_differential) — with
-# the fixed fuzz seed CI pins.  Fast inner loop for robustness work.
+# suite, every streaming test (module names test_faults/test_stream and
+# the test_stream_* incremental fuzz in test_differential) and the
+# shard-level fault-tolerance suite (test_recovery: supervised launches,
+# feeder watchdog, serve circuit breaker) — with the fixed fuzz seed CI
+# pins.  Fast inner loop for robustness work.  The degraded-mesh replan
+# cases need >= 8 devices, so the recovery suite's multi-device half is
+# re-run under the forced 8-device host platform in a FRESH process
+# (XLA locks the device count at first jax init).
 if [ "${1:-}" = "--chaos" ]; then
     REPRO_FUZZ_SEED="${REPRO_FUZZ_SEED:-20260801}" \
-        python -m pytest tests -k "fault or stream" -q
+        python -m pytest tests -k "fault or stream or recovery" -q
+    XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+        REPRO_FUZZ_SEED="${REPRO_FUZZ_SEED:-20260801}" \
+        python -m pytest tests/test_recovery.py -k "8dev" -q
     exit $?
 fi
 

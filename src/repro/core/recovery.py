@@ -1,0 +1,259 @@
+"""Supervised sharded launches: retry, watchdog, degraded-mesh replan.
+
+PR 9 made the ragged transcode horizontal — and multiplied the ways a
+batch can die.  A mesh launch can fail transiently (a flaky link, an
+injected :class:`~repro.testing.faults.FaultInjected`), hang (a wedged
+transfer or kernel that never returns), or fail *persistently* (a dead
+device).  This module is the supervisor that turns all three into one
+of exactly three outcomes, in order of preference:
+
+  1. **retried success** — the launch is retried with exponential
+     backoff (same mesh, same plan) up to ``RetryPolicy.max_retries``
+     times;
+  2. **degraded-but-bit-identical replan** — on persistent failure the
+     batch is RE-PLANNED onto a degraded mesh (the first ``n-1``
+     devices of the data axis, then ``n-2``, ... down to
+     ``RetryPolicy.min_shards``).  :func:`repro.core.shard.plan_shards`
+     applies the same document-boundary / holdback cut rules at every
+     mesh size, and the PR-9 gather contract makes every size's
+     reassembled result bit-identical to the single-device path — so a
+     degraded mesh changes throughput, never bytes;
+  3. **typed error** — when every mesh size down to ``min_shards`` has
+     exhausted its retries, :class:`DegradedMeshExhausted` carries the
+     full (mesh size, attempt, cause) trail.  No outcome is ever a
+     silent hang or a lost batch.
+
+Hangs are bounded by :func:`call_with_watchdog`: the launch runs on a
+daemon worker thread while the supervisor polls an injectable clock;
+past the deadline the worker is *abandoned* (Python threads cannot be
+killed — the eventual result is dropped on the floor) and
+:class:`WatchdogTimeout` feeds the same retry/replan ladder as an
+ordinary launch failure.  The injectable clock is what makes hang tests
+deterministic: a fake auto-advancing clock trips the watchdog without
+real waiting.
+
+The feeder (:mod:`repro.data.shard_feed`) reuses ``call_with_watchdog``
+and :class:`WatchdogTimeout` for its per-wave bound; the serve engine's
+circuit breaker (:mod:`repro.serve.engine`) is the third leg of the
+fault-tolerance layer — see DESIGN.md §10.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+from jax.sharding import Mesh
+
+
+class ShardFaultError(RuntimeError):
+    """Base class for the supervised-launch layer's typed errors."""
+
+
+class WatchdogTimeout(ShardFaultError):
+    """A supervised call outlived its watchdog budget.  The runaway
+    worker thread is abandoned (daemonized — it cannot block interpreter
+    exit) and whatever it eventually produces is discarded."""
+
+    def __init__(self, what: str, timeout_s: float):
+        super().__init__(f"{what} exceeded its {timeout_s:g}s watchdog")
+        self.what = what
+        self.timeout_s = timeout_s
+
+
+class DegradedMeshExhausted(ShardFaultError):
+    """Every mesh size from the requested shard count down to
+    ``min_shards`` failed all its attempts.  ``causes`` is the full
+    attempt trail: ``[(n_shards, attempt_index, exception), ...]``."""
+
+    def __init__(self, causes: List[Tuple[int, int, BaseException]]):
+        self.causes = list(causes)
+        sizes = sorted({n for n, _a, _e in self.causes}, reverse=True)
+        last = self.causes[-1][2] if self.causes else None
+        super().__init__(
+            f"sharded launch failed at every mesh size {sizes}; "
+            f"last cause: {last!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Supervision knobs for :func:`supervised_ragged_transcode`.
+
+    ``max_retries`` attempts-after-the-first per mesh size, exponential
+    backoff from ``backoff_base_s`` (0.0 = immediate, the chaos suite's
+    setting).  ``watchdog_s=None`` disables the hang bound.  ``sleep``
+    and ``clock`` are injectable so tests never wait on real time;
+    ``poll_s`` is the real-time granularity of the watchdog's poll loop.
+    """
+
+    max_retries: int = 2
+    backoff_base_s: float = 0.05
+    watchdog_s: Optional[float] = None
+    min_shards: int = 1
+    sleep: Callable[[float], None] = time.sleep
+    clock: Callable[[], float] = time.monotonic
+    poll_s: float = 0.005
+
+
+@dataclasses.dataclass
+class SupervisionLog:
+    """Optional out-param recording what the supervisor actually did:
+    ``attempts`` is ``[(n_shards, attempt_index, outcome), ...]`` with
+    outcome ``"ok"`` or the exception class name."""
+
+    attempts: List[Tuple[int, int, str]] = dataclasses.field(
+        default_factory=list)
+    retries: int = 0
+    replans: int = 0
+    final_shards: Optional[int] = None
+
+
+def call_with_watchdog(fn, timeout_s: Optional[float], *,
+                       clock: Callable[[], float] = time.monotonic,
+                       poll_s: float = 0.005,
+                       what: str = "supervised call"):
+    """Run ``fn()`` bounded by ``timeout_s`` on the injectable clock.
+
+    ``timeout_s=None`` calls ``fn`` inline (no thread, no bound).
+    Otherwise ``fn`` runs on a fresh daemon thread while this thread
+    polls the clock every ``poll_s`` real seconds; when the clock passes
+    the deadline first, :class:`WatchdogTimeout` is raised and the
+    worker is abandoned.  Exceptions from ``fn`` re-raise here.
+    """
+    if timeout_s is None:
+        return fn()
+    box: dict = {}
+    done = threading.Event()
+
+    def _worker():
+        try:
+            box["result"] = fn()
+        except BaseException as e:          # noqa: BLE001 — re-raised below
+            box["error"] = e
+        finally:
+            done.set()
+
+    t = threading.Thread(target=_worker, daemon=True,
+                         name=f"watchdog:{what}")
+    t.start()
+    deadline = clock() + timeout_s
+    while not done.is_set():
+        if clock() >= deadline:
+            raise WatchdogTimeout(what, timeout_s)
+        done.wait(poll_s)
+    if "error" in box:
+        raise box["error"]
+    return box["result"]
+
+
+def degraded_mesh(mesh: Mesh, n: int) -> Mesh:
+    """The degraded replan target: the first ``n`` devices of ``mesh``'s
+    data axis, same axis name — a strict prefix, so a device that was
+    shard k stays shard k for k < n."""
+    devs = list(mesh.devices.flat)
+    if not 1 <= n <= len(devs):
+        raise ValueError(
+            f"degraded mesh size must be in [1, {len(devs)}], got {n}")
+    return Mesh(np.asarray(devs[:n]), ("data",))
+
+
+def _supervise(run_at, mesh: Mesh, policy: RetryPolicy,
+               log: Optional[SupervisionLog], what: str):
+    """The retry/replan ladder shared by both supervised entry points:
+    ``run_at(sub_mesh)`` is attempted ``max_retries + 1`` times per mesh
+    size, walking n -> min_shards; first success wins."""
+    n = int(mesh.shape["data"])
+    if not 1 <= policy.min_shards <= n:
+        raise ValueError(
+            f"min_shards must be in [1, {n}], got {policy.min_shards}")
+    causes: List[Tuple[int, int, BaseException]] = []
+    for m in range(n, policy.min_shards - 1, -1):
+        sub = mesh if m == n else degraded_mesh(mesh, m)
+        if log is not None and m < n:
+            log.replans += 1
+        delay = policy.backoff_base_s
+        for attempt in range(policy.max_retries + 1):
+            try:
+                out = call_with_watchdog(
+                    lambda: run_at(sub), policy.watchdog_s,
+                    clock=policy.clock, poll_s=policy.poll_s,
+                    what=f"{what} ({m} shard(s))")
+            except Exception as e:          # noqa: BLE001 — trail + ladder
+                causes.append((m, attempt, e))
+                if log is not None:
+                    log.attempts.append((m, attempt, type(e).__name__))
+                if attempt < policy.max_retries:
+                    if log is not None:
+                        log.retries += 1
+                    if delay > 0.0:
+                        policy.sleep(delay)
+                    delay *= 2.0
+            else:
+                if log is not None:
+                    log.attempts.append((m, attempt, "ok"))
+                    log.final_shards = m
+                return out
+    raise DegradedMeshExhausted(causes)
+
+
+def supervised_ragged_transcode(data, offsets, lengths, *,
+                                src_format: str = "utf8",
+                                dst_format: str = "utf16",
+                                validate: bool = True,
+                                errors: str = "strict",
+                                n_shards: Optional[int] = None,
+                                mesh: Optional[Mesh] = None,
+                                chunk_budget: Optional[int] = None,
+                                interpret=None,
+                                policy: Optional[RetryPolicy] = None,
+                                log: Optional[SupervisionLog] = None):
+    """:func:`repro.core.shard.ragged_transcode_sharded` under the
+    supervisor: retried with backoff, hang-bounded by the watchdog, and
+    re-planned onto a degraded mesh on persistent failure.
+
+    Each mesh size re-plans from scratch (same cut rules), so WHATEVER
+    size succeeds returns the same bytes as the single-device path —
+    degradation is invisible in the result.  Raises
+    :class:`DegradedMeshExhausted` when every size fails.
+    """
+    from repro.core import shard
+
+    policy = policy or RetryPolicy()
+    full = shard._resolve_mesh(mesh, n_shards)
+
+    def run_at(sub: Mesh):
+        return shard.ragged_transcode_sharded(
+            data, offsets, lengths, src_format=src_format,
+            dst_format=dst_format, validate=validate, errors=errors,
+            mesh=sub, chunk_budget=chunk_budget, interpret=interpret)
+
+    return _supervise(run_at, full, policy, log, "sharded ragged launch")
+
+
+def supervised_scan_ragged(data, offsets, lengths, *,
+                           src_format: str = "utf8",
+                           dst_format: str = "utf16",
+                           n_shards: Optional[int] = None,
+                           mesh: Optional[Mesh] = None,
+                           chunk_budget: Optional[int] = None,
+                           interpret=None,
+                           policy: Optional[RetryPolicy] = None,
+                           log: Optional[SupervisionLog] = None):
+    """:func:`repro.core.shard.scan_ragged_sharded` under the same
+    retry / watchdog / degraded-replan ladder."""
+    from repro.core import shard
+
+    policy = policy or RetryPolicy()
+    full = shard._resolve_mesh(mesh, n_shards)
+
+    def run_at(sub: Mesh):
+        return shard.scan_ragged_sharded(
+            data, offsets, lengths, src_format=src_format,
+            dst_format=dst_format, mesh=sub, chunk_budget=chunk_budget,
+            interpret=interpret)
+
+    return _supervise(run_at, full, policy, log, "sharded ragged scan")

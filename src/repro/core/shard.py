@@ -53,6 +53,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core import packing
 from repro.core import result as R
 from repro.core import stream
+from repro.testing import faults
 
 TILE = packing.TILE
 
@@ -387,6 +388,10 @@ def ragged_transcode_sharded(data, offsets, lengths, *,
                        chunk_budget=chunk_budget)
     fn = sharded_call(mesh, src, dst, bool(validate), errors,
                       runtime.resolve_interpret(interpret))
+    # Host-side chaos hook: fires per CALL (a cache-hot jitted
+    # executable skips the kernel wrappers' trace-time hooks) — the
+    # supervised-launch layer (core.recovery) retries/replans around it.
+    faults.fire(faults.SHARD_LAUNCH)
     bufs, oos, counts, statuses = fn(plan.data, plan.offsets, plan.lengths)
     # Same capacity budget as the single-device launch on this data
     # buffer (factor x its tile span) — the bit-identity contract.
@@ -423,6 +428,7 @@ def scan_ragged_sharded(data, offsets, lengths, *,
                        chunk_budget=chunk_budget)
     fn = sharded_scan_call(mesh, src, dst,
                            runtime.resolve_interpret(interpret))
+    faults.fire(faults.SHARD_LAUNCH)   # per-call chaos hook (see above)
     counts, statuses = fn(plan.data, plan.offsets, plan.lengths)
     return _doc_counts_statuses(plan, np.asarray(counts),
                                 np.asarray(statuses), True)

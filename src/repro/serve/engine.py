@@ -42,11 +42,22 @@ rejection, and egress failures poison only their own slot.
 **Egress** detokenizes to any matrix format (UTF-8 / UTF-16LE /
 UTF-32LE / Latin-1) through the vectorized encoders.
 
+A per-ingress-group **circuit breaker** (:class:`_Breaker`) sits above
+the retry ladder: ``breaker_threshold`` consecutive chunk-launch
+failures open the group, open chunks route launch-free to the host
+fallback, and after ``breaker_cooldown_s`` a half-open probe (one
+launch, real traffic, no retries) decides between closing the breaker
+and another cooldown — a persistently-down device path costs one probe
+per cooldown instead of a retry+backoff storm per chunk.
+
 Scheduling observability: ``Engine.events`` records the slot lifecycle
 of the most recent :meth:`drain` as ``(kind, ticket, slot, step, wall)``
 tuples (``kind`` in ``"admit"`` / ``"finish"`` / ``"reject"``, ``step``
 the global decode-step counter) — the continuous-vs-wave benchmark and
-the mid-wave-refill test both read it.  ``Engine.latencies`` maps
+the mid-wave-refill test both read it.  Breaker transitions append
+``("breaker_open" | "breaker_half_open" | "breaker_closed", group,
+-1, step, wall)`` to the same log (cleared per drain, so transition
+assertions must read the drain that caused them).  ``Engine.latencies`` maps
 recently settled tickets to their submit→settle wall time.  Both are
 **bounded** — ``events`` is a ring buffer (``event_limit`` newest
 entries) and ``latencies`` an insertion-ordered window (``latency_window``
@@ -154,6 +165,65 @@ class _Slot:
     tokens: List[int] = dataclasses.field(default_factory=list)
 
 
+class _Breaker:
+    """Per-ingress-group circuit breaker (closed / open / half-open).
+
+    The retry+backoff ladder is the right answer to a TRANSIENT launch
+    failure; against a persistently-down device path it becomes a
+    storm — every chunk pays ``max_retries`` launches plus backoff
+    sleeps before falling back.  The breaker remembers: after
+    ``threshold`` consecutive chunk-level failures the group goes
+    **open** and chunks route straight to the host ``codecs`` fallback
+    with **zero** device launches.  After ``cooldown_s`` on the
+    injectable clock the next chunk is a **half-open probe**: ONE
+    launch, no retries, carrying that chunk's real traffic — success
+    closes the breaker (full service resumes), failure re-opens it for
+    another cooldown.  Any full-path success resets the failure count.
+    """
+
+    __slots__ = ("threshold", "cooldown_s", "_clock", "state",
+                 "failures", "opened_at")
+
+    def __init__(self, threshold: int, cooldown_s: float, clock):
+        self.threshold = threshold
+        self.cooldown_s = cooldown_s
+        self._clock = clock
+        self.state = "closed"
+        self.failures = 0
+        self.opened_at: Optional[float] = None
+
+    def route(self) -> str:
+        """How the next chunk launch should run: ``"full"`` (closed —
+        retry+backoff), ``"probe"`` (half-open — one launch, no
+        retries) or ``"skip"`` (open — host fallback, no launch).
+        Moves open -> half_open when the cooldown has elapsed."""
+        if self.state == "open":
+            if self._clock() - self.opened_at >= self.cooldown_s:
+                self.state = "half_open"
+                return "probe"
+            return "skip"
+        if self.state == "half_open":
+            return "probe"
+        return "full"
+
+    def record(self, ok: bool) -> Optional[str]:
+        """Record a routed launch outcome; returns the new state name
+        when this outcome caused a transition, else ``None``."""
+        if ok:
+            self.failures = 0
+            if self.state != "closed":
+                self.state = "closed"
+                self.opened_at = None
+                return "closed"
+            return None
+        self.failures += 1
+        if self.state == "half_open" or self.failures >= self.threshold:
+            self.state = "open"
+            self.opened_at = self._clock()
+            return "open"
+        return None
+
+
 class Engine:
     def __init__(self, model, cfg, family: str, params, max_batch: int = 8,
                  max_prompt: int = 512, max_new: int = 128,
@@ -164,7 +234,9 @@ class Engine:
                  bucket_min: int = 8, bucket_step: float = 1.5,
                  compile_cache_size: int = 32,
                  latency_window: int = 1024, event_limit: int = 4096,
-                 ingress_shards: int = 1):
+                 ingress_shards: int = 1,
+                 breaker_threshold: int = 3,
+                 breaker_cooldown_s: float = 30.0):
         if scheduler not in ("continuous", "wave"):
             raise ValueError(
                 f"scheduler must be 'continuous' or 'wave', got {scheduler!r}")
@@ -188,6 +260,16 @@ class Engine:
         # Injectable for deterministic chaos tests — production uses the
         # monotonic clock and real sleep.
         self._clock, self._sleep = clock, sleep
+        # Circuit breakers, one per ingress group, created lazily on
+        # first use (see _Breaker): ``breaker_threshold`` consecutive
+        # chunk failures open a group; ``breaker_cooldown_s`` (on the
+        # injectable clock) gates the half-open probe.
+        if breaker_threshold < 1:
+            raise ValueError(
+                f"breaker_threshold must be >= 1, got {breaker_threshold}")
+        self.breaker_threshold = breaker_threshold
+        self.breaker_cooldown_s = breaker_cooldown_s
+        self._breakers: Dict[str, _Breaker] = {}
         # "continuous": a freed slot refills immediately, mid-wave.
         # "wave": refill only once ALL slots drain — the wave-batching
         # reference the table_serve benchmark compares against.
@@ -197,6 +279,10 @@ class Engine:
         #   fallback  — prompts served via the host ``codecs`` path
         #   shed      — requests rejected at admission (overload)
         #   deadline  — requests expired before their slot admission
+        #   breaker_open / breaker_half_open / breaker_closed — breaker
+        #               state TRANSITIONS (not states); breaker_skip
+        #               counts chunks routed to fallback launch-free
+        #               while open, breaker_probe the half-open probes.
         self.counters = collections.Counter()
         # Length-bucket upper bounds (inclusive), shared by the admission
         # queues, the ingress pack geometry and the prefill padding.
@@ -277,6 +363,52 @@ class Engine:
                 self.counters["retries"] += 1
                 self._sleep(delay)
                 delay *= 2
+
+    # ------------------------------------------------------------------
+    # Circuit breaker (one per ingress group; DESIGN.md §10).
+
+    @staticmethod
+    def _group_name(group) -> str:
+        """Stable string key/event label for an ingress group ("utf-8"
+        or an (encoding, errors) pair)."""
+        return group if isinstance(group, str) else ":".join(group)
+
+    def _breaker_route(self, group):
+        """The group's breaker and its routing verdict for the next
+        chunk launch ("full" / "probe" / "skip"); emits the open ->
+        half_open transition and counts launch-free skips."""
+        name = self._group_name(group)
+        br = self._breakers.get(name)
+        if br is None:
+            br = self._breakers[name] = _Breaker(
+                self.breaker_threshold, self.breaker_cooldown_s,
+                self._clock)
+            return br, "full"
+        before = br.state
+        mode = br.route()
+        if br.state != before:          # open -> half_open (cooldown up)
+            self._breaker_event(name, br.state)
+        if mode == "skip":
+            self.counters["breaker_skip"] += 1
+        return br, mode
+
+    def _breaker_record(self, group, br: _Breaker, ok: bool):
+        transition = br.record(ok)
+        if transition is not None:
+            self._breaker_event(self._group_name(group), transition)
+
+    def _breaker_event(self, name: str, state: str):
+        self.counters[f"breaker_{state}"] += 1
+        self.events.append((f"breaker_{state}", name, -1, self._step,
+                            self._clock()))
+
+    def _probe_launch(self, fn):
+        """Half-open probe: exactly ONE launch, no retry, no backoff —
+        the probe either closes the breaker or re-opens it.  It carries
+        the chunk's real traffic, so a success IS served work."""
+        self.counters["breaker_probe"] += 1
+        faults.fire(faults.ENGINE_PROBE)
+        return fn()
 
     # ------------------------------------------------------------------
     # Admission (submit / poll / drain / serve).
@@ -623,13 +755,24 @@ class Engine:
                     pad_to_docs=self.max_batch)
                 return cell(pk.data, pk.offsets, pk.lengths)
 
+        br, mode = self._breaker_route("utf-8")
+        if mode == "skip":
+            # Breaker open: the device path is known-down, so the chunk
+            # routes straight to the host fallback — no launch, no
+            # retry storm.
+            return self._host_fallback_utf8(take)
         try:
-            _counts, statuses = self._launch_with_retry(_scan)
+            _counts, statuses = (self._probe_launch(_scan)
+                                 if mode == "probe"
+                                 else self._launch_with_retry(_scan))
         except Exception:
-            # Device path down for this chunk after retries: degrade
+            # Device path down for this chunk after retries (or the
+            # half-open probe failed): feed the breaker and degrade
             # per-document to the host ``codecs`` path so clean prompts
             # still serve and poison ones get typed errors.
+            self._breaker_record("utf-8", br, ok=False)
             return self._host_fallback_utf8(take)
+        self._breaker_record("utf-8", br, ok=True)
         statuses = np.asarray(statuses)
         admitted = []
         for k, (ticket, req, raw) in enumerate(take):
@@ -763,10 +906,17 @@ class Engine:
                     pad_to_docs=self.max_batch)
                 return cell(pk.data, pk.offsets, pk.lengths)
 
-        try:
-            res = self._launch_with_retry(_launch)
-        except Exception:
+        group = (encoding, policy)
+        br, mode = self._breaker_route(group)
+        if mode == "skip":
             return self._host_fallback_unit(encoding, policy, take)
+        try:
+            res = (self._probe_launch(_launch) if mode == "probe"
+                   else self._launch_with_retry(_launch))
+        except Exception:
+            self._breaker_record(group, br, ok=False)
+            return self._host_fallback_unit(encoding, policy, take)
+        self._breaker_record(group, br, ok=True)
         outs = packing.unpack_results(res.buffer, res.offsets, res.counts)
         statuses = np.asarray(res.statuses)
         admitted = []

@@ -19,6 +19,11 @@ Fault kinds:
   * ``"truncate"`` -- slice the payload to ``truncate_to`` elements — a
     short read / truncated chunk; downstream accounting must follow the
     truncated length, never the intended one.
+  * ``"hang"``     -- sleep ``hang_s`` then continue — a wedged transfer
+    or kernel.  Semantically the call never comes back on its own:
+    pick ``hang_s`` comfortably past the watchdog under test, and the
+    supervising layer (``core.recovery``, the feeder watchdog) must
+    time out, abandon the call, and surface a typed error.
 
 Fault points currently wired (grep for ``faults.fire``):
 
@@ -33,11 +38,25 @@ Fault points currently wired (grep for ``faults.fire``):
   ``stream.chunk``    ``core.stream.transcode_stream_chunk`` (payload:
                       the incoming chunk — truncation-capable)
   ``pipeline.batch``  ``data.pipeline.batch_transcode``
+  ``shard.launch``    ``core.shard.ragged_transcode_sharded`` /
+                      ``scan_ragged_sharded`` — host-side, so it fires
+                      per *call* even when the jitted executable is
+                      cache-hot (kernel-wrapper points only fire at
+                      trace time)
+  ``feed.stage``      ``data.shard_feed.DoubleBufferedFeeder`` stage
+                      thread (payload: the wave's host arrays)
+  ``engine.probe``    ``serve.engine.Engine`` half-open breaker probe
+                      launch — lets chaos tests fail the probe itself
   ==================  ====================================================
 
 The harness is intentionally NOT thread-safe (a module-global active
-harness): the chaos suite is single-threaded and the hook must stay
-free of locks on the production path.
+harness): the chaos suite is single-threaded from the harness's point
+of view — arming/disarming happens only on the test thread, and the
+only cross-thread traffic is ``fire()`` calls from the feeder's stage
+worker and the recovery watchdog's launch thread, which read the
+module global without locking (benign under the GIL for the dict
+bump + list append they perform).  The hook must stay free of locks on
+the production path.
 """
 
 from __future__ import annotations
@@ -57,9 +76,13 @@ KERNEL_RAGGED = "kernel.ragged"
 KERNEL_RAGGED_SCAN = "kernel.ragged_scan"
 STREAM_CHUNK = "stream.chunk"
 PIPELINE_BATCH = "pipeline.batch"
+SHARD_LAUNCH = "shard.launch"
+FEED_STAGE = "feed.stage"
+ENGINE_PROBE = "engine.probe"
 
 POINTS = (KERNEL_ONEPASS, KERNEL_FUSED, KERNEL_SCAN, KERNEL_RAGGED,
-          KERNEL_RAGGED_SCAN, STREAM_CHUNK, PIPELINE_BATCH)
+          KERNEL_RAGGED_SCAN, STREAM_CHUNK, PIPELINE_BATCH,
+          SHARD_LAUNCH, FEED_STAGE, ENGINE_PROBE)
 
 
 class FaultInjected(RuntimeError):
@@ -73,14 +96,15 @@ class Fault:
     indices in ``times`` (1-based; ``None`` = every call)."""
 
     point: str
-    kind: str = "error"                 # "error" | "latency" | "truncate"
+    kind: str = "error"         # "error" | "latency" | "truncate" | "hang"
     times: Optional[Sequence[int]] = (1,)
     exc: Optional[Callable[[], BaseException]] = None
     latency_s: float = 0.0
     truncate_to: int = 0
+    hang_s: float = 0.0
 
     def __post_init__(self):
-        if self.kind not in ("error", "latency", "truncate"):
+        if self.kind not in ("error", "latency", "truncate", "hang"):
             raise ValueError(f"unknown fault kind: {self.kind!r}")
 
     def matches(self, call_index: int) -> bool:
@@ -104,6 +128,11 @@ class Harness:
             self.fired.append((point, f.kind, idx))
             if f.kind == "latency":
                 time.sleep(f.latency_s)
+            elif f.kind == "hang":
+                # A wedge, not a straggler: the sleep only bounds the
+                # test's own runtime — the supervisor must have timed
+                # out and abandoned this call long before it returns.
+                time.sleep(f.hang_s)
             elif f.kind == "truncate":
                 if payload is not None:
                     payload = payload[: f.truncate_to]

@@ -10,6 +10,7 @@ the engine's ingress actually launches through and assert against a
 clean-run baseline from the same engine.
 """
 
+import os
 import time
 
 import numpy as np
@@ -294,3 +295,150 @@ def test_serve_deadline_expiry_typed():
     assert not res[0].ok and res[0].code == eng.REJECTED_DEADLINE
     assert res[1].ok
     assert e.counters["deadline"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Fault-point registry completeness (satellite): every ``faults.POINTS``
+# entry must have (a) a ``faults.fire()`` call site under ``src/repro``
+# and (b) a test-reachable code path that actually drives a call through
+# it — so a new kernel or subsystem can't ship a registry entry without
+# chaos coverage (mirrors PR 7's ``tc.DEPRECATED`` completeness sweep).
+
+
+def _point_constants():
+    """point value -> module constant name (e.g. "kernel.onepass" ->
+    "KERNEL_ONEPASS"), built from the module itself so a new POINTS
+    entry is covered without editing this test."""
+    names = {v: k for k, v in vars(faults).items()
+             if k.isupper() and isinstance(v, str) and v in faults.POINTS}
+    assert set(names) == set(faults.POINTS)
+    return names
+
+
+def test_every_fault_point_has_a_src_call_site():
+    root = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src", "repro")
+    blobs = []
+    for dirpath, _dirs, files in os.walk(root):
+        for f in files:
+            if f.endswith(".py"):
+                with open(os.path.join(dirpath, f)) as fh:
+                    blobs.append(fh.read())
+    text = "\n".join(blobs)
+    for point, const in sorted(_point_constants().items()):
+        assert f"faults.fire(faults.{const}" in text, (
+            f"fault point {point!r} has no faults.fire(faults.{const}...) "
+            f"call site under src/repro — a registry entry nothing can "
+            f"inject into")
+
+
+def _packed_docs():
+    from repro.core import packing
+    return packing.pack_documents(
+        [np.frombuffer(b"hello", np.uint8),
+         np.frombuffer(b"world!", np.uint8)], dtype=np.uint8)
+
+
+def _x_onepass():
+    op.transcode_onepass(jnp.asarray(np.frombuffer(b"hello", np.uint8)),
+                         src="utf8", dst="utf16")
+
+
+def _x_fused():
+    from repro.kernels import fused_transcode as ft
+    ft.transcode_fused(jnp.asarray(np.frombuffer(b"hello", np.uint8)),
+                       src="utf8", dst="utf16")
+
+
+def _x_scan():
+    from repro.kernels import fused_transcode as ft
+    ft.scan_fused(jnp.asarray(np.frombuffer(b"hello", np.uint8)),
+                  src="utf8", dst="utf16")
+
+
+def _x_ragged():
+    from repro.kernels import ragged_transcode as rt
+    p = _packed_docs()
+    rt.transcode_ragged(p.data, p.offsets, p.lengths,
+                        src="utf8", dst="utf16")
+
+
+def _x_ragged_scan():
+    from repro.kernels import ragged_transcode as rt
+    p = _packed_docs()
+    rt.scan_ragged(p.data, p.offsets, p.lengths, src="utf8", dst="utf16")
+
+
+def _x_stream():
+    st = stream_init("utf8", "utf16")
+    transcode_stream_chunk(st, np.frombuffer(b"hello", np.uint8))
+
+
+def _x_pipeline():
+    from repro.data import pipeline
+    docs = np.zeros((1, 8), np.uint8)
+    docs[0, :5] = np.frombuffer(b"hello", np.uint8)
+    pipeline.batch_transcode(docs, np.array([5], np.int32))
+
+
+def _x_shard_launch():
+    from repro.core import shard
+    p = _packed_docs()
+    shard.ragged_transcode_sharded(p.data, p.offsets, p.lengths,
+                                   src_format="utf8", dst_format="utf16",
+                                   n_shards=1)
+
+
+def _x_feed_stage():
+    from jax.sharding import Mesh
+    from repro.data.shard_feed import DoubleBufferedFeeder
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    feeder = DoubleBufferedFeeder(mesh, stage_fn=lambda arrays: arrays)
+    try:
+        feeder.run([("w0",)], lambda *staged: staged)
+    finally:
+        feeder.close()
+
+
+def _x_engine_probe():
+    fam, cfg, model = registry.get("bytelm-100m", reduced=True)
+    params = model.init(jax.random.PRNGKey(0))
+    e = Engine(model, cfg, fam, params, max_batch=2, max_prompt=64,
+               max_new=4, backoff_base_s=0.0, sleep=lambda s: None,
+               breaker_threshold=1, breaker_cooldown_s=0.0)
+    e.serve([Request(CLEAN)])            # pre-warm the utf-8 cells
+    # Trip the breaker under a NESTED harness so the failure injection
+    # is invisible to the outer (counting) harness.
+    with faults.harness(faults.Fault(faults.KERNEL_RAGGED_SCAN,
+                                     times=None)):
+        e.serve([Request(CLEAN)])        # retries exhaust -> breaker opens
+    e.serve([Request(CLEAN)])            # cooldown 0 -> half-open probe
+
+
+_EXERCISERS = {
+    faults.KERNEL_ONEPASS: _x_onepass,
+    faults.KERNEL_FUSED: _x_fused,
+    faults.KERNEL_SCAN: _x_scan,
+    faults.KERNEL_RAGGED: _x_ragged,
+    faults.KERNEL_RAGGED_SCAN: _x_ragged_scan,
+    faults.STREAM_CHUNK: _x_stream,
+    faults.PIPELINE_BATCH: _x_pipeline,
+    faults.SHARD_LAUNCH: _x_shard_launch,
+    faults.FEED_STAGE: _x_feed_stage,
+    faults.ENGINE_PROBE: _x_engine_probe,
+}
+
+
+def test_exerciser_registry_covers_every_point():
+    assert set(_EXERCISERS) == set(faults.POINTS), (
+        "a new faults.POINTS entry needs an exerciser here — otherwise "
+        "it can ship without any test able to reach its fire() call")
+
+
+@pytest.mark.parametrize("point", faults.POINTS)
+def test_every_fault_point_reachable_from_tests(point):
+    with faults.harness() as h:          # no faults armed: count only
+        _EXERCISERS[point]()
+    assert h.calls.get(point, 0) >= 1, (
+        f"exerciser for {point!r} never drove a call through its "
+        f"fire() site")

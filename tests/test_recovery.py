@@ -1,0 +1,645 @@
+"""Shard-level fault tolerance (DESIGN.md §10): the supervised sharded
+launch (retry / watchdog / degraded-mesh replan), the hardened
+double-buffered feeder, and the serve engine's circuit breaker.
+
+Chaos contract under test: every injected fault class — shard launch
+error, shard hang, stage-thread error, persistent device-path failure —
+ends in a retried success, a degraded-but-BIT-IDENTICAL replan, or a
+typed error.  Never a lost or orphaned wave, and a persistently-open
+breaker launches nothing but probes.
+
+Multi-device degraded-replan cases follow the test_shard convention:
+skipped unless the process has >= 8 devices (the CI chaos job and
+``scripts/check.sh --chaos`` re-run this module under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``), plus an
+always-run forced-8-device subprocess smoke.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import Mesh
+
+from repro.core import packing, recovery, shard
+from repro.core import transcode as tc
+from repro.data import shard_feed
+from repro.models import registry
+from repro.serve.engine import Engine, Request
+from repro.testing import faults
+
+from tests.test_shard import (_FULL_FUZZ_REASON, _assert_result_equal,
+                              _docs_for, _run)
+
+NOP = recovery.RetryPolicy(backoff_base_s=0.0)
+
+
+def _packed(seed=20260801, n_docs=5, n_chars=200):
+    docs = _docs_for("utf8", n_docs=n_docs, n_chars=n_chars, seed=seed)
+    return packing.pack_documents(docs, dtype=np.uint8)
+
+
+@pytest.fixture(scope="module")
+def pk():
+    return _packed()
+
+
+@pytest.fixture(scope="module")
+def ref(pk):
+    return tc.ragged_transcode(pk.data, pk.offsets, pk.lengths,
+                               src_format="utf8", dst_format="utf16")
+
+
+@pytest.fixture(scope="module")
+def lm():
+    fam, cfg, model = registry.get("bytelm-100m", reduced=True)
+    params = model.init(jax.random.PRNGKey(0))
+    return fam, cfg, model, params
+
+
+def _mk_engine(lm, **kw):
+    fam, cfg, model, params = lm
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_prompt", 64)
+    kw.setdefault("max_new", 4)
+    kw.setdefault("backoff_base_s", 0.0)
+    kw.setdefault("sleep", lambda s: None)
+    return Engine(model, cfg, fam, params, **kw)
+
+
+def _mesh1():
+    return Mesh(np.array(jax.devices()[:1]), ("data",))
+
+
+# ---------------------------------------------------------------------------
+# The ``hang`` fault kind.
+
+
+def test_hang_kind_sleeps_then_passes_payload_through():
+    with faults.harness(faults.Fault(faults.SHARD_LAUNCH, kind="hang",
+                                     hang_s=0.03)) as h:
+        t0 = time.monotonic()
+        out = faults.fire(faults.SHARD_LAUNCH, "payload")
+        assert time.monotonic() - t0 >= 0.02
+        assert out == "payload"
+    assert h.fired == [(faults.SHARD_LAUNCH, "hang", 1)]
+
+
+def test_bad_kind_still_rejected():
+    with pytest.raises(ValueError):
+        faults.Fault(faults.SHARD_LAUNCH, kind="wedge")
+
+
+# ---------------------------------------------------------------------------
+# call_with_watchdog.
+
+
+def test_watchdog_none_runs_inline():
+    here = threading.current_thread()
+    seen = []
+    out = recovery.call_with_watchdog(
+        lambda: seen.append(threading.current_thread()) or 41, None)
+    assert out == 41 and seen == [here]
+
+
+def test_watchdog_returns_result_and_propagates_errors():
+    assert recovery.call_with_watchdog(lambda: 7, 10.0) == 7
+
+    def boom():
+        raise KeyError("inner")
+
+    with pytest.raises(KeyError):
+        recovery.call_with_watchdog(boom, 10.0)
+
+
+def test_watchdog_trips_on_hang_with_fake_clock():
+    """A call gated on an Event never finishes on its own; the watchdog
+    (driven by an auto-advancing fake clock, no real waiting) must
+    abandon it and raise the typed timeout."""
+    gate = threading.Event()
+    ticks = [0.0]
+
+    def clk():
+        ticks[0] += 1.0
+        return ticks[0]
+
+    try:
+        t0 = time.monotonic()
+        with pytest.raises(recovery.WatchdogTimeout) as ei:
+            recovery.call_with_watchdog(lambda: gate.wait(), 5.0,
+                                        clock=clk, poll_s=0.001,
+                                        what="gated call")
+        assert time.monotonic() - t0 < 2.0      # no real 5s wait
+        assert "gated call" in str(ei.value)
+        assert ei.value.timeout_s == 5.0
+    finally:
+        gate.set()      # release the abandoned worker
+
+
+# ---------------------------------------------------------------------------
+# Supervised sharded launches (single-device: retry + watchdog + typed
+# exhaustion; the degraded replan needs >= 2 devices, below).
+
+
+def test_supervised_clean_matches_unsupervised(pk, ref):
+    log = recovery.SupervisionLog()
+    res = recovery.supervised_ragged_transcode(
+        pk.data, pk.offsets, pk.lengths, n_shards=1, policy=NOP, log=log)
+    _assert_result_equal(ref, res, "supervised clean")
+    assert log.attempts == [(1, 0, "ok")]
+    assert (log.retries, log.replans, log.final_shards) == (0, 0, 1)
+
+
+def test_supervised_transient_fault_retried_bit_identical(pk, ref):
+    with faults.harness(faults.Fault(faults.SHARD_LAUNCH,
+                                     times=(1,))) as h:
+        log = recovery.SupervisionLog()
+        res = recovery.supervised_ragged_transcode(
+            pk.data, pk.offsets, pk.lengths, n_shards=1, policy=NOP,
+            log=log)
+    assert h.fires_at(faults.SHARD_LAUNCH) == 1
+    _assert_result_equal(ref, res, "supervised transient")
+    assert log.retries == 1 and log.replans == 0
+    assert log.attempts == [(1, 0, "FaultInjected"), (1, 1, "ok")]
+
+
+def test_supervised_hang_watchdog_retried_bit_identical(pk, ref):
+    """A hung launch (``hang`` fault past the watchdog) is abandoned and
+    retried; the retry's result is bit-identical.  Real clock: a fake
+    auto-advancing clock cannot tell a hung attempt from a healthy one.
+    ``ref`` has pre-warmed the executable, so the healthy retry runs
+    well inside the watchdog."""
+    pol = recovery.RetryPolicy(backoff_base_s=0.0, watchdog_s=0.5,
+                               poll_s=0.002)
+    t0 = time.monotonic()
+    with faults.harness(faults.Fault(faults.SHARD_LAUNCH, kind="hang",
+                                     hang_s=2.0, times=(1,))):
+        log = recovery.SupervisionLog()
+        res = recovery.supervised_ragged_transcode(
+            pk.data, pk.offsets, pk.lengths, n_shards=1, policy=pol,
+            log=log)
+    assert time.monotonic() - t0 < 1.8, "watchdog did not abandon the hang"
+    _assert_result_equal(ref, res, "supervised hang")
+    assert log.attempts[0] == (1, 0, "WatchdogTimeout")
+    assert log.final_shards == 1
+    # Let the abandoned worker wake and finish INSIDE this test rather
+    # than racing a later module's cache clear.
+    time.sleep(2.1)
+
+
+def test_supervised_persistent_fault_typed_exhaustion(pk):
+    with faults.harness(faults.Fault(faults.SHARD_LAUNCH, times=None)):
+        with pytest.raises(recovery.DegradedMeshExhausted) as ei:
+            recovery.supervised_ragged_transcode(
+                pk.data, pk.offsets, pk.lengths, n_shards=1,
+                policy=recovery.RetryPolicy(max_retries=2,
+                                            backoff_base_s=0.0))
+    causes = ei.value.causes
+    assert [(n, a) for n, a, _e in causes] == [(1, 0), (1, 1), (1, 2)]
+    assert all(isinstance(e, faults.FaultInjected) for _n, _a, e in causes)
+    assert isinstance(ei.value, recovery.ShardFaultError)
+
+
+def test_supervised_backoff_schedule_is_exponential(pk):
+    slept = []
+    pol = recovery.RetryPolicy(max_retries=3, backoff_base_s=0.05,
+                               sleep=slept.append)
+    with faults.harness(faults.Fault(faults.SHARD_LAUNCH, times=None)):
+        with pytest.raises(recovery.DegradedMeshExhausted):
+            recovery.supervised_ragged_transcode(
+                pk.data, pk.offsets, pk.lengths, n_shards=1, policy=pol)
+    assert slept == [0.05, 0.1, 0.2]
+
+
+def test_supervised_min_shards_validated(pk):
+    with pytest.raises(ValueError):
+        recovery.supervised_ragged_transcode(
+            pk.data, pk.offsets, pk.lengths, n_shards=1,
+            policy=recovery.RetryPolicy(min_shards=2))
+
+
+def test_supervised_scan_transient_retry(pk):
+    want_c, want_s = tc.ragged_scan(pk.data, pk.offsets, pk.lengths,
+                                    src_format="utf8", dst_format="utf16")
+    with faults.harness(faults.Fault(faults.SHARD_LAUNCH, times=(1,))):
+        got_c, got_s = recovery.supervised_scan_ragged(
+            pk.data, pk.offsets, pk.lengths, n_shards=1, policy=NOP)
+    assert np.array_equal(np.asarray(want_c), np.asarray(got_c))
+    assert np.array_equal(np.asarray(want_s), np.asarray(got_s))
+
+
+def test_degraded_mesh_is_device_prefix():
+    full = _mesh1()
+    sub = recovery.degraded_mesh(full, 1)
+    assert sub.axis_names == ("data",)
+    assert list(sub.devices.flat) == list(full.devices.flat)[:1]
+    with pytest.raises(ValueError):
+        recovery.degraded_mesh(full, 2)
+    with pytest.raises(ValueError):
+        recovery.degraded_mesh(full, 0)
+
+
+# ---------------------------------------------------------------------------
+# Degraded-mesh replan: >= 8 devices (CI chaos job) or subprocess.
+
+
+@pytest.mark.skipif(jax.device_count() < 8, reason=_FULL_FUZZ_REASON)
+def test_degraded_replan_bit_identical_8dev(pk, ref):
+    """All attempts at 4 shards fail -> the supervisor re-plans onto 3
+    devices, whose cut rules + gather make the result bit-identical to
+    the single-device path.  The fault's call indices pin the shape:
+    calls 1-3 are the 4-shard attempts, call 4 is the replan."""
+    mesh = Mesh(np.array(jax.devices()[:4]), ("data",))
+    with faults.harness(faults.Fault(faults.SHARD_LAUNCH,
+                                     times=(1, 2, 3))) as h:
+        log = recovery.SupervisionLog()
+        res = recovery.supervised_ragged_transcode(
+            pk.data, pk.offsets, pk.lengths, mesh=mesh,
+            policy=recovery.RetryPolicy(max_retries=2, backoff_base_s=0.0),
+            log=log)
+    assert h.calls[faults.SHARD_LAUNCH] == 4
+    _assert_result_equal(ref, res, "degraded replan")
+    assert log.replans == 1 and log.final_shards == 3
+    assert log.attempts[-1] == (3, 0, "ok")
+
+
+@pytest.mark.skipif(jax.device_count() < 8, reason=_FULL_FUZZ_REASON)
+def test_degraded_replan_exhausted_min_shards_8dev(pk):
+    """min_shards bounds the degradation ladder: with every size failing,
+    the typed exhaustion names sizes 4, 3, 2 — never 1."""
+    mesh = Mesh(np.array(jax.devices()[:4]), ("data",))
+    with faults.harness(faults.Fault(faults.SHARD_LAUNCH, times=None)):
+        with pytest.raises(recovery.DegradedMeshExhausted) as ei:
+            recovery.supervised_ragged_transcode(
+                pk.data, pk.offsets, pk.lengths, mesh=mesh,
+                policy=recovery.RetryPolicy(max_retries=0,
+                                            backoff_base_s=0.0,
+                                            min_shards=2))
+    assert [n for n, _a, _e in ei.value.causes] == [4, 3, 2]
+
+
+@pytest.mark.skipif(jax.device_count() < 8, reason=_FULL_FUZZ_REASON)
+def test_degraded_scan_replan_bit_identical_8dev(pk):
+    want_c, want_s = tc.ragged_scan(pk.data, pk.offsets, pk.lengths,
+                                    src_format="utf8", dst_format="utf16")
+    mesh = Mesh(np.array(jax.devices()[:2]), ("data",))
+    with faults.harness(faults.Fault(faults.SHARD_LAUNCH, times=(1,))):
+        got_c, got_s = recovery.supervised_scan_ragged(
+            pk.data, pk.offsets, pk.lengths, mesh=mesh,
+            policy=recovery.RetryPolicy(max_retries=0, backoff_base_s=0.0),
+            log=(log := recovery.SupervisionLog()))
+    assert log.replans == 1 and log.final_shards == 1
+    assert np.array_equal(np.asarray(want_c), np.asarray(got_c))
+    assert np.array_equal(np.asarray(want_s), np.asarray(got_s))
+
+
+def test_degraded_replan_8dev_subprocess_smoke():
+    """Always-run replan proof in a forced-8-device subprocess: persistent
+    failure at 8 and 7 shards, success at 6 — bit-identical to the
+    single-device reference, with the supervision log pinning the path."""
+    _run("""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax
+assert jax.device_count() == 8
+from repro.core import packing, recovery, transcode as tc
+from repro.data import synthetic
+from repro.testing import faults
+
+rng = np.random.default_rng(20260801)
+langs = ["arabic", "latin", "chinese", "emoji"]
+docs = [synthetic.utf8_array(langs[i % 4], int(rng.integers(1, 1200)),
+                             seed=i) for i in range(9)]
+poison = synthetic.utf8_array("latin", 300, seed=7).copy()
+poison[40] = 0xFF
+docs[4] = poison
+pk = packing.pack_documents(docs)
+ref = tc.ragged_transcode(pk.data, pk.offsets, pk.lengths,
+                          src_format="utf8", dst_format="utf16")
+# max_retries=1 -> two attempts per size; calls 1-2 fail at 8 shards,
+# calls 3-4 fail at 7, call 5 succeeds at 6.
+pol = recovery.RetryPolicy(max_retries=1, backoff_base_s=0.0)
+with faults.harness(faults.Fault(faults.SHARD_LAUNCH,
+                                 times=(1, 2, 3, 4))) as h:
+    log = recovery.SupervisionLog()
+    res = recovery.supervised_ragged_transcode(
+        pk.data, pk.offsets, pk.lengths, n_shards=8, policy=pol, log=log)
+assert h.calls[faults.SHARD_LAUNCH] == 5, h.calls
+assert log.replans == 2 and log.final_shards == 6, log
+assert log.retries == 2, log
+for name in ("buffer", "offsets", "counts", "statuses"):
+    a, b = np.asarray(getattr(ref, name)), np.asarray(getattr(res, name))
+    assert a.shape == b.shape and (a == b).all(), name
+print("PASS")
+""")
+
+
+# ---------------------------------------------------------------------------
+# Hardened feeder: typed per-wave errors, isolation, watchdog, no
+# orphaned futures.
+
+
+def test_feeder_stage_error_typed_and_isolated():
+    """A stage-thread exception becomes a typed WaveFailure in that
+    wave's slot; every other wave still serves — zero lost waves."""
+    def stage(arrays):
+        if arrays[0] == "poison":
+            raise RuntimeError("stage blew up")
+        return arrays
+
+    with shard_feed.DoubleBufferedFeeder(_mesh1(), stage_fn=stage) as f:
+        waves = [("w0",), ("poison",), ("w2",), ("w3",)]
+        res, stats = f.run(waves, lambda x: x.upper())
+    assert len(res) == len(stats) == len(waves)          # nothing lost
+    assert [r for r in res if not isinstance(r, shard_feed.WaveFailure)] \
+        == ["W0", "W2", "W3"]
+    bad = res[1]
+    assert isinstance(bad, shard_feed.WaveFailure)
+    assert (bad.wave, bad.phase) == (1, "stage")
+    assert isinstance(bad.error, RuntimeError)
+    assert "stage" in str(bad)
+
+
+def test_feeder_launch_error_typed_and_isolated():
+    def launch(x):
+        if x == "boom":
+            raise ValueError("kernel died")
+        return x
+
+    with shard_feed.DoubleBufferedFeeder(_mesh1(),
+                                         stage_fn=lambda a: a) as f:
+        res, _ = f.run([("ok0",), ("boom",), ("ok2",)], launch)
+    assert res[0] == "ok0" and res[2] == "ok2"
+    assert isinstance(res[1], shard_feed.WaveFailure)
+    assert (res[1].wave, res[1].phase) == (1, "launch")
+
+
+def test_feeder_launch_raise_does_not_orphan_future():
+    """Satellite regression: with isolate=False a mid-loop launch raise
+    propagates, but the already-submitted staging future for the NEXT
+    wave must be drained/cancelled — close() returns promptly instead
+    of blocking on orphaned work."""
+    staged = []
+
+    def stage(arrays):
+        staged.append(arrays[0])
+        return arrays
+
+    f = shard_feed.DoubleBufferedFeeder(_mesh1(), stage_fn=stage,
+                                        isolate=False)
+
+    def launch(x):
+        raise ValueError("die on wave 0")
+
+    with pytest.raises(ValueError):
+        f.run([("w0",), ("w1",), ("w2",)], launch)
+    assert f._inflight is None          # drained in the finally
+    t0 = time.monotonic()
+    f.close()
+    assert time.monotonic() - t0 < 1.0
+    # The in-flight "w1" stage was either cancelled before it started or
+    # consumed; "w2" was never submitted.  Either way: not orphaned.
+    assert staged in (["w0"], ["w0", "w1"])
+
+
+def test_feeder_waves_iterator_raise_does_not_orphan_future():
+    def bad_waves():
+        yield ("w0",)
+        yield ("w1",)
+        raise RuntimeError("iterator died")
+
+    f = shard_feed.DoubleBufferedFeeder(_mesh1(), stage_fn=lambda a: a)
+    with pytest.raises(RuntimeError):
+        f.run(bad_waves(), lambda v: v)
+    assert f._inflight is None
+    t0 = time.monotonic()
+    f.close()
+    assert time.monotonic() - t0 < 1.0
+
+
+def test_feeder_stage_hang_watchdog_isolates_and_respawns():
+    """A HUNG stage (gated on an Event, fake clock) trips the watchdog,
+    surfaces typed, and — because the one staging worker is wedged —
+    the pool respawns so later waves still stage and serve."""
+    gate = threading.Event()
+    ticks = [0.0]
+
+    def clk():
+        ticks[0] += 0.5
+        return ticks[0]
+
+    def stage(arrays):
+        if arrays[0] == "hang":
+            gate.wait()
+        return arrays
+
+    try:
+        f = shard_feed.DoubleBufferedFeeder(
+            _mesh1(), stage_fn=stage, clock=clk, watchdog_s=30.0,
+            poll_s=0.001)
+        res, _ = f.run([("hang",), ("w1",), ("w2",)], lambda v: v)
+        assert isinstance(res[0], shard_feed.WaveFailure)
+        assert (res[0].wave, res[0].phase) == (0, "stage")
+        assert isinstance(res[0].error, recovery.WatchdogTimeout)
+        assert res[1] == "w1" and res[2] == "w2"
+        t0 = time.monotonic()
+        f.close(wait=False)             # escape hatch: no join on the hang
+        assert time.monotonic() - t0 < 1.0
+    finally:
+        gate.set()                      # unblock the abandoned worker
+
+
+def test_feeder_launch_hang_watchdog_typed():
+    gate = threading.Event()
+    ticks = [0.0]
+
+    def clk():
+        ticks[0] += 0.5
+        return ticks[0]
+
+    def launch(x):
+        if x == "hang":
+            gate.wait()
+        return x
+
+    try:
+        with shard_feed.DoubleBufferedFeeder(
+                _mesh1(), stage_fn=lambda a: a, clock=clk,
+                watchdog_s=30.0, poll_s=0.001) as f:
+            res, _ = f.run([("hang",), ("w1",)], launch)
+        assert isinstance(res[0], shard_feed.WaveFailure)
+        assert (res[0].wave, res[0].phase) == (0, "launch")
+        assert isinstance(res[0].error, recovery.WatchdogTimeout)
+        assert res[1] == "w1"
+    finally:
+        gate.set()
+
+
+def test_feeder_feed_stage_fault_point(pk, ref):
+    """The FEED_STAGE chaos hook fires in the stage thread on real
+    sharded waves: the faulted wave fails typed, the clean wave's
+    gathered result stays bit-identical."""
+    mesh = _mesh1()
+    plan = shard.plan_shards(np.asarray(pk.data), np.asarray(pk.offsets),
+                             np.asarray(pk.lengths), 1, src="utf8")
+    with faults.harness(faults.Fault(faults.FEED_STAGE, times=(1,))) as h:
+        outs, stats = shard_feed.run_sharded_waves(
+            mesh, [plan, plan], src="utf8", dst="utf16")
+    assert h.calls[faults.FEED_STAGE] == 2
+    assert len(outs) == len(stats) == 2
+    assert isinstance(outs[0], shard_feed.WaveFailure)
+    assert outs[0].phase == "stage"
+    assert isinstance(outs[0].error, faults.FaultInjected)
+    bufs, oos, counts, statuses = outs[1]
+    from repro.kernels import stages
+    _cs, codec_d, factor = stages.get_pair("utf8", "utf16")
+    cap = factor * max(1, -(-int(np.asarray(pk.data).shape[0])
+                            // packing.TILE)) * packing.TILE
+    got = shard._gather_result(plan, cap, codec_d.dtype,
+                               np.asarray(bufs), np.asarray(oos),
+                               np.asarray(counts), np.asarray(statuses),
+                               True)
+    _assert_result_equal(ref, got, "post-fault wave")
+
+
+def test_feeder_empty_waves_after_hardening():
+    with shard_feed.DoubleBufferedFeeder(_mesh1(),
+                                         stage_fn=lambda a: a) as f:
+        assert f.run([], lambda v: v) == ([], [])
+
+
+# ---------------------------------------------------------------------------
+# Serve-engine circuit breaker.
+
+
+def test_breaker_trips_open_and_skips_retry_storm(lm):
+    """threshold consecutive chunk failures open the breaker; while open
+    every chunk serves via the host fallback with ZERO device launches
+    and ZERO retries — the storm the breaker exists to prevent."""
+    e = _mk_engine(lm, max_retries=2, breaker_threshold=2,
+                   breaker_cooldown_s=1e9)
+    assert e.serve([Request(b"warm")])[0].ok
+    with faults.harness(faults.Fault(faults.KERNEL_RAGGED_SCAN,
+                                     times=None)) as h:
+        assert e.serve([Request(b"f1")])[0].ok      # fallback, retries paid
+        assert e.serve([Request(b"f2")])[0].ok      # second failure -> open
+        assert e._breakers["utf-8"].state == "open"
+        assert e.counters["breaker_open"] == 1
+        retries_at_open = e.counters["retries"]
+        calls_at_open = h.calls[faults.KERNEL_RAGGED_SCAN]
+        for i in range(4):                          # open: no launches at all
+            assert e.serve([Request(b"skip%d" % i)])[0].ok
+        assert h.calls[faults.KERNEL_RAGGED_SCAN] == calls_at_open
+        assert e.counters["retries"] == retries_at_open
+        assert e.counters["breaker_skip"] >= 4
+        assert e.counters["fallback"] >= 6
+
+
+def test_breaker_open_event_in_drain_log(lm):
+    e = _mk_engine(lm, max_retries=0, breaker_threshold=1)
+    with faults.harness(faults.Fault(faults.KERNEL_RAGGED_SCAN,
+                                     times=None)):
+        assert e.serve([Request(b"x")])[0].ok
+    kinds = [k for k, *_ in e.events]
+    assert "breaker_open" in kinds
+    k, group, slot, _step, _wall = \
+        [ev for ev in e.events if ev[0] == "breaker_open"][0]
+    assert group == "utf-8" and slot == -1
+
+
+def test_breaker_half_open_probe_failure_reopens(lm):
+    now = [0.0]
+    e = _mk_engine(lm, max_retries=0, breaker_threshold=1,
+                   breaker_cooldown_s=10.0, clock=lambda: now[0])
+    with faults.harness(faults.Fault(faults.KERNEL_RAGGED_SCAN,
+                                     times=None)) as h:
+        assert e.serve([Request(b"trip")])[0].ok
+        assert e._breakers["utf-8"].state == "open"
+        now[0] += 10.0                              # cooldown up
+        calls0 = h.calls[faults.KERNEL_RAGGED_SCAN]
+        assert e.serve([Request(b"probe")])[0].ok   # probe fails
+        assert h.calls[faults.KERNEL_RAGGED_SCAN] == calls0 + 1  # ONE launch
+    assert e._breakers["utf-8"].state == "open"
+    assert e.counters["breaker_probe"] == 1
+    assert e.counters["breaker_half_open"] == 1
+    assert e.counters["breaker_open"] == 2
+    assert e.counters["retries"] == 0               # probes never retry
+
+
+def test_breaker_recovers_via_successful_probe(lm):
+    now = [0.0]
+    e = _mk_engine(lm, max_retries=0, breaker_threshold=1,
+                   breaker_cooldown_s=5.0, clock=lambda: now[0])
+    assert e.serve([Request(b"warm")])[0].ok
+    with faults.harness(faults.Fault(faults.KERNEL_RAGGED_SCAN,
+                                     times=None)):
+        assert e.serve([Request(b"trip")])[0].ok
+    assert e._breakers["utf-8"].state == "open"
+    now[0] += 5.0
+    with faults.harness() as h:                      # fault gone; count calls
+        r = e.serve([Request(b"recovered")])[0]
+    assert r.ok and r.text_bytes is not None
+    assert e._breakers["utf-8"].state == "closed"
+    assert h.calls[faults.KERNEL_RAGGED_SCAN] == 1   # the probe carried it
+    kinds = [k for k, *_ in e.events]
+    assert kinds.index("breaker_half_open") < kinds.index("breaker_closed")
+    assert e.counters["breaker_closed"] == 1
+    # Fully closed again: subsequent chunks run the normal full path.
+    assert e.serve([Request(b"steady")])[0].ok
+    assert e._breakers["utf-8"].state == "closed"
+
+
+def test_breaker_engine_probe_fault_point(lm):
+    """The probe launch itself is a fault point: ENGINE_PROBE faults
+    fail the probe before any kernel runs, re-opening the breaker."""
+    e = _mk_engine(lm, max_retries=0, breaker_threshold=1,
+                   breaker_cooldown_s=0.0)
+    with faults.harness(faults.Fault(faults.KERNEL_RAGGED_SCAN,
+                                     times=(1,))):
+        assert e.serve([Request(b"trip")])[0].ok
+    assert e._breakers["utf-8"].state == "open"
+    with faults.harness(faults.Fault(faults.ENGINE_PROBE,
+                                     times=(1,))) as h:
+        assert e.serve([Request(b"probe")])[0].ok    # probe itself faulted
+    assert h.fires_at(faults.ENGINE_PROBE) == 1
+    assert e._breakers["utf-8"].state == "open"
+    assert e.serve([Request(b"again")])[0].ok        # next probe heals
+    assert e._breakers["utf-8"].state == "closed"
+
+
+def test_breaker_groups_are_independent(lm):
+    """A persistently-failing unit-encoding group opens ITS breaker;
+    the utf-8 group stays closed and on the device path."""
+    e = _mk_engine(lm, max_retries=0, breaker_threshold=1)
+    p16 = "hi".encode("utf-16-le")
+    assert e.serve([Request(b"warm")])[0].ok     # compile the scan cell
+    with faults.harness(faults.Fault(faults.KERNEL_RAGGED,
+                                     times=None)) as h:
+        assert e.serve([Request(p16, in_encoding="utf-16-le")])[0].ok
+        assert e._breakers["utf-16-le:strict"].state == "open"
+        scans0 = h.calls.get(faults.KERNEL_RAGGED_SCAN, 0)
+        assert e.serve([Request(b"utf8 fine")])[0].ok
+        assert h.calls[faults.KERNEL_RAGGED_SCAN] == scans0 + 1  # device path
+    assert e._breakers["utf-8"].state == "closed"
+
+
+def test_breaker_open_covers_replace_sanitize_path(lm):
+    """With the utf-8 breaker open, a dirty replace-mode prompt must not
+    pay its own per-request retry storm: zero device launches, served
+    via the host sanitize."""
+    e = _mk_engine(lm, max_retries=2, breaker_threshold=1,
+                   breaker_cooldown_s=1e9)
+    with faults.harness(faults.Fault(faults.KERNEL_RAGGED_SCAN,
+                                     times=None)) as h:
+        assert e.serve([Request(b"trip")])[0].ok
+        assert e._breakers["utf-8"].state == "open"
+        retries0 = e.counters["retries"]
+        r = e.serve([Request(b"bad \xff byte", errors="replace")])[0]
+        assert r.ok
+        assert r.sanitized_prompt == \
+            b"bad \xff byte".decode("utf-8", "replace").encode("utf-8")
+        assert e.counters["retries"] == retries0
+        assert h.calls.get(faults.KERNEL_ONEPASS, 0) == 0

@@ -273,6 +273,47 @@ def test_continuous_refill_mid_wave():
     assert admit_c[0] == finish_a[0]
 
 
+def test_deadline_expiry_during_refill_ingress_frees_slot():
+    """A queued request whose deadline expires BETWEEN its queue pop and
+    its ingress completing (ingress is the slow path: retries, host
+    fallback) must settle ``rejected_deadline`` from the post-ingress
+    re-check WITHOUT consuming the freed slot — the slot goes to the
+    next queued request, mid-wave, while the batch-mate still decodes."""
+    now = [0.0]
+    e = _fresh_engine(scheduler="continuous", clock=lambda: now[0],
+                      sleep=lambda s: None)
+    calls = [0]
+    orig = e._ingress_chunk
+
+    def slow_after_first(group, bound, take):
+        calls[0] += 1
+        if calls[0] > 1:
+            now[0] += 5.0              # refill ingress "takes" 5s
+        return orig(group, bound, take)
+
+    e._ingress_chunk = slow_after_first
+    ta = e.submit(Request(b"aaaa", max_new=2))    # frees its slot early
+    tb = e.submit(Request(b"bbbb", max_new=8))    # still decoding then
+    tc_ = e.submit(Request(b"cccc", max_new=2, deadline_s=2.0))
+    td = e.submit(Request(b"dddd", max_new=2))    # should get a's slot
+    e.drain()
+    assert e.poll(ta).ok and e.poll(tb).ok and e.poll(td).ok
+    rc = e.poll(tc_)
+    assert not rc.ok and rc.code is ResultCode.REJECTED_DEADLINE
+    assert e.counters["deadline"] == 1
+    ev = {(kind, t): (slot, step)
+          for kind, t, slot, step, _wall in e.events}
+    assert ("admit", tc_) not in ev               # never took a slot
+    reject_c = ev[("reject", tc_)]
+    assert reject_c[0] == -1                      # slotless rejection
+    finish_a, finish_b = ev[("finish", ta)], ev[("finish", tb)]
+    admit_d = ev[("admit", td)]
+    # Ordering pin: a frees its slot, c's pop+ingress expires it, then d
+    # is admitted into THAT slot — all while b is still mid-decode.
+    assert finish_a[1] <= reject_c[1] <= admit_d[1] < finish_b[1]
+    assert admit_d[0] == finish_a[0]
+
+
 def test_wave_scheduler_defers_refill():
     """The wave reference: the queued request is only admitted once the
     WHOLE wave drained — pinning that the schedulers actually differ."""
